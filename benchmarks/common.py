@@ -1,0 +1,34 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def save_result(name: str, payload: dict) -> str:
+    out = os.path.join(RESULTS_DIR, "benchmarks")
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def prediction_mse(data, w, on: str = "test") -> float:
+    """Label-prediction MSE of node-wise weights w (Table 1 metric)."""
+    x = np.asarray(data.x)
+    y = np.asarray(data.y)
+    sm = np.asarray(data.sample_mask) > 0
+    lm = np.asarray(data.labeled_mask) > 0
+    if on == "train":
+        keep = lm[:, None] & sm
+    elif on == "test":
+        keep = (~lm)[:, None] & sm
+    else:
+        keep = sm
+    pred = np.einsum("vmn,vn->vm", x, np.asarray(w))
+    return float(np.mean((pred[keep] - y[keep]) ** 2))

@@ -1,0 +1,72 @@
+"""Roofline report: aggregate results/dryrun/*.json into the §Roofline
+table (one row per arch × shape × mesh) and flag the dominant term.
+
+Run after ``python -m repro.launch.dryrun --all --mesh both``.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch import roofline as rl
+
+from benchmarks.common import save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(path))
+        if r.get("ok") and r.get("mesh") == mesh and "hlo_analysis" in r:
+            recs.append(r)
+    return recs
+
+
+def to_rows(recs: list[dict]) -> list[dict]:
+    rows = []
+    for r in recs:
+        ha = r["hlo_analysis"]
+        terms = rl.roofline_terms(ha["flops"], ha["hbm_bytes"],
+                                  ha["collective_bytes"])
+        useful = (r["model_flops"] / r["num_chips"]) / max(ha["flops"], 1.0)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "useful_flops_ratio": useful,
+            "temp_gb": r["memory_analysis"].get("temp_size_in_bytes", 0)
+            / 1e9,
+        })
+    return rows
+
+
+def run(verbose: bool = True, mesh: str = "single") -> dict:
+    recs = load_records(mesh)
+    rows = to_rows(recs)
+    payload = {"rows": rows, "count": len(rows), "mesh": mesh}
+    save_result(f"roofline_{mesh}", payload)
+    if verbose:
+        print(f"== Roofline ({mesh}-pod, {len(rows)} combos) ==")
+        print(f"{'arch':24s} {'shape':12s} {'comp ms':>8s} {'mem ms':>9s} "
+              f"{'coll ms':>9s} {'dominant':>10s} {'useful':>7s} "
+              f"{'temp GB':>8s}")
+        for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"{r['compute_s']*1e3:8.1f} {r['memory_s']*1e3:9.1f} "
+                  f"{r['collective_s']*1e3:9.1f} {r['dominant']:>10s} "
+                  f"{r['useful_flops_ratio']*100:6.1f}% "
+                  f"{r['temp_gb']:8.1f}")
+        if len(rows) < 40:
+            print(f"NOTE: only {len(rows)}/40 combos present — run "
+                  "`python -m repro.launch.dryrun --all --mesh both` first")
+    payload["ok"] = len(rows) >= 40
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Scalability benchmark: Algorithm 1 cost vs graph size.
+
+The paper's computational claim (§4): applying D / D^T touches only
+neighbouring nodes and edges, so the per-iteration cost is O(|V| + |E|)
+— "scalable to massive collections of local datasets".  This benchmark
+measures iterations/second of the jitted solver while growing the SBM
+graph by ~2 orders of magnitude and checks the near-linear cost growth.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import losses as L
+from repro.core.graph import sbm_graph
+from repro.core.nlasso import solve_nlasso
+
+from benchmarks.common import save_result
+
+SIZES = (250, 1000, 4000, 16000)
+ITERS = 200
+
+
+def _make(v: int, seed: int):
+    rng = np.random.default_rng(seed)
+    # keep expected degree ~20 so |E| grows linearly with |V|
+    p_in = min(20.0 / (v / 2), 1.0)
+    g, assign = sbm_graph(rng, (v // 2, v // 2), p_in=p_in, p_out=1e-4)
+    import jax.numpy as jnp
+    w_true = np.where(assign[:, None] == 0, [2.0, 2.0],
+                      [-2.0, 2.0]).astype(np.float32)
+    x = rng.standard_normal((v, 5, 2)).astype(np.float32)
+    y = np.einsum("vmn,vn->vm", x, w_true)
+    labeled = np.zeros(v, np.float32)
+    labeled[rng.choice(v, size=max(v // 10, 10), replace=False)] = 1.0
+    data = L.NodeData(x=jnp.asarray(x), y=jnp.asarray(y),
+                      sample_mask=jnp.ones((v, 5), jnp.float32),
+                      labeled_mask=jnp.asarray(labeled))
+    return g, data
+
+
+def run(seed: int = 0, verbose: bool = True) -> dict:
+    rows = {}
+    for v in SIZES:
+        g, data = _make(v, seed)
+        tau = g.primal_stepsizes()
+        prox = L.make_prox("squared", data, tau)
+        # warmup / compile
+        w, u, _, _ = solve_nlasso(g, data, prox, 1e-3, 2)
+        w.block_until_ready()
+        t0 = time.time()
+        w, u, _, _ = solve_nlasso(g, data, prox, 1e-3, ITERS)
+        w.block_until_ready()
+        dt = time.time() - t0
+        rows[str(v)] = {
+            "edges": int(g.num_edges),
+            "iters_per_s": ITERS / dt,
+            "edge_iters_per_s": g.num_edges * ITERS / dt,
+        }
+
+    payload = {"rows": rows, "iters": ITERS}
+    save_result("scaling", payload)
+    if verbose:
+        print("== Scaling: Algorithm 1 cost vs graph size ==")
+        print(f"{'|V|':>8s} {'|E|':>9s} {'it/s':>9s} {'edge-it/s':>12s}")
+        for v, r in rows.items():
+            print(f"{v:>8s} {r['edges']:9d} {r['iters_per_s']:9.1f} "
+                  f"{r['edge_iters_per_s']:12.3g}")
+
+    # near-linear: edge-throughput at the largest size within 10x of peak
+    tps = [r["edge_iters_per_s"] for r in rows.values()]
+    ok = tps[-1] > max(tps) / 10
+    payload["ok"] = bool(ok)
+    if verbose:
+        print(f"near-linear gate: {'PASS' if ok else 'FAIL'}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

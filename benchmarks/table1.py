@@ -1,0 +1,109 @@
+"""Paper Table 1: MSE of Algorithm 1 vs pooled linear regression vs CART.
+
+Exact §5 setup: SBM with |C1| = |C2| = 150, p_in = 1/2, p_out = 1e-3,
+m_i = 5 points/node, x ~ N(0, I_2), noiseless labels, true weights
+(2,2) / (-2,2), M = 30 random labeled nodes, lambda = 1e-3.
+
+Paper numbers:   our method 1.7e-6 / 1.8e-6 (train/test MSE),
+                 linear regression 4.04 / 4.51, decision tree 4.21 / 4.87.
+
+Reported here: the PAPER-FAITHFUL runs (plain Algorithm 1, rho = 1, at the
+paper's 500 iterations and at 20k iterations) and the beyond-paper solver
+(lambda-continuation + rho = 1.9 over-relaxation) — all against the same
+baselines.
+
+Reproduction note (recorded in EXPERIMENTS.md): with the stated
+lambda = 1e-3 the dual-clip bound lambda*A_e caps the per-iteration motion
+of unlabeled weights at ~lambda, so 500 iterations cannot move w from 0 to
+the true magnitude 2 — plain Algorithm 1 needs ~20k iterations to hit the
+paper's 1.7e-6; the continuation solver gets there in ~4k.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import baselines
+from repro.core.nlasso import nlasso, nlasso_continuation
+from repro.data.synthetic import make_sbm_regression
+
+from benchmarks.common import prediction_mse, save_result
+
+
+def run(seed: int = 0, verbose: bool = True) -> dict:
+    ds = make_sbm_regression(seed=seed)   # defaults == paper §5
+
+    t0 = time.time()
+    faithful = nlasso(ds.graph, ds.data, lam=1e-3, num_iters=500,
+                      w_true=ds.w_true)
+    t_faithful = time.time() - t0
+
+    t0 = time.time()
+    faithful_20k = nlasso(ds.graph, ds.data, lam=1e-3, num_iters=20_000,
+                          w_true=ds.w_true)
+    t_faithful_20k = time.time() - t0
+
+    t0 = time.time()
+    ours = nlasso_continuation(ds.graph, ds.data, lam=1e-3,
+                               warm_iters=3000, final_iters=1000,
+                               w_true=ds.w_true)
+    t_ours = time.time() - t0
+
+    w_pool = baselines.pooled_linear_regression(ds.data)
+
+    rows = {
+        "our method (paper-faithful, 500 it)": {
+            "train": prediction_mse(ds.data, faithful.w, "train"),
+            "test": prediction_mse(ds.data, faithful.w, "test"),
+            "weights_mse_eq24": float(faithful.mse[-1]),
+            "seconds": t_faithful,
+        },
+        "our method (paper-faithful, 20k it)": {
+            "train": prediction_mse(ds.data, faithful_20k.w, "train"),
+            "test": prediction_mse(ds.data, faithful_20k.w, "test"),
+            "weights_mse_eq24": float(faithful_20k.mse[-1]),
+            "seconds": t_faithful_20k,
+        },
+        "our method (continuation + rho=1.9)": {
+            "train": prediction_mse(ds.data, ours.w, "train"),
+            "test": prediction_mse(ds.data, ours.w, "test"),
+            "weights_mse_eq24": float(ours.mse[-1]),
+            "seconds": t_ours,
+        },
+        "simple linear regression": {
+            "train": baselines.linreg_mse(ds.data, w_pool, "train"),
+            "test": baselines.linreg_mse(ds.data, w_pool, "test"),
+        },
+        "decision tree regression": {
+            "train": baselines.decision_tree_mse(ds.data, "train"),
+            "test": baselines.decision_tree_mse(ds.data, "test"),
+        },
+    }
+    paper = {
+        "our method": {"train": 1.7e-6, "test": 1.8e-6},
+        "simple linear regression": {"train": 4.04, "test": 4.51},
+        "decision tree regression": {"train": 4.21, "test": 4.87},
+    }
+    payload = {"rows": rows, "paper": paper, "seed": seed}
+    save_result("table1", payload)
+
+    if verbose:
+        print("== Table 1: MSE (train / test) ==")
+        print(f"{'method':42s} {'train':>12s} {'test':>12s}")
+        for name, r in rows.items():
+            print(f"{name:42s} {r['train']:12.3e} {r['test']:12.3e}")
+        print("-- paper reported --")
+        for name, r in paper.items():
+            print(f"{name:42s} {r['train']:12.3e} {r['test']:12.3e}")
+
+    # reproduction gates (order + magnitude):
+    ok = (rows["our method (continuation + rho=1.9)"]["test"] < 1e-3
+          and rows["simple linear regression"]["test"] > 1.0
+          and rows["decision tree regression"]["test"] > 1.0)
+    payload["ok"] = bool(ok)
+    if verbose:
+        print(f"reproduction gate: {'PASS' if ok else 'FAIL'}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""FedTV personalization: the paper's technique applied to deep-model
+training — per-client gains coupled by the nLasso TV penalty over a
+client empirical graph.
+
+Two client clusters receive DIFFERENT tasks (predict the next token vs
+predict 3 tokens ahead).  With TV coupling the personalization gains
+converge within clusters and diverge across them — the deep-model analogue
+of the paper's clustered weight recovery.
+
+    PYTHONPATH=src python examples/fedtv_personalization.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+import numpy as np                                             # noqa: E402
+
+from repro.configs.base import get_config                      # noqa: E402
+from repro.core import fedtv                                   # noqa: E402
+from repro.launch.train import make_fedtv_train_step           # noqa: E402
+from repro.models import transformer as model                  # noqa: E402
+
+cfg = get_config("qwen3-0.6b").smoke().with_(num_layers=2)
+fcfg = fedtv.FedTVConfig(num_clients=8, num_clusters=2, p_in=1.0,
+                         p_out=0.02, lam=1e-3, prox_lr=1.0, seed=0)
+
+params = model.init_params(jax.random.PRNGKey(0), cfg)
+init_opt, step = make_fedtv_train_step(cfg, fcfg, learning_rate=3e-3,
+                                       remat=False)
+opt = init_opt(params)
+fed = fedtv.init_state(fcfg, cfg.d_model)
+print(f"client graph: {fed['graph'].num_nodes} clients, "
+      f"{fed['graph'].num_edges} edges "
+      f"(2 clusters, p_in=1.0, p_out={fcfg.p_out})")
+
+key = jax.random.PRNGKey(1)
+toks = jax.random.randint(key, (16, 32), 0, cfg.vocab_size, dtype=jnp.int32)
+# clients 0-3 (cluster A): next-token task; clients 4-7 (B): skip-3 task
+targets = jnp.concatenate([jnp.roll(toks, -1, axis=1)[:8],
+                           jnp.roll(toks, -3, axis=1)[8:]], axis=0)
+batch = {"tokens": toks, "targets": targets}
+
+step = jax.jit(step)
+for i in range(60):
+    params, opt, fed, metrics = step(params, opt, fed, batch)
+    if i % 15 == 0 or i == 59:
+        d = np.asarray(fed["delta"])
+        within = (np.linalg.norm(d[0] - d[3]) + np.linalg.norm(d[4] - d[7]))
+        across = (np.linalg.norm(d[0] - d[4]) + np.linalg.norm(d[3] - d[7]))
+        print(f"step {i:3d}  loss {float(metrics['loss']):.4f}  "
+              f"tv {float(metrics['tv']):.4f}  "
+              f"|delta| within-cluster {within:.3f}  across {across:.3f}")
+
+d = np.asarray(fed["delta"])
+within = np.linalg.norm(d[0] - d[3]) + np.linalg.norm(d[4] - d[7])
+across = np.linalg.norm(d[0] - d[4]) + np.linalg.norm(d[3] - d[7])
+print(f"\nclustered personalization: across/within ratio = "
+      f"{across / max(within, 1e-9):.2f} (> 1 means clients personalized "
+      "per cluster, as the paper's clustering assumption predicts)")

@@ -1,0 +1,59 @@
+"""Batched serving: prefill a batch of prompts, then decode new tokens —
+the serve_step the decode_32k / long_500k dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch qwen3-0.6b
+    PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-3b
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse                                                # noqa: E402
+import time                                                    # noqa: E402
+
+import jax                                                     # noqa: E402
+import jax.numpy as jnp                                        # noqa: E402
+
+from repro.configs.base import get_config, list_archs          # noqa: E402
+from repro.launch.serve import generate                        # noqa: E402
+from repro.models import transformer as model                  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key, cfg)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    img = None
+    if cfg.family == "vlm":
+        img = jax.random.normal(
+            key, (args.batch, cfg.num_image_tokens, cfg.vision_dim)) * 0.02
+    if cfg.input_mode != "tokens":
+        print(f"{args.arch} consumes frontend embeddings; serving the "
+              "token-free backbone is exercised by the decode dry-runs — "
+              "switching to its token head for this demo.")
+
+    t0 = time.time()
+    toks = generate(params, cfg, prompts, max_new_tokens=args.max_new,
+                    temperature=args.temperature, image_embeds=img)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} family={cfg.family}: prefilled "
+          f"{args.batch}x{args.prompt_len}, decoded {toks.shape[1]} "
+          f"tokens/seq in {dt:.1f}s "
+          f"({args.batch * toks.shape[1] / dt:.1f} tok/s)")
+    for r in range(min(2, args.batch)):
+        print(f"  seq {r}: {toks[r][:12].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

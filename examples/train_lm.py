@@ -1,0 +1,72 @@
+"""End-to-end training driver: train a language model for a few hundred
+steps on the synthetic token stream.
+
+    PYTHONPATH=src python examples/train_lm.py --preset 20m --steps 100
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+    PYTHONPATH=src python examples/train_lm.py --arch rwkv6-3b --smoke
+
+``--preset 100m`` builds a ~110M-parameter qwen3-family model (the brief's
+end-to-end target; ~hours on this 1-core CPU container, minutes on real
+hardware).  ``--preset 20m`` is the CPU-friendly default.  Any assigned
+architecture is selectable with --arch (+ --smoke for the reduced config).
+Also demonstrates checkpoint save/restore at the end of the run.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.checkpoint.checkpoint import restore, save          # noqa: E402
+from repro.configs.base import get_config, list_archs          # noqa: E402
+from repro.core import fedtv                                   # noqa: E402
+from repro.launch.train import train_loop                      # noqa: E402
+
+PRESETS = {
+    # ~110M params: d=768, 12L, ff 3072, vocab 32768 (qwen3 family)
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=3072, vocab_size=32768, dtype="float32"),
+    # ~21M params: CPU-friendly default
+    "20m": dict(num_layers=6, d_model=384, num_heads=6, num_kv_heads=2,
+                head_dim=64, d_ff=1536, vocab_size=8192, dtype="float32"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
+    ap.add_argument("--preset", default=None, choices=list(PRESETS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--fedtv", action="store_true",
+                    help="couple per-client gains with the nLasso TV "
+                         "penalty (the paper's technique)")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.preset:
+        cfg = cfg.with_(name=f"{args.arch}-{args.preset}",
+                        **PRESETS[args.preset])
+    elif args.smoke:
+        cfg = cfg.smoke()
+
+    fcfg = fedtv.FedTVConfig(num_clients=8) if args.fedtv else None
+    params, history = train_loop(cfg, steps=args.steps, batch=args.batch,
+                                 seq=args.seq, learning_rate=args.lr,
+                                 fedtv_cfg=fcfg)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss: {first:.3f} -> {last:.3f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+    save(args.ckpt, params)
+    restored = restore(args.ckpt, params)
+    n = len([1 for _ in __import__('jax').tree.leaves(restored)])
+    print(f"checkpoint round-trip OK ({n} arrays) at {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

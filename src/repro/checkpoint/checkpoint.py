@@ -1,0 +1,59 @@
+"""Pytree checkpointing: npz payload + json tree structure.
+
+No orbax in this environment.  Arrays are flattened with stable path-keys;
+restore validates shapes/dtypes and re-builds the original nest.  Works for
+params, optimizer state and decode caches alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{k: np.asarray(v) for k, v in leaves.items()})
+    spec = {k: {"shape": list(np.shape(v)),
+                "dtype": str(np.asarray(v).dtype)}
+            for k, v in leaves.items()}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(spec, f, indent=1, sort_keys=True)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten_with_paths(like)
+    restored = {}
+    for key, ref in leaves.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"model {np.shape(ref)}")
+        restored[key] = jnp.asarray(arr, dtype=jnp.asarray(ref).dtype)
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for pathk, _leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pathk)
+        ordered.append(restored[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered)

@@ -1,0 +1,132 @@
+"""Architecture configuration + registry.
+
+One ``ArchConfig`` per assigned architecture lives in
+``src/repro/configs/<id>.py`` (exact published hyper-parameters, source
+cited).  ``smoke()`` derives the reduced CPU-testable variant required by
+the brief (<= 2 layers, d_model <= 512, <= 4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+# Input shapes assigned to this paper (system brief).
+INPUT_SHAPES = {
+    "train_4k": {"seq_len": 4096, "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768, "global_batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq_len": 32768, "global_batch": 128, "kind": "decode"},
+    "long_500k": {"seq_len": 524288, "global_batch": 1, "kind": "decode"},
+}
+
+# sliding window used when a full-attention arch runs long_500k
+LONG_CONTEXT_WINDOW = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    source: str                       # citation from the assignment table
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // num_heads
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    pos_embed: str = "rope"           # rope | sinusoidal
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_every: int = 1                # MoE FFN on layers where idx % moe_every == moe_every-1
+    capacity_factor: float = 1.25
+    # hybrid (jamba): one attention layer per `attn_every` layers, rest mamba
+    attn_every: int = 0
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0            # 0 -> ceil(d_model / 16)
+    # vlm: one cross-attention layer per `cross_attn_every` layers
+    cross_attn_every: int = 0
+    vision_dim: int = 0
+    num_image_tokens: int = 0
+    # audio / embeddings-input backbones
+    input_mode: str = "tokens"        # tokens | embeddings
+    # attention variant
+    sliding_window: int = 0           # 0 = full attention
+    dtype: str = "bfloat16"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def mamba_dt_rank_resolved(self) -> int:
+        return self.mamba_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode memory is O(1)/O(window) in context length."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family variant for CPU smoke tests."""
+        heads = min(self.num_heads, 4)
+        kv = max(1, min(self.num_kv_heads,
+                        heads if self.num_kv_heads >= self.num_heads
+                        else max(1, heads // 2)))
+        d_model = min(self.d_model, 256)
+        hd = max(16, d_model // heads)
+        layers = min(self.num_layers,
+                     max(2, self.attn_every, self.cross_attn_every))
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=layers,
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            dtype="float32",
+        )
+        if self.num_experts:
+            kw["num_experts"] = min(self.num_experts, 4)
+            kw["experts_per_token"] = min(self.experts_per_token, 2)
+            # generous capacity so smoke consistency tests are drop-free
+            # (capacity-based token dropping is exercised in test_moe_*)
+            kw["capacity_factor"] = 4.0
+        if self.vision_dim:
+            kw["vision_dim"] = min(self.vision_dim, 128)
+            kw["num_image_tokens"] = min(self.num_image_tokens, 16)
+        return self.with_(**kw)
+
+
+_REGISTRY: dict[str, str] = {
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+}
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {list_archs()}")
+    mod = importlib.import_module(_REGISTRY[name])
+    return mod.CONFIG

@@ -1,0 +1,20 @@
+"""IBM Granite 3.0 2B base — dense GQA decoder.
+
+[hf:ibm-granite/granite-3.0-2b-base] 40 layers, d_model 2048, 32 heads
+(GQA kv=8), head_dim 64, d_ff 8192, vocab 49155.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-2b",
+    family="dense",
+    source="GQA [hf:ibm-granite/granite-3.0-2b-base]",
+    num_layers=40,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=49155,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,27 @@
+"""Jamba v0.1 (52B total) — Mamba + attention 1:7 hybrid with MoE.
+
+[arXiv:2403.19887] 32 layers, d_model 4096; one attention layer (32 heads,
+GQA kv=8) per 8-layer block, the other 7 are Mamba (d_state 16, expand 2);
+MoE (16 experts, top-2, per-expert d_ff 14336) on every other layer,
+vocab 65536.  Mamba/sliding state makes long_500k native.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    source="Mamba+attn 1:7 interleave, MoE [arXiv:2403.19887]",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    attn_every=8,
+    mamba_d_state=16,
+    mamba_expand=2,
+)

@@ -1,0 +1,25 @@
+"""Llama 3.2 Vision 11B — dense decoder with cross-attention image layers.
+
+[hf:meta-llama/Llama-3.2-11B-Vision] 40 layers, d_model 4096, 32 heads
+(GQA kv=8), d_ff 14336, vocab 128256; a gated cross-attention layer every
+5th layer consumes vision-encoder patch embeddings (vision_dim 7680).
+The ViT frontend is a stub: input_specs() supplies patch embeddings.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    source="cross-attn image layers [hf:meta-llama/Llama-3.2-11B-Vision]",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    cross_attn_every=5,
+    vision_dim=7680,
+    num_image_tokens=1600,
+    rope_theta=500000.0,
+)

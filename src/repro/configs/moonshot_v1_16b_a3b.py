@@ -1,0 +1,21 @@
+"""Moonshot Moonlight-16B-A3B — MoE decoder (64 experts, top-6).
+
+[hf:moonshotai/Moonlight-16B-A3B] 48 layers, d_model 2048, 16 heads
+(kv=16, i.e. MHA), per-expert d_ff 1408, vocab 163840, 64 experts top-6.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    source="kimi/moonlight MoE [hf:moonshotai/Moonlight-16B-A3B]",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=163840,
+    num_experts=64,
+    experts_per_token=6,
+)

@@ -1,0 +1,23 @@
+"""MusicGen-medium — decoder-only transformer over EnCodec tokens.
+
+[arXiv:2306.05284] 48 layers, d_model 1536, 24 heads (MHA), d_ff 6144,
+codebook vocab 2048, sinusoidal positions.  The EnCodec frontend is a stub:
+input_specs() supplies precomputed frame embeddings (brief's carve-out);
+this config implements the transformer backbone.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    source="decoder-only over EnCodec tokens [arXiv:2306.05284]",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    pos_embed="sinusoidal",
+    input_mode="embeddings",
+)

@@ -1,0 +1,25 @@
+"""The paper's own experimental configuration (§5) as a config object.
+
+Not a transformer architecture — this is the nLasso problem instance the
+paper evaluates (SBM empirical graph + networked linear regression), used
+by benchmarks/table1.py, fig2, fig3 and examples/quickstart.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperSBMConfig:
+    cluster_sizes: tuple = (150, 150)   # |C1| = |C2| = 150
+    p_in: float = 0.5                   # within-cluster edge prob
+    p_out: float = 1e-3                 # cross-cluster edge prob
+    samples_per_node: int = 5           # m_i
+    num_features: int = 2               # n
+    num_labeled: int = 30               # |M|
+    lam: float = 1e-3                   # TV strength (paper's lambda)
+    num_iters: int = 500                # paper's stated iteration count
+    cluster_weights: tuple = ((2.0, 2.0), (-2.0, 2.0))
+
+
+CONFIG = PaperSBMConfig()

@@ -1,0 +1,21 @@
+"""Qwen3 0.6B — dense GQA decoder with qk-norm.
+
+[hf:Qwen/Qwen3-8B family card] 28 layers, d_model 1024, 16 heads
+(GQA kv=8), head_dim 128, d_ff 3072, vocab 151936.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    source="qk_norm, GQA [hf:Qwen/Qwen3-8B]",
+    num_layers=28,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+)

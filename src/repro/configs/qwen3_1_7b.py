@@ -1,0 +1,21 @@
+"""Qwen3 1.7B — dense GQA decoder with per-head qk RMS-norm.
+
+[hf:Qwen/Qwen3-8B family card] 28 layers, d_model 2048, 16 heads
+(GQA kv=8), head_dim 128, d_ff 6144, vocab 151936, rope theta 1e6.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-1.7b",
+    family="dense",
+    source="qk_norm, GQA [hf:Qwen/Qwen3-8B]",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=6144,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+)

@@ -1,0 +1,23 @@
+"""Qwen3-MoE 235B-A22B — 128 experts, top-8, deep (94L) decoder.
+
+[hf:Qwen/Qwen3-30B-A3B family card] 94 layers, d_model 4096, 64 heads
+(GQA kv=4), head_dim 128, per-expert d_ff 1536, vocab 151936, qk-norm.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    source="128 experts top-8 [hf:Qwen/Qwen3-30B-A3B]",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    qk_norm=True,
+    num_experts=128,
+    experts_per_token=8,
+    rope_theta=1e6,
+)

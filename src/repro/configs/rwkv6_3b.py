@@ -1,0 +1,20 @@
+"""RWKV6 "Finch" 3B — attention-free SSM with data-dependent decay.
+
+[arXiv:2404.05892] 32 layers, d_model 2560, d_ff 8960, vocab 65536,
+head_dim 64 (40 WKV heads).  Decode state is O(1) in context length, so
+this arch runs long_500k natively.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    source="Finch — data-dependent decay [arXiv:2404.05892]",
+    num_layers=32,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=64,
+    d_ff=8960,
+    vocab_size=65536,
+)

@@ -1,0 +1,104 @@
+"""FedTV: networked-federated personalization of big-model training.
+
+This is the integration of the paper's technique (nLasso TV-coupling,
+Algorithm 1) with the assigned model zoo (DESIGN.md §4).  Semantics:
+
+  * the global batch is partitioned into C *clients* (mapped onto the
+    "data" mesh axis at runtime — each client's examples live on one
+    data shard group, so the personalization state is data-local);
+  * each client owns a personalized parameter block: a multiplicative
+    gain delta_c in R^{d_model} applied to the final hidden states —
+    the deep-net analogue of the paper's per-node linear weights w^(i);
+  * clients are related by an empirical graph (physical topology,
+    cohort similarity, ...); the TV penalty lambda * sum_e A_e
+    ||delta_i - delta_j||_1 couples neighbouring clients exactly as
+    eq. (3) couples local models;
+  * the update interleaves one SGD step on the backbone with one
+    primal-dual step (eqs. 14-15) on (delta, u).  The primal prox is
+    approximated by a single gradient step — the paper explicitly notes
+    (§4) the iterations are robust to inexact resolvent evaluation.
+
+The client graph is tiny (C ~ 16-32 nodes), so the nLasso state adds only
+(C + E) * d_model floats; the TV update is O(E d) — negligible next to the
+backbone step, but it changes *what* is learned: clients in the same
+cluster share statistical strength, heterogeneous clients keep their own
+gains.  examples/fedtv_personalization.py demonstrates the effect.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import EmpiricalGraph, build_graph, chain_graph, sbm_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class FedTVConfig:
+    num_clients: int = 16
+    lam: float = 1e-3            # TV strength (paper's lambda)
+    prox_lr: float = 0.1         # inner gradient step approximating PU_i
+    graph_kind: str = "clusters"  # clusters | chain
+    num_clusters: int = 2
+    p_in: float = 0.8
+    p_out: float = 0.05
+    seed: int = 0
+
+
+def make_client_graph(cfg: FedTVConfig) -> EmpiricalGraph:
+    if cfg.graph_kind == "chain":
+        return chain_graph(cfg.num_clients)
+    rng = np.random.default_rng(cfg.seed)
+    sizes = [cfg.num_clients // cfg.num_clusters] * cfg.num_clusters
+    sizes[-1] += cfg.num_clients - sum(sizes)
+    g, _ = sbm_graph(rng, sizes, cfg.p_in, cfg.p_out)
+    return g
+
+
+def init_state(cfg: FedTVConfig, d_model: int):
+    """Returns the FedTV pytree state carried by the train step."""
+    g = make_client_graph(cfg)
+    return {
+        "delta": jnp.zeros((cfg.num_clients, d_model), jnp.float32),
+        "dual": jnp.zeros((g.num_edges, d_model), jnp.float32),
+        "graph": g,
+    }
+
+
+def client_ids(global_batch: int, num_clients: int) -> jnp.ndarray:
+    """Deterministic example->client map: contiguous groups (data-local)."""
+    return (jnp.arange(global_batch) * num_clients) // global_batch
+
+
+def apply_gain(hidden: jnp.ndarray, delta: jnp.ndarray,
+               ids: jnp.ndarray) -> jnp.ndarray:
+    """hidden (B, T, d) -> personalized hidden via h * (1 + delta_c)."""
+    gain = 1.0 + delta[ids]                      # (B, d)
+    return hidden * gain[:, None, :].astype(hidden.dtype)
+
+
+def pd_update(state: dict, grad_delta: jnp.ndarray, cfg: FedTVConfig):
+    """One primal-dual step of Algorithm 1 on the personalization block.
+
+    primal (eq. 17, inexact prox):
+        delta <- delta - tau_c (prox_lr * grad_delta + (D^T u)_c)
+    dual (step 10):
+        u <- clip_{lam A_e}(u + sigma D (2 delta+ - delta))
+    """
+    g: EmpiricalGraph = state["graph"]
+    delta, u = state["delta"], state["dual"]
+    tau = g.primal_stepsizes()[:, None]
+    sigma = 0.5
+    dtu = g.incidence_transpose_apply(u)
+    delta_new = delta - tau * (cfg.prox_lr * grad_delta + dtu)
+    bound = cfg.lam * g.weights[:, None]
+    u_new = jnp.clip(u + sigma * g.incidence_apply(2.0 * delta_new - delta),
+                     -bound, bound)
+    return {"delta": delta_new, "dual": u_new, "graph": g}
+
+
+def tv_value(state: dict) -> jnp.ndarray:
+    """Current TV of the personalization block (monitoring metric)."""
+    return state["graph"].total_variation(state["delta"])

@@ -1,0 +1,164 @@
+"""Graph partitioning for sharding the nLasso solver over a device mesh.
+
+The empirical graph's nodes are assigned to P shards; the solver state
+(W, U) and node-local data are sharded accordingly.  Two partitioners:
+
+  * ``block_partition``  — round-robin-free contiguous blocks (fast, used
+    when the node ordering already has locality).
+  * ``cluster_partition`` — greedy BFS region growing so that most edges are
+    shard-internal; this is what makes the boundary-exchange variant of the
+    distributed solver cheap (DESIGN.md §3.3).
+
+``plan_partition`` emits a :class:`PartitionPlan`: a node permutation that
+makes every shard a contiguous slice (padded to equal size), the edge
+permutation/padding assigning each edge to the shard owning its ``src``
+endpoint, and boundary statistics for the roofline model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import EmpiricalGraph, build_graph
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    num_shards: int
+    nodes_per_shard: int          # padded
+    edges_per_shard: int          # padded
+    node_perm: np.ndarray         # (V_pad,) new position -> old node id (-1 pad)
+    node_inv: np.ndarray          # (V,) old node id -> new position
+    edge_perm: np.ndarray         # (E_pad,) new position -> old edge id (-1 pad)
+    src_new: np.ndarray           # (E_pad,) src in new node numbering
+    dst_new: np.ndarray           # (E_pad,) dst in new node numbering
+    weights: np.ndarray           # (E_pad,) 0.0 for padding
+    cut_edges: int                # edges crossing shards
+    boundary_nodes: int           # nodes incident to a cut edge
+
+
+def block_partition(num_nodes: int, num_shards: int) -> np.ndarray:
+    """(V,) shard assignment by contiguous blocks."""
+    per = -(-num_nodes // num_shards)
+    return np.minimum(np.arange(num_nodes) // per, num_shards - 1)
+
+
+def cluster_partition(graph: EmpiricalGraph, num_shards: int,
+                      seed: int = 0) -> np.ndarray:
+    """Greedy BFS region growing: grow P regions of ~equal size.
+
+    Not METIS-quality, but on clustered graphs (SBM) it keeps most edges
+    internal, which is what the boundary-exchange solver exploits.
+    """
+    V = graph.num_nodes
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    # adjacency lists
+    adj: list[list[int]] = [[] for _ in range(V)]
+    for s, d in zip(src, dst):
+        adj[int(s)].append(int(d))
+        adj[int(d)].append(int(s))
+    target = -(-V // num_shards)
+    assign = np.full(V, -1, dtype=np.int64)
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(V)
+    shard = 0
+    count = 0
+    from collections import deque
+    queue: deque[int] = deque()
+    ptr = 0
+    while shard < num_shards and (assign < 0).any():
+        if not queue:
+            while ptr < V and assign[order[ptr]] >= 0:
+                ptr += 1
+            if ptr >= V:
+                break
+            queue.append(int(order[ptr]))
+        node = queue.popleft()
+        if assign[node] >= 0:
+            continue
+        assign[node] = shard
+        count += 1
+        if count >= target:
+            shard = min(shard + 1, num_shards - 1)
+            count = 0
+            queue.clear()
+        else:
+            for nb in adj[node]:
+                if assign[nb] < 0:
+                    queue.append(nb)
+    assign[assign < 0] = num_shards - 1
+    return assign
+
+
+def plan_partition(graph: EmpiricalGraph, assign: np.ndarray,
+                   num_shards: int) -> PartitionPlan:
+    """Build permutation + padding so each shard is a contiguous slice."""
+    V = graph.num_nodes
+    E = graph.num_edges
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    weights = np.asarray(graph.weights)
+
+    order = np.argsort(assign, kind="stable")              # nodes by shard
+    counts = np.bincount(assign, minlength=num_shards)
+    vp = int(counts.max()) if V else 1
+    node_perm = np.full(num_shards * vp, -1, dtype=np.int64)
+    node_inv = np.empty(V, dtype=np.int64)
+    pos = 0
+    for s in range(num_shards):
+        ids = order[pos:pos + counts[s]]
+        node_perm[s * vp:s * vp + len(ids)] = ids
+        node_inv[ids] = s * vp + np.arange(len(ids))
+        pos += counts[s]
+
+    # edges owned by shard of src (in new numbering use min endpoint's shard)
+    e_shard = assign[src]
+    e_order = np.argsort(e_shard, kind="stable")
+    e_counts = np.bincount(e_shard, minlength=num_shards)
+    ep = max(int(e_counts.max()) if E else 1, 1)
+    edge_perm = np.full(num_shards * ep, -1, dtype=np.int64)
+    pos = 0
+    for s in range(num_shards):
+        ids = e_order[pos:pos + e_counts[s]]
+        edge_perm[s * ep:s * ep + len(ids)] = ids
+        pos += e_counts[s]
+
+    valid = edge_perm >= 0
+    src_new = np.zeros(len(edge_perm), dtype=np.int64)
+    dst_new = np.zeros(len(edge_perm), dtype=np.int64)
+    w_new = np.zeros(len(edge_perm), dtype=np.float32)
+    src_new[valid] = node_inv[src[edge_perm[valid]]]
+    dst_new[valid] = node_inv[dst[edge_perm[valid]]]
+    w_new[valid] = weights[edge_perm[valid]]
+
+    cut = int(np.sum(assign[src] != assign[dst]))
+    bnodes = np.unique(np.concatenate([
+        src[assign[src] != assign[dst]], dst[assign[src] != assign[dst]]]))
+    return PartitionPlan(
+        num_shards=num_shards, nodes_per_shard=vp, edges_per_shard=ep,
+        node_perm=node_perm, node_inv=node_inv, edge_perm=edge_perm,
+        src_new=src_new, dst_new=dst_new, weights=w_new,
+        cut_edges=cut, boundary_nodes=len(bnodes))
+
+
+def permute_node_array(plan: PartitionPlan, arr: np.ndarray,
+                       fill=0.0) -> np.ndarray:
+    """Reorder+pad a (V, ...) array into the plan's (S * vp, ...) layout."""
+    arr = np.asarray(arr)
+    out = np.full((len(plan.node_perm),) + arr.shape[1:], fill,
+                  dtype=arr.dtype)
+    valid = plan.node_perm >= 0
+    out[valid] = arr[plan.node_perm[valid]]
+    return out
+
+
+def unpermute_node_array(plan: PartitionPlan, arr: np.ndarray,
+                         num_nodes: int) -> np.ndarray:
+    """Inverse of permute_node_array (drops padding)."""
+    arr = np.asarray(arr)
+    out = np.empty((num_nodes,) + arr.shape[1:], dtype=arr.dtype)
+    valid = plan.node_perm >= 0
+    out[plan.node_perm[valid]] = arr[valid]
+    return out

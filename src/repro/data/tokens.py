@@ -1,0 +1,60 @@
+"""Deterministic synthetic LM data pipeline.
+
+Offline environment => no real corpus.  The stream is a seeded Markov-ish
+token process (not uniform noise: it has learnable bigram structure so a
+few hundred training steps show a falling loss, exercised by
+examples/train_lm.py).  Batches are yielded as numpy and shardable over the
+"data" mesh axis; the embeddings variant serves the audio/vlm stub
+frontends.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    structure: int = 97    # bigram period; smaller = easier to learn
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def next_batch(self) -> dict:
+        b, t = self.batch_size, self.seq_len
+        start = self._rng.integers(0, self.vocab_size, size=(b, 1))
+        noise = self._rng.integers(0, self.structure, size=(b, t))
+        # x_{t+1} = (x_t * 31 + noise) mod V: deterministic skeleton + noise
+        toks = np.empty((b, t), np.int64)
+        toks[:, 0] = start[:, 0]
+        for i in range(1, t):
+            toks[:, i] = (toks[:, i - 1] * 31 + noise[:, i]) % self.vocab_size
+        tokens = toks[:, :-1] if t > 1 else toks
+        targets = toks[:, 1:] if t > 1 else toks
+        return {"tokens": tokens.astype(np.int32),
+                "targets": targets.astype(np.int32)}
+
+
+@dataclasses.dataclass
+class EmbeddingStream:
+    """Stub modality frontend: precomputed frame/patch embeddings."""
+    d_model: int
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def next_batch(self) -> dict:
+        b, t = self.batch_size, self.seq_len
+        emb = self._rng.standard_normal((b, t, self.d_model)).astype(
+            np.float32) * 0.02
+        targets = self._rng.integers(0, self.vocab_size, size=(b, t))
+        return {"embeds": emb, "targets": targets.astype(np.int32)}

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: tiled online-softmax (flash) GQA attention.
+
+Used for the prefill path of every attention architecture in the model zoo
+(the decode path is a single-token matvec — memory-bound gather, no kernel
+needed).  The kernel follows the standard TPU flash pattern:
+
+  grid = (B, Hq, T/BQ, S/BK)   — kv axis innermost (sequential),
+  q block   (1, 1, BQ, D)  in VMEM,
+  k/v block (1, 1, BK, D)  in VMEM (GQA: index_map folds Hq -> Hkv),
+  scratch   m/l/acc        in VMEM, persisted across the kv grid axis,
+  output written once on the last kv step (pl.when).
+
+Causal and sliding-window masks are computed from program ids; query
+position i is aligned to key position i + (S - T) so the same kernel
+serves both training (T == S) and chunked prefill (T < S).
+
+BQ/BK default to 128 — MXU/lane aligned.  Validated via interpret=True
+against ref.attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  sm_scale: float, causal: bool, window: int | None,
+                  seq_q: int, seq_k: int, block_q: int, block_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)               # (BK, D)
+    v = v_ref[0, 0].astype(jnp.float32)               # (BK, D)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * sm_scale   # (BQ, BK)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + (seq_k - seq_q)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = kpos < seq_k          # exclude padded keys
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, NEG_INF)
+
+    m_prev = m_ref[...]                                # (BQ, 1)
+    m_cur = jnp.max(logits, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)                        # (BQ, BK)
+    alpha = jnp.exp(m_prev - m_new)                    # (BQ, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sm_scale", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, sm_scale: float | None = None,
+                    window: int | None = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Flash GQA attention.  q: (B, Hq, T, D); k, v: (B, Hkv, S, D)."""
+    b, hq, t, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0, "GQA requires Hq % Hkv == 0"
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    bq = min(block_q, t)
+    bk = min(block_k, s)
+    t_pad = -(-t // bq) * bq
+    s_pad = -(-s // bk) * bk
+    if t_pad != t:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, t_pad - t), (0, 0)))
+    if s_pad != s:
+        # padded keys are masked out inside the kernel via kpos < seq_k
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - s), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        seq_q=t, seq_k=s, block_q=bq, block_k=bk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, t_pad // bq, s_pad // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, t_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :t]

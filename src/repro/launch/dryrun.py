@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+This proves the distribution config is coherent without real hardware:
+512 placeholder host devices stand in for 2 pods × 256 v5e chips; every
+combo must ``.lower().compile()`` under its production shardings, and the
+compiled artifact yields the memory/cost/collective numbers for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results are written one JSON per combo to results/dryrun/.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ArchConfig, INPUT_SHAPES, get_config,
+                                list_archs)
+from repro.launch import roofline as rl
+from repro.launch import shardings as sh
+from repro.launch import specs
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.serve import make_prefill, make_serve_step
+from repro.launch.train import make_train_step
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _fsdp_mode(cfg: ArchConfig, mesh) -> bool:
+    """Head-indivisible archs run pure-FSDP batch parallelism (see
+    shardings.activation_hints)."""
+    return cfg.num_heads % mesh.shape["model"] != 0
+
+
+def _logits_pspec(cfg: ArchConfig, mesh, batch: int) -> P:
+    fsdp = _fsdp_mode(cfg, mesh)
+    lead = sh._batch_lead(mesh, batch, fsdp)
+    v = "model" if (cfg.vocab_size % mesh.shape["model"] == 0
+                    and not fsdp) else None
+    return P(lead, None, v)
+
+
+def count_params(cfg: ArchConfig) -> dict:
+    """Total and active (MoE top-k discounted) parameter counts."""
+    tree = specs.param_specs(cfg)
+    total = active = embed = 0
+    frac = (cfg.experts_per_token / cfg.num_experts) if cfg.num_experts else 1.0
+
+    def visit(path, leaf):
+        nonlocal total, active, embed
+        n = int(np.prod(leaf.shape))
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        total += n
+        if names[-1] == "table":
+            embed += n
+            active += n          # tied unembed matmul is always live
+        elif names[-1] in ("w_gate", "w_up", "w_down") and len(leaf.shape) == 4:
+            active += int(n * frac)   # stacked (L, E, d, f) expert weights
+        else:
+            active += n
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return {"total": total, "active": active, "embed": embed}
+
+
+def build_lowerable(cfg: ArchConfig, shape_name: str, mesh):
+    """Returns (fn, args, in_shardings, out_shardings) for this combo."""
+    spec = INPUT_SHAPES[shape_name]
+    kind = spec["kind"]
+    ins = specs.input_specs(cfg, shape_name)
+    p_sh = _named(mesh, sh.param_pspecs(ins["params"], cfg, mesh))
+    b_sh = _named(mesh, sh.batch_pspecs(ins["batch"], mesh,
+                                        decode=(kind == "decode")))
+    if kind == "train":
+        init_opt, step = make_train_step(cfg, remat=True)
+        opt_specs = jax.eval_shape(init_opt, ins["params"])
+        o_sh = _named(mesh, sh.opt_pspecs(
+            sh.param_pspecs(ins["params"], cfg, mesh)))
+        metrics_sh = {k: NamedSharding(mesh, P())
+                      for k in ("loss", "ce", "aux")}
+        return (step, (ins["params"], opt_specs, ins["batch"]),
+                (p_sh, o_sh, b_sh), (p_sh, o_sh, metrics_sh))
+
+    plan = specs.decode_plan(cfg, shape_name)
+    c_sh = _named(mesh, sh.cache_pspecs(
+        ins["cache"], mesh, long_ctx=(shape_name == "long_500k")))
+    fn = (make_prefill if kind == "prefill" else make_serve_step)(
+        cfg, window=plan["window"], cache_mode=plan["cache_mode"])
+    logits_sh = NamedSharding(mesh, _logits_pspec(cfg, mesh,
+                                                  spec["global_batch"]))
+    return (fn, (ins["params"], ins["cache"], ins["batch"]),
+            (p_sh, c_sh, b_sh), (logits_sh, c_sh))
+
+
+def run_combo(arch: str, shape_name: str, multi_pod: bool,
+              out_dir: str = "results/dryrun", keep_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "mesh_shape": dict(mesh.shape), "ok": False}
+    try:
+        fn, args, in_sh, out_sh = build_lowerable(cfg, shape_name, mesh)
+        with mesh, sh.activation_hints(mesh,
+                                       fsdp_batch=_fsdp_mode(cfg, mesh)):
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        ana = rl.analyze_hlo(hlo)
+        nchips = int(np.prod(list(mesh.shape.values())))
+        params = count_params(cfg)
+        spec = INPUT_SHAPES[shape_name]
+
+        if spec["kind"] == "train":
+            # 6ND fwd+bwd (remat adds ~1 extra fwd -> factor 8 in practice)
+            model_fl = rl.model_flops_train(
+                params["active"], spec["global_batch"] * spec["seq_len"])
+        elif spec["kind"] == "prefill":
+            model_fl = rl.model_flops_train(
+                params["active"],
+                spec["global_batch"] * spec["seq_len"]) / 3.0  # fwd only
+        else:
+            model_fl = rl.model_flops_decode(params["active"],
+                                             spec["global_batch"])
+
+        mem_fields = {}
+        if mem is not None:
+            for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                mem_fields[f] = int(getattr(mem, f, 0) or 0)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "num_chips": nchips,
+            "params_total": params["total"],
+            "params_active": params["active"],
+            "model_flops": model_fl,
+            "cost_analysis": {k: float(v) for k, v in (cost or {}).items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed",
+                                        "optimal_seconds", "transcendentals")},
+            "memory_analysis": mem_fields,
+            "hlo_analysis": {
+                "flops": ana.flops,
+                "hbm_bytes": ana.hbm_bytes,
+                "collective_bytes": ana.collective_bytes,
+            },
+            "collectives": {
+                "bytes_by_kind": ana.collective_bytes_by_kind,
+                "count_by_kind": ana.collective_count_by_kind,
+                "total_bytes": int(ana.collective_bytes),
+            },
+            "roofline": {
+                "compute_s": ana.flops / rl.PEAK_FLOPS,
+                "memory_s": ana.hbm_bytes / rl.HBM_BW,
+                "collective_s": ana.collective_bytes / rl.ICI_BW,
+            },
+        })
+        if keep_hlo:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir, f"{arch}_{shape_name}_{mesh_name}.hlo.txt"),
+                    "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = "OK " if rec["ok"] else "FAIL"
+    print(f"[dryrun {status}] {arch} × {shape_name} × {mesh_name} "
+          f"({rec['wall_s']}s)" + ("" if rec["ok"] else
+                                   f"  {rec.get('error', '')[:200]}"),
+          flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip combos whose JSON already reports ok")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                path = os.path.join(args.out,
+                                    f"{arch}_{shape}_{mesh_name}.json")
+                if args.skip_done and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("ok"):
+                            continue
+                rec = run_combo(arch, shape, mp, out_dir=args.out,
+                                keep_hlo=args.keep_hlo)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

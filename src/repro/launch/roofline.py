@@ -1,0 +1,366 @@
+"""Three-term roofline analysis from the compiled dry-run artifact.
+
+Terms per (arch × shape × mesh), all in seconds-per-step on TPU v5e:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs            (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_chip / HBM_bw                (819 GB/s)
+    collective = collective_bytes_per_chip / link_bw        (~50 GB/s ICI)
+
+Sources.  ``compiled.cost_analysis()`` reports flops / bytes of the
+post-SPMD per-device module, but its while-loop accounting is unreliable
+(observed: the backward layer-scan of a remat'd train step is counted
+once or not at all depending on loop structure).  This module therefore
+parses ``compiled.as_text()`` directly:
+
+  * loop trip counts come from the ``backend_config`` that XLA attaches to
+    every ``while`` op (``{"known_trip_count": {"n": "28"}}``),
+  * a call graph (fusion ``calls=``, ``to_apply=``, while ``body=``) scales
+    every instruction by the product of enclosing trip counts,
+  * FLOPs are summed over ``dot``/``convolution`` ops using a per-
+    computation symbol table to resolve operand shapes,
+  * collective bytes sum the result-shape bytes of all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute,
+  * HBM bytes are approximated as bytes-accessed of dot/fusion/copy/
+    collective results (reads ~= writes at steady state; relative
+    comparisons across combos is what §Roofline needs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e hardware constants (brief).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_INST_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                      r"((?:\()?[a-z0-9\[\]\{\},\s/*=]+?(?:\))?)\s+"
+                      r"([a-z][a-z0-9\-]*)\((.*)$")
+
+
+def _shape_elems(type_str: str):
+    """Yield (dtype, [dims]) for every shape literal in a type string."""
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            yield dt, [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_elems(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # everything after the opening paren of the operand list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    header: str
+    instructions: list
+    symbols: dict       # instruction/parameter name -> type string
+    root: str = ""      # name of the ROOT instruction
+
+
+def split_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if line.endswith("{") and "->" in line:
+            m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m:
+                cur = Computation(m.group(1), line, [], {})
+                comps[cur.name] = cur
+                # parameters: "name: type" pairs in the header
+                for pm in re.finditer(r"([\w\.\-]+):\s*((?:\()?[a-z0-9\[\]"
+                                      r"\{\},\s]+?(?:\)|(?=,|\))))",
+                                      line.split("->")[0]):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                continue
+        s = line.strip()
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is None or not s:
+            continue
+        m = _INST_RE.match(line)
+        if m:
+            inst = Instruction(m.group(1), m.group(2).strip(), m.group(3),
+                               m.group(4))
+            cur.instructions.append(inst)
+            cur.symbols[inst.name] = inst.type_str
+            if s.startswith("ROOT"):
+                cur.root = inst.name
+        elif "= " in s and " parameter(" in s:
+            pm = re.match(r"%?([\w\.\-]+)\s*=\s*(.+?)\s+parameter\(", s)
+            if pm:
+                cur.symbols[pm.group(1)] = pm.group(2)
+    return comps
+
+
+def _call_multipliers(comps: dict) -> tuple[dict, set]:
+    """Returns (computation -> execution multiplier, fused-computation set).
+
+    Instructions inside fused computations (reached via ``calls=`` on a
+    fusion op) execute inside a fused kernel and do not individually touch
+    HBM — analyze_hlo skips them for the memory term.
+    """
+    # edges: callee -> list of (caller, per-call multiplier, kind)
+    edges: dict[str, list] = {}
+    for cname, comp in comps.items():
+        for inst in comp.instructions:
+            rest = inst.rest
+            if inst.opcode == "while":
+                trip = 1
+                m = re.search(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)', rest)
+                if m:
+                    trip = int(m.group(1))
+                mb = re.search(r"body=%?([\w\.\-]+)", rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", rest)
+                if mb:
+                    edges.setdefault(mb.group(1), []).append(
+                        (cname, trip, "loop"))
+                if mc:
+                    edges.setdefault(mc.group(1), []).append(
+                        (cname, trip, "loop"))
+                continue
+            for key in ("calls", "to_apply", "body", "condition"):
+                for m in re.finditer(rf"{key}=%?([\w\.\-]+)", rest):
+                    kind = "fusion" if (key == "calls"
+                                        or inst.opcode == "fusion") else "call"
+                    edges.setdefault(m.group(1), []).append((cname, 1, kind))
+            m = re.search(r"branch_computations=\{([^}]*)\}", rest)
+            if m:
+                for callee in re.findall(r"%?([\w\.\-]+)", m.group(1)):
+                    edges.setdefault(callee, []).append((cname, 1, "call"))
+
+    entry = None
+    for name in comps:
+        if name not in edges:
+            # uncalled computation: the entry (usually "main.N")
+            if name.startswith("main") or entry is None:
+                entry = name
+
+    mult: dict[str, int] = {}
+
+    def resolve(name, seen=()):
+        if name in mult:
+            return mult[name]
+        if name == entry or name in seen:
+            return 1
+        callers = edges.get(name)
+        if not callers:
+            mult[name] = 1
+            return 1
+        caller, trip, _ = callers[0]
+        m = trip * resolve(caller, seen + (name,))
+        mult[name] = m
+        return m
+
+    for name in comps:
+        resolve(name)
+
+    fused = {name for name, callers in edges.items()
+             if callers and all(k == "fusion" for _, _, k in callers)}
+    return mult, fused
+
+
+def _dot_flops(comp: Computation, inst: Instruction) -> float:
+    """2 * |result| * contracted-dims product for a dot instruction."""
+    n_out = 0
+    for _, dims in _shape_elems(inst.type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        n_out = max(n_out, n)
+    # lhs operand: first %ref in the operand list
+    ops = re.findall(r"%?([\w\.\-]+)", inst.rest)
+    kprod = 1
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.rest)
+    if ops and mm:
+        lhs_t = comp.symbols.get(ops[0], "")
+        shapes = list(_shape_elems(lhs_t))
+        if shapes:
+            dims = shapes[0][1]
+            for ci in (int(x) for x in mm.group(1).split(",") if x):
+                if ci < len(dims):
+                    kprod *= dims[ci]
+    return 2.0 * n_out * kprod
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float                  # loop-scaled dot/conv flops (per device)
+    hbm_bytes: float              # loop-scaled result bytes of heavy ops
+    collective_bytes_by_kind: dict
+    collective_count_by_kind: dict
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes_by_kind.values()))
+
+
+# top-level opcodes whose results do NOT round-trip HBM: metadata ops,
+# and ops whose output aliases an input (while carries, conditionals)
+_NO_TRAFFIC_OPS = ("bitcast", "reshape", "parameter", "constant",
+                   "get-tuple-element", "tuple", "after-all", "token",
+                   "partition-id", "replica-id", "while", "conditional",
+                   "call")
+
+
+def _operand_names(inst: Instruction) -> list:
+    ops = []
+    depth = 0
+    for tok in re.finditer(r"[(),]|%?([\w\.\-]+)", inst.rest):
+        ch = tok.group(0)
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        elif ch == ",":
+            continue
+        elif tok.group(1) and depth == 0:
+            ops.append(tok.group(1))
+    return ops
+
+
+def _traffic_bytes(comp: Computation, inst: Instruction,
+                   comps: dict) -> float:
+    """HBM bytes attributed to one top-level instruction.
+
+    dynamic-update-slice (and fusions rooted at one) update their buffer
+    IN PLACE: the traffic is the update slice, not the full aliased
+    result — counting result bytes inflated the per-token-scan train
+    combos by ~100x (analyzer v1 artifact; see EXPERIMENTS.md §Roofline).
+    """
+    full = _shape_bytes(inst.type_str)
+    target = None
+    if inst.opcode == "dynamic-update-slice":
+        target = (comp, inst)
+    elif inst.opcode == "fusion":
+        m = re.search(r"calls=%?([\w\.\-]+)", inst.rest)
+        callee = comps.get(m.group(1)) if m else None
+        if callee is not None and callee.root:
+            root_inst = next((i for i in callee.instructions
+                              if i.name == callee.root), None)
+            if root_inst is not None and \
+                    root_inst.opcode == "dynamic-update-slice":
+                target = (callee, root_inst)
+    if target is not None:
+        c, dus = target
+        ops = _operand_names(dus)
+        if len(ops) >= 2:
+            upd = _shape_bytes(c.symbols.get(ops[1], ""))
+            if 0 < upd <= full:
+                return 2.0 * upd
+    return 2.0 * full
+
+
+def analyze_hlo(hlo_text: str) -> HloAnalysis:
+    comps = split_computations(hlo_text)
+    mult, fused = _call_multipliers(comps)
+
+    flops = 0.0
+    hbm = 0.0
+    cbytes = {k: 0 for k in _COLLECTIVES}
+    ccount = {k: 0 for k in _COLLECTIVES}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 1)
+        in_fusion = cname in fused
+        for inst in comp.instructions:
+            op = inst.opcode
+            if op == "dot":
+                flops += _dot_flops(comp, inst) * m
+            if in_fusion:
+                continue          # fused internals never touch HBM per-op
+            kind = next((c for c in _COLLECTIVES
+                         if op == c or op == c + "-start"), None)
+            if kind is not None:
+                b = _shape_bytes(inst.type_str)
+                if op.endswith("-start"):
+                    b //= 2       # start tuples carry (operand, result)
+                cbytes[kind] += b * m
+                ccount[kind] += m
+                hbm += 2.0 * b * m
+                continue
+            if op not in _NO_TRAFFIC_OPS:
+                hbm += _traffic_bytes(comp, inst, comps) * m
+    return HloAnalysis(flops=flops, hbm_bytes=hbm,
+                       collective_bytes_by_kind=cbytes,
+                       collective_count_by_kind=ccount)
+
+
+# Backwards-compatible helper used by the dry-run ----------------------------
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    a = analyze_hlo(hlo_text)
+    return CollectiveStats(bytes_by_kind=a.collective_bytes_by_kind,
+                           count_by_kind=a.collective_count_by_kind)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float) -> Roofline:
+    return Roofline(
+        compute_s=flops_per_chip / PEAK_FLOPS,
+        memory_s=bytes_per_chip / HBM_BW,
+        collective_s=coll_bytes_per_chip / ICI_BW,
+    )
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6 * N * D (dense) / 6 * N_active * D (MoE)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: float, batch: int) -> float:
+    """One token per sequence: 2 * N_active FLOPs per token (fwd only)."""
+    return 2.0 * n_params_active * batch

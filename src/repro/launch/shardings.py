@@ -1,0 +1,308 @@
+"""Sharding policy: parameter / optimizer / batch / cache PartitionSpecs.
+
+Policy (DESIGN.md §6): FSDP over the "data" axis x tensor/expert parallel
+over the "model" axis; the "pod" axis extends data parallelism.  Rules are
+keyed on parameter names so every architecture family in the zoo gets a
+consistent layout:
+
+  attention   q heads -> model, d_model -> data (wo transposed accordingly)
+  kv proj     kv heads -> model if enough heads, else head_dim -> model
+  mlp         ffn hidden -> model, d_model -> data
+  moe         experts -> model (expert parallel), d_model -> data
+  mamba       d_inner -> model, d_model -> data
+  rwkv        fused head dim -> model, d_model -> data
+  embedding   vocab -> model, d_model -> data
+  norms/gains replicated
+
+Stacked-layer leading axes (from the scan-over-layers layout) are never
+sharded.  Decode caches shard batch over data when divisible; the 32k full
+cache shards its sequence axis over "model", the 500k cache over
+("data", "model") — the attention reduction over cache length then lowers
+to a psum, which is the collective the roofline table attributes decode to.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+# ---------------------------------------------------------------------------
+# Activation-sharding policy (with_sharding_constraint hooks)
+#
+# FSDP weight sharding alone is not enough: without activation constraints
+# XLA's sharding propagation lets the d_model-over-"data" weight sharding
+# win inside the blocks and silently REPLICATES the batch dimension of every
+# activation (observed: f32[256,1,4096,4096] attention logits per device in
+# the qwen3-0.6b train_4k dry-run — 167 GB of temp).  The launcher installs
+# this policy around lowering; model code calls ``hint(x, kind)`` at layer
+# boundaries.  With no policy installed (CPU tests) the hint is a no-op.
+# ---------------------------------------------------------------------------
+
+_POLICY = threading.local()
+
+
+@contextlib.contextmanager
+def activation_hints(mesh, *, fsdp_batch: bool = False):
+    """Install ``mesh`` as the activation-constraint target.
+
+    ``fsdp_batch=True`` additionally spreads the batch over the "model"
+    axis (pure ZeRO-3-style data parallelism).  Used for architectures
+    whose head count does not divide the model axis (musicgen's 24 heads
+    on a 16-way axis): tensor-parallel attention cannot shard, so batch
+    parallelism over all axes is the layout that keeps per-chip attention
+    buffers bounded.
+    """
+    prev = (getattr(_POLICY, "mesh", None), getattr(_POLICY, "fsdp", False))
+    _POLICY.mesh = mesh
+    _POLICY.fsdp = fsdp_batch
+    try:
+        yield
+    finally:
+        _POLICY.mesh, _POLICY.fsdp = prev
+
+
+def _batch_lead(mesh, b: int, fsdp: bool):
+    """Largest batch-axis tuple that evenly divides ``b``."""
+    cands = []
+    if fsdp:
+        if "pod" in mesh.axis_names:
+            cands.append(("pod", "data", "model"))
+        cands.append(("data", "model"))
+    if "pod" in mesh.axis_names:
+        cands.append(("pod", "data"))
+    cands.append(("data",))
+    for axes in cands:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if b % n == 0:
+            return axes
+    return None
+
+
+def hint(x, kind: str):
+    """Constrain an activation if a policy mesh is installed.
+
+    kinds: "hidden" (B, T, d) — batch over the data axes;
+           "logits" (B, T, V) — batch over data, vocab over model
+           (vocab sharding dropped when V does not divide the axis).
+    """
+    mesh = getattr(_POLICY, "mesh", None)
+    if mesh is None or x is None:
+        return x
+    fsdp = getattr(_POLICY, "fsdp", False)
+    lead = _batch_lead(mesh, x.shape[0], fsdp)
+    if kind == "hidden":
+        spec = P(lead, *([None] * (x.ndim - 1)))
+    elif kind == "logits":
+        v = "model" if (x.shape[-1] % mesh.shape["model"] == 0
+                        and not fsdp) else None
+        spec = P(lead, *([None] * (x.ndim - 2)), v)
+    elif kind == "decode_q":
+        # single-token query (B, H, 1, hd): REPLICATE heads over "model"
+        # so attention against the sequence-sharded KV cache computes
+        # seq-parallel (flash-decode); otherwise GSPMD all-gathers the
+        # full cache per layer (observed 2 x 1 GB/layer on decode_32k)
+        spec = P(lead, None, None, None)
+    elif kind == "decode_logits":
+        # (B, H, 1, S) attention scores: keep S sharded over "model" —
+        # without this GSPMD propagates the replicated-q layout downstream
+        # and gathers the cache anyway; with it the softmax reduces via
+        # tiny (B, H, 1) stats and PV partial-sums (flash-decode layout)
+        s_ax = "model" if (x.shape[-1] % mesh.shape["model"] == 0
+                           and not fsdp) else None
+        spec = P(lead, None, None, s_ax)
+    elif kind == "moe_buf":
+        # (G, E, C, d): groups over data, experts over model — the
+        # group->expert reshard is the canonical MoE all-to-all
+        e = "model" if (x.shape[1] % mesh.shape["model"] == 0
+                        and not fsdp) else None
+        spec = P(lead, e, *([None] * (x.ndim - 2)))
+    else:
+        raise ValueError(kind)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _dim_ok(size: int, shards: int) -> bool:
+    return size % shards == 0 and size >= shards
+
+
+def _param_rule(name: str, shape, cfg: ArchConfig, mesh) -> P:
+    """Sharding rule for one parameter, with divisibility guards: any axis
+    that does not evenly divide the dimension falls back to replication
+    (jit argument shardings require even tiling — e.g. granite's vocab
+    49155 shards over nothing, musicgen's 24 heads don't divide 16)."""
+    ms = mesh.shape["model"]
+    ds = mesh.shape["data"]
+    nd = len(shape)
+
+    def ax(i: int, axis: str):
+        n = ms if axis == "model" else ds
+        return axis if _dim_ok(shape[i], n) else None
+
+    def guard(*axes) -> P:
+        out = []
+        for i, a in enumerate(axes):
+            if a is None:
+                out.append(None)
+            elif isinstance(a, tuple):
+                n = 1
+                for x in a:
+                    n *= mesh.shape[x]
+                out.append(a if _dim_ok(shape[i], n) else ax(i, a[0]))
+            else:
+                out.append(ax(i, a))
+        return P(*out)
+
+    if nd <= 1:
+        # biases / gains / scalars: replicate (cheap, avoids tiny collectives)
+        return P()
+    if name == "table":                       # (vocab, d_model)
+        if _dim_ok(shape[0], ms):
+            return guard("model", "data")
+        # indivisible vocab (granite 49155): shard d_model over everything
+        return guard(None, ("data", "model"))
+    if name == "wq":                          # (d, H, hd)
+        return guard("data", "model", None)
+    if name in ("wk", "wv"):                  # (d, Hkv, hd)
+        if _dim_ok(shape[1], ms):
+            return guard("data", "model", None)
+        return guard("data", None, "model")
+    if name == "wo":                          # (H, hd, d)
+        if _dim_ok(shape[0], ms):
+            return guard("model", None, "data")
+        return guard(None, "model", "data")
+    if name in ("w_gate", "w_up"):
+        if nd == 3:                           # moe (E, d, f)
+            return guard("model", "data", None)
+        return guard("data", "model")         # (d, f)
+    if name == "w_down":
+        if nd == 3:                           # moe (E, f, d)
+            return guard("model", None, "data")
+        return guard("model", "data")         # (f, d)
+    if name == "router":                      # (d, E)
+        return guard("data", None)
+    if name in ("w_r", "w_k", "w_v", "w_g"):  # rwkv (d, h)
+        return guard("data", "model")
+    if name == "w_o":                         # rwkv (h, d)
+        return guard("model", "data")
+    if name == "decay_a":                     # (d, lora)
+        return guard("data", None)
+    if name == "decay_b":                     # (lora, h)
+        return guard(None, "model")
+    if name == "bonus_u":                     # (H, hd)
+        return guard("model", None)
+    if name == "in_proj":                     # mamba (d, 2*di)
+        return guard("data", "model")
+    if name == "conv_w":                      # (K, di)
+        return guard(None, "model")
+    if name == "x_proj":                      # (di, r+2S)
+        return guard("model", None)
+    if name == "dt_proj":                     # (r, di)
+        return guard(None, "model")
+    if name == "a_log":                       # (di, S)
+        return guard("model", None)
+    if name == "out_proj":                    # (di, d)
+        return guard("model", "data")
+    if name == "w":                           # vision_proj (vd, d)
+        return guard("data", "model")
+    # fallback
+    if nd == 2:
+        return guard("data", "model")
+    return P(*([None] * nd))
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(f"[{p.idx}]")
+        else:
+            names.append(str(p))
+    return names
+
+
+def param_pspecs(params_shape, cfg: ArchConfig, mesh):
+    """PartitionSpec pytree matching a params (ShapeDtypeStruct) pytree."""
+    def assign(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        stacked = "blocks" in names   # scan-over-layers leading axis
+        if stacked:
+            spec = _param_rule(name, shape[1:], cfg, mesh)
+            return P(None, *spec)
+        return _param_rule(name, shape, cfg, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def opt_pspecs(param_specs):
+    """AdamWState(step, m, v) specs mirroring the param specs."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), m=param_specs, v=param_specs)
+
+
+def batch_pspecs(batch_shape: dict, mesh, *, decode: bool = False) -> dict:
+    """Specs for a data batch dict (tokens/targets/embeds/image_embeds)."""
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    nshards = 1
+    for a in baxes:
+        nshards *= mesh.shape[a]
+
+    def assign(leaf):
+        b = leaf.shape[0]
+        lead = baxes if _dim_ok(b, nshards) else (
+            ("data",) if _dim_ok(b, mesh.shape["data"]) else None)
+        rest = [None] * (len(leaf.shape) - 1)
+        return P(lead, *rest) if lead else P(*( [None] * len(leaf.shape)))
+
+    return {k: assign(v) for k, v in batch_shape.items()}
+
+
+def cache_pspecs(cache_shape, mesh, *, long_ctx: bool = False):
+    """Specs for a decode-cache pytree (leaves have stacked layer axis 0)."""
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    nsh = 1
+    for a in baxes:
+        nsh *= mesh.shape[a]
+    seq_axes = ("data", "model") if long_ctx else ("model",)
+    seq_sh = 1
+    for a in seq_axes:
+        seq_sh *= mesh.shape[a]
+
+    def assign(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        if name == "pos" or len(shape) <= 1:
+            return P(*([None] * len(shape)))
+        bdim = shape[1] if len(shape) > 1 else 1
+        bspec = baxes if _dim_ok(bdim, nsh) else (
+            ("data",) if _dim_ok(bdim, mesh.shape["data"]) else None)
+        if name in ("k", "v", "ik", "iv"):
+            # (L, B, Hkv, S, hd): shard cache length (or image patches)
+            sspec = seq_axes if _dim_ok(shape[3], seq_sh) else None
+            return P(None, bspec, None, sspec, None)
+        if name == "ssm":
+            # (L, B, di, S_state): d_inner over model
+            return P(None, bspec, "model", None)
+        if name == "conv":
+            # (L, B, K-1, di)
+            return P(None, bspec, None, "model")
+        if name == "wkv":
+            # (L, B, H, dk, dv)
+            hspec = "model" if _dim_ok(shape[2], mesh.shape["model"]) else None
+            return P(None, bspec, hspec, None, None)
+        if name in ("time_shift", "chan_shift"):
+            return P(None, bspec, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)

@@ -1,0 +1,92 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × input-shape) combo.
+
+The dry-run lowers train_step / prefill / serve_step against these specs —
+weak-type-correct, shardable, and no device allocation ever happens.
+
+Shape semantics (brief):
+  train_4k     -> train_step   tokens/embeds (B, T) + targets
+  prefill_32k  -> prefill      tokens/embeds (B, T), fresh cache
+  decode_32k   -> serve_step   ONE token, full KV cache of length seq_len
+  long_500k    -> serve_step   ONE token; sub-quadratic state: SSM/hybrid
+                  native, attention archs use the sliding-window ring cache
+                  (window = LONG_CONTEXT_WINDOW) — the brief's dense-arch
+                  carve-out, labeled `sliding_window` in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ArchConfig, INPUT_SHAPES,
+                                LONG_CONTEXT_WINDOW)
+from repro.models import transformer as model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """ShapeDtypeStructs for the data batch of this (arch, shape)."""
+    spec = INPUT_SHAPES[shape_name]
+    b, t, kind = spec["global_batch"], spec["seq_len"], spec["kind"]
+    out: dict = {}
+    tlen = 1 if kind == "decode" else t
+    if cfg.input_mode == "tokens":
+        out["tokens"] = _sds((b, tlen), jnp.int32)
+    else:
+        out["embeds"] = _sds((b, tlen, cfg.d_model), jnp.float32)
+    if kind == "train":
+        out["targets"] = _sds((b, tlen), jnp.int32)
+    if cfg.family == "vlm":
+        out["image_embeds"] = _sds((b, cfg.num_image_tokens, cfg.vision_dim),
+                                   jnp.float32)
+    return out
+
+
+def decode_plan(cfg: ArchConfig, shape_name: str) -> dict:
+    """Cache length/mode used when ``shape_name`` lowers serve_step."""
+    seq = INPUT_SHAPES[shape_name]["seq_len"]
+    if shape_name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        # dense/moe/audio/vlm run long-context decode with the ring cache
+        return {"cache_len": LONG_CONTEXT_WINDOW, "cache_mode": "window",
+                "window": LONG_CONTEXT_WINDOW, "variant": "sliding_window"}
+    if cfg.family == "hybrid" and shape_name == "long_500k":
+        # mamba state is O(1); the 1-in-8 attention layers ring at the window
+        return {"cache_len": LONG_CONTEXT_WINDOW, "cache_mode": "window",
+                "window": LONG_CONTEXT_WINDOW, "variant": "native+window"}
+    return {"cache_len": seq, "cache_mode": "full", "window": 0,
+            "variant": "native"}
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str):
+    """ShapeDtypeStruct pytree for the decode cache of this combo."""
+    spec = INPUT_SHAPES[shape_name]
+    plan = decode_plan(cfg, shape_name)
+    fn = functools.partial(model.init_cache, cfg, spec["global_batch"],
+                           plan["cache_len"], mode=plan["cache_mode"])
+    return jax.eval_shape(fn)
+
+
+def param_specs(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree of the model parameters (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(model.init_params, cfg=cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """Everything jit(...).lower(**input_specs(...)) needs for this combo.
+
+    Returns kwargs for the step function chosen by the shape kind:
+      train   -> {params, opt_state(optional at call site), batch}
+      prefill -> {params, batch, cache}
+      decode  -> {params, batch, cache}
+    """
+    kind = INPUT_SHAPES[shape_name]["kind"]
+    out = {"params": param_specs(cfg), "batch": batch_specs(cfg, shape_name)}
+    if kind in ("prefill", "decode"):
+        out["cache"] = cache_specs(cfg, shape_name)
+    return out

@@ -1,0 +1,197 @@
+"""Training launcher: jit/pjit train step + a runnable CPU driver.
+
+``make_train_step`` builds the canonical step — forward (remat over the
+layer scan), next-token loss (+ MoE aux), AdamW — used both by the dry-run
+(lowered against ShapeDtypeStructs on the production mesh) and by the CPU
+examples (smoke-size archs, real arrays).
+
+``make_fedtv_train_step`` wraps the same backbone step with the paper's
+technique: per-client personalization gains coupled by the nLasso TV
+penalty, updated by one primal-dual iteration (Algorithm 1) per train step
+(core/fedtv.py).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, get_config, list_archs
+from repro.core import fedtv
+from repro.data.tokens import EmbeddingStream, TokenStream
+from repro.models import transformer as model
+from repro.optim.adamw import adamw, cosine_schedule
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, *, remat: bool = True):
+    """Mean next-token CE (+ weighted MoE load-balance aux)."""
+    logits, aux = model.forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+        image_embeds=batch.get("image_embeds"),
+        remat=remat,
+    )
+    ce = model.lm_loss(logits, batch["targets"])
+    return ce + MOE_AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, *, learning_rate=3e-4, remat=True,
+                    weight_decay: float = 0.1):
+    """Returns (init_opt, train_step).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    — pure, jit/pjit-able; the dry-run lowers exactly this function.
+    """
+    init_opt, update = adamw(learning_rate, weight_decay=weight_decay)
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg, batch=batch, remat=remat),
+            has_aux=True)(params)
+        params, opt_state = update(grads, opt_state, params)
+        metrics = {"loss": loss, **parts}
+        return params, opt_state, metrics
+
+    return init_opt, train_step
+
+
+def make_fedtv_train_step(cfg: ArchConfig, fcfg: fedtv.FedTVConfig, *,
+                          learning_rate=3e-4, remat=True):
+    """Backbone SGD step interleaved with one nLasso primal-dual step on the
+    per-client personalization gains (the paper's Algorithm 1 wrapped
+    around big-model training — DESIGN.md §4).
+
+    train_step(params, opt_state, fed_state, batch)
+        -> (params, opt_state, fed_state, metrics)
+    """
+    init_opt, update = adamw(learning_rate)
+
+    def personalized_loss(params, delta, batch):
+        hidden, aux = model.forward(
+            params, cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            image_embeds=batch.get("image_embeds"),
+            remat=remat, return_hidden=True)
+        ids = fedtv.client_ids(hidden.shape[0], delta.shape[0])
+        hidden = fedtv.apply_gain(hidden, delta, ids)
+        logits = jnp.einsum("btd,vd->btv", hidden.astype(jnp.float32),
+                            params["embed"]["table"].astype(jnp.float32))
+        ce = model.lm_loss(logits, batch["targets"])
+        return ce + MOE_AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+    def train_step(params, opt_state, fed_state, batch):
+        (loss, parts), (grads, gdelta) = jax.value_and_grad(
+            personalized_loss, argnums=(0, 1), has_aux=True)(
+                params, fed_state["delta"], batch)
+        params, opt_state = update(grads, opt_state, params)
+        fed_state = fedtv.pd_update(fed_state, gdelta, fcfg)
+        metrics = {"loss": loss, **parts,
+                   "tv": fedtv.tv_value(fed_state)}
+        return params, opt_state, fed_state, metrics
+
+    return init_opt, train_step
+
+
+# ---------------------------------------------------------------------------
+# runnable CPU driver (examples/train_lm.py calls main with args)
+# ---------------------------------------------------------------------------
+
+def make_stream(cfg: ArchConfig, batch: int, seq: int, seed: int = 0):
+    if cfg.input_mode == "tokens":
+        # bigram-noise window well below the vocab so the stream has
+        # learnable structure (structure == vocab would be uniform noise)
+        structure = max(2, min(97, cfg.vocab_size // 8))
+        return TokenStream(vocab_size=cfg.vocab_size, seq_len=seq + 1,
+                           batch_size=batch, seed=seed, structure=structure)
+    return EmbeddingStream(d_model=cfg.d_model, vocab_size=cfg.vocab_size,
+                           seq_len=seq, batch_size=batch, seed=seed)
+
+
+def _batch_with_extras(cfg: ArchConfig, raw: dict) -> dict:
+    b = {k: jnp.asarray(v) for k, v in raw.items()}
+    if cfg.family == "vlm":
+        rng = np.random.default_rng(0)
+        b["image_embeds"] = jnp.asarray(rng.standard_normal(
+            (raw["targets"].shape[0], cfg.num_image_tokens,
+             cfg.vision_dim)).astype(np.float32) * 0.02)
+    return b
+
+
+def train_loop(cfg: ArchConfig, *, steps: int, batch: int, seq: int,
+               learning_rate: float = 3e-4, log_every: int = 10,
+               seed: int = 0, fedtv_cfg: fedtv.FedTVConfig | None = None):
+    """Run a real training loop on local devices.  Returns metric history."""
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"steps={steps} batch={batch} seq={seq}")
+
+    lr = cosine_schedule(learning_rate, warmup_steps=max(steps // 20, 5),
+                         total_steps=steps)
+    stream = make_stream(cfg, batch, seq, seed)
+
+    history = []
+    if fedtv_cfg is None:
+        init_opt, step_fn = make_train_step(cfg, learning_rate=lr,
+                                            remat=False)
+        opt = init_opt(params)
+        step_fn = jax.jit(step_fn)
+        fed = None
+    else:
+        init_opt, step_fn = make_fedtv_train_step(cfg, fedtv_cfg,
+                                                  learning_rate=lr,
+                                                  remat=False)
+        opt = init_opt(params)
+        step_fn = jax.jit(step_fn)
+        fed = fedtv.init_state(fedtv_cfg, cfg.d_model)
+
+    t0 = time.time()
+    for i in range(steps):
+        raw = stream.next_batch()
+        b = _batch_with_extras(cfg, raw)
+        if fed is None:
+            params, opt, metrics = step_fn(params, opt, b)
+        else:
+            params, opt, fed, metrics = step_fn(params, opt, fed, b)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            print(f"  step {i:4d}  loss {m['loss']:.4f}  ce {m['ce']:.4f}"
+                  + (f"  tv {m['tv']:.4f}" if "tv" in m else "")
+                  + f"  ({dt:.1f}s)")
+            history.append({"step": i, **m})
+    return params, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="repro training driver")
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--fedtv", action="store_true",
+                    help="enable nLasso TV personalization (paper technique)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    fcfg = fedtv.FedTVConfig() if args.fedtv else None
+    train_loop(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+               learning_rate=args.lr, fedtv_cfg=fcfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Shared neural layers for the model zoo (pure JAX, no flax).
+
+Parameters are plain nested dicts of jnp arrays; every layer is a pair of
+functions ``init_*(key, cfg) -> params`` and ``apply`` (the forward pass).
+All matmuls keep an explicit einsum spec so pjit sharding propagates
+predictably (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, H, T, D); positions: (T,) or (B, T)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None]   # (T, D/2)
+        ang = ang[None, None]                              # (1, 1, T, D/2)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        ang = ang[:, None]                                 # (B, 1, T, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Classic transformer sinusoidal embedding (MusicGen-style)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (self-attention; KV-cache logic lives in transformer.py)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, d_model, num_heads, num_kv_heads, head_dim, dtype,
+                   qk_norm: bool = False, out_dim: int | None = None,
+                   kv_in_dim: int | None = None):
+    ks = jax.random.split(key, 4)
+    out_dim = out_dim or d_model
+    kv_in = kv_in_dim or d_model
+    p = {
+        "wq": dense_init(ks[0], (d_model, num_heads, head_dim), dtype),
+        "wk": dense_init(ks[1], (kv_in, num_kv_heads, head_dim), dtype),
+        "wv": dense_init(ks[2], (kv_in, num_kv_heads, head_dim), dtype),
+        "wo": dense_init(ks[3], (num_heads, head_dim, out_dim), dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(head_dim, dtype)
+    return p
+
+
+def attention_qkv(params, x, kv_x=None, *, qk_norm=False):
+    """Project to q, k, v in (B, H, T, D) layout."""
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("btd,dhk->bhtk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bhtk", kv_x, params["wk"])
+    v = jnp.einsum("btd,dhk->bhtk", kv_x, params["wv"])
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    return q, k, v
+
+
+def attention_out(params, ctx):
+    """ctx: (B, H, T, D) -> (B, T, d_model)."""
+    return jnp.einsum("bhtk,hkd->btd", ctx, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, dtype, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(params, x):
+    up = jnp.einsum("btd,df->btf", x, params["w_up"])
+    if "w_gate" in params:
+        gate = jnp.einsum("btd,df->btf", x, params["w_gate"])
+        up = jax.nn.silu(gate) * up
+    else:
+        up = jax.nn.gelu(up)
+    return jnp.einsum("btf,fd->btd", up, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab, d_model, dtype):
+    return {"table": dense_init(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, x):
+    """Tied unembed: logits in f32 for a stable softmax/loss."""
+    return jnp.einsum("btd,vd->btv", x.astype(jnp.float32),
+                      params["table"].astype(jnp.float32))

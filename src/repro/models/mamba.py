@@ -1,0 +1,137 @@
+"""Mamba (S6 selective SSM) block — used by the Jamba hybrid architecture.
+
+Standard Mamba-1 layer (arXiv:2312.00752 as instantiated by Jamba,
+arXiv:2403.19887): in-projection to (x, z), depthwise causal conv, selective
+(data-dependent) dt/B/C, diagonal state-space scan with state
+(d_inner, d_state), gated output.  The recurrence runs as a lax.scan over
+time (compiled to a single fused while-loop); decode carries
+(conv_state, ssm_state) — O(1) in sequence length, which is what lets the
+hybrid run long_500k natively.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+
+D_CONV = 4
+
+
+def mamba_init(key, d_model, d_state, expand, dt_rank, dtype):
+    d_inner = expand * d_model
+    ks = jax.random.split(key, 7)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None],
+                 (d_inner, 1))
+    return {
+        "in_proj": nn.dense_init(ks[0], (d_model, 2 * d_inner), dtype),
+        "conv_w": nn.dense_init(ks[1], (D_CONV, d_inner), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": nn.dense_init(ks[2], (d_inner, dt_rank + 2 * d_state),
+                                dtype),
+        "dt_proj": nn.dense_init(ks[3], (dt_rank, d_inner), dtype),
+        "dt_bias": (jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (d_inner,)) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))))
+            ).astype(jnp.float32),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": nn.dense_init(ks[5], (d_inner, d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv1d.  x: (B, T, C); w: (K, C).
+
+    conv_state: (B, K-1, C) trailing context (zeros for prefill-from-start).
+    Returns (y, new_conv_state).
+    """
+    k = w.shape[0]
+    bsz = x.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((bsz, k - 1, x.shape[2]), x.dtype)
+    xe = jnp.concatenate([conv_state, x], axis=1)          # (B, T+K-1, C)
+    y = sum(xe[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return y + b[None, None], xe[:, -(k - 1):]
+
+
+def mamba_apply(params, x, *, d_state, dt_rank, cache=None):
+    """x: (B, T, d_model) -> (B, T, d_model), cache dict for decode."""
+    b, t, _ = x.shape
+    d_inner = params["out_proj"].shape[0]
+    xz = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)                      # (B, T, d_inner)
+
+    c = cache or {}
+    xin, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                   c.get("conv"))
+    xin = jax.nn.silu(xin)
+
+    proj = jnp.einsum("bti,ie->bte", xin, params["x_proj"])
+    dt_low = proj[..., :dt_rank]
+    bmat = proj[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    cmat = proj[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,ri->bti", dt_low, params["dt_proj"]).astype(
+            jnp.float32) + params["dt_bias"][None, None])    # (B, T, d_inner)
+
+    a = -jnp.exp(params["a_log"])                            # (d_inner, S)
+
+    h0 = c.get("ssm")
+    if h0 is None:
+        h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+
+    if os.environ.get("REPRO_LEGACY_SCAN"):
+        # baseline formulation (kept for §Perf before/after measurement):
+        # precomputes the full (B, T, I, S) discretized decay/input
+        da = jnp.exp(dt[..., None] * a[None, None])          # (B,T,I,S)
+        dbx = (dt[..., None] * bmat[:, :, None, :] *
+               xin.astype(jnp.float32)[..., None])
+
+        def step_legacy(h, inp):
+            da_t, dbx_t, c_t = inp
+            h = da_t * h + dbx_t
+            return h, jnp.einsum("bis,bs->bi", h, c_t)
+
+        xs = (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbx, 1, 0),
+              jnp.moveaxis(cmat, 1, 0))
+        h_fin, ys = jax.lax.scan(step_legacy, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1)                           # (B, T, I)
+        y = y + xin.astype(jnp.float32) * params["d_skip"][None, None]
+        y = y.astype(x.dtype) * jax.nn.silu(z)
+        out = jnp.einsum("bti,id->btd", y, params["out_proj"])
+        return out, {"conv": conv_state, "ssm": h_fin}
+
+    # The discretized (B, I, S) decay/input are formed PER STEP inside the
+    # scan body from the (B, I)/(B, S) step inputs.  Precomputing the full
+    # (B, T, I, S) da/dbx arrays looks natural but is catastrophic under
+    # remat: the checkpointed backward scan re-materializes the whole
+    # (T, B, I, S) f32 tensor inside the inner step loop (jamba x
+    # train_4k — EXPERIMENTS.md §Perf).
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp        # (B,I), (B,S), (B,S), (B,I)
+        da_t = jnp.exp(dt_t[:, :, None] * a[None])           # (B, I, S)
+        dbx_t = (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        h = da_t * h + dbx_t                                 # (B, I, S)
+        y = jnp.einsum("bis,bs->bi", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bmat, 1, 0),
+          jnp.moveaxis(cmat, 1, 0),
+          jnp.moveaxis(xin.astype(jnp.float32), 1, 0))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                               # (B, T, I)
+    y = y + xin.astype(jnp.float32) * params["d_skip"][None, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bti,id->btd", y, params["out_proj"])
+    return out, {"conv": conv_state, "ssm": h_fin}
+
+
+def init_cache(d_model, d_state, expand, batch, dtype):
+    d_inner = expand * d_model
+    return {
+        "conv": jnp.zeros((batch, D_CONV - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    }

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts layer: top-k router + grouped sort-based dispatch.
+
+Dispatch strategy (TPU-native, DESIGN.md §3 + EXPERIMENTS.md §Perf):
+tokens are processed in GROUPS along the leading batch dimension — the
+dimension the mesh shards over "data".  Within a group the token->expert
+assignments are sorted so each expert's tokens are contiguous, padded to a
+static per-group capacity C_g = ceil(k * N_g / E * capacity_factor), and
+the expert FFNs run as one batched einsum over the (G, E, C_g, d) buffer.
+
+Why groups: a GLOBAL argsort over the (sharded) token axis forces GSPMD
+to materialize cross-shard sorts (observed on qwen3-moe-235b x train_4k:
+~2.4 TB/chip of collective-permute + 7.9 TB of all-reduce per step).
+Grouped dispatch keeps router/sort/rank local to each data shard; the
+only cross-shard movement is the (G, E, C_g, d) dispatch buffer resharding
+from group-sharded to expert-sharded — which XLA lowers to the canonical
+MoE all-to-all.  The ``_hint`` sharding constraints pin exactly that
+layout (no-ops outside the launcher's activation policy).
+
+Compiled FLOPs stay proportional to *active* experts (plus capacity
+slack); overflowing tokens are dropped (standard capacity-based MoE) and
+a Switch-style auxiliary load-balance loss keeps the router near-uniform.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+
+
+def moe_init(key, d_model, d_ff, num_experts, dtype, router_dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": nn.dense_init(ks[0], (d_model, num_experts), router_dtype),
+        "w_gate": nn.dense_init(ks[1], (num_experts, d_model, d_ff), dtype),
+        "w_up": nn.dense_init(ks[2], (num_experts, d_model, d_ff), dtype),
+        "w_down": nn.dense_init(ks[3], (num_experts, d_ff, d_model), dtype),
+    }
+
+
+def _hint(x, kind: str):
+    from repro.launch import shardings as _sh
+    return _sh.hint(x, kind)
+
+
+def moe_apply_global(params, x, *, top_k: int, capacity_factor: float = 1.25):
+    """Baseline dispatch (kept for §Perf before/after): ONE global sort
+    over all B*T tokens.  Statistically slightly better packing, but the
+    global argsort over the data-sharded token axis forces cross-shard
+    sorts/replication under GSPMD (~2.4 TB/chip collective-permute on
+    qwen3-moe x train_4k).  Enable with REPRO_LEGACY_MOE=1."""
+    b, t, d = x.shape
+    e = params["router"].shape[1]
+    tokens = x.reshape(b * t, d)
+    n = b * t
+
+    logits = jnp.einsum("td,de->te", tokens.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    density = jnp.mean(jax.nn.one_hot(expert_idx, e), axis=(0, 1))
+    density_prob = jnp.mean(probs, axis=0)
+    aux_loss = e * jnp.sum(density * density_prob)
+
+    cap = int(max(1, round(top_k * n / e * capacity_factor)))
+    flat_expert = expert_idx.reshape(-1)
+    sort_idx = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[sort_idx]
+    group_start = jnp.searchsorted(sorted_expert, jnp.arange(e))
+    rank = jnp.arange(n * top_k) - group_start[sorted_expert]
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_expert * cap + rank, e * cap)
+    token_of = sort_idx // top_k
+
+    buf = jnp.zeros((e * cap + 1, d), tokens.dtype)
+    buf = buf.at[slot].set(tokens[token_of])
+    buf = buf[:-1].reshape(e, cap, d)
+    gate = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    act = jax.nn.silu(gate) * up
+    out_buf = jnp.einsum("ecf,efd->ecd", act, params["w_down"]).reshape(
+        e * cap, d)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((1, d), out_buf.dtype)], axis=0)
+    gathered = out_buf[slot]
+    gates_sorted = gate_vals.reshape(-1)[sort_idx]
+    contrib = gathered * gates_sorted[:, None].astype(gathered.dtype)
+    out = jnp.zeros((n, d), contrib.dtype).at[token_of].add(contrib)
+    metrics = {"aux_loss": aux_loss,
+               "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return out.reshape(b, t, d).astype(x.dtype), metrics
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25):
+    """x: (B, T, d) -> (B, T, d), plus aux metrics dict.
+
+    Groups == the leading (data-sharded) batch dim; all dispatch indexing
+    is per-group, so it lowers without cross-shard sorts.
+    """
+    if os.environ.get("REPRO_LEGACY_MOE"):
+        return moe_apply_global(params, x, top_k=top_k,
+                                capacity_factor=capacity_factor)
+    g, t, d = x.shape                     # groups x tokens-per-group x d
+    e = params["router"].shape[1]
+    n = t                                  # tokens per group
+
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, N, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)      # (G, N, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (Switch-style, over all groups) ----
+    density = jnp.mean(jax.nn.one_hot(expert_idx, e), axis=(0, 1, 2))
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    aux_loss = e * jnp.sum(density * density_prob)
+
+    # ---- per-group sort-based dispatch into (G, E, C, d) ----
+    cap = int(max(1, round(top_k * n / e * capacity_factor)))
+    flat_expert = expert_idx.reshape(g, n * top_k)           # (G, N*k)
+    sort_idx = jnp.argsort(flat_expert, axis=1)              # local sort
+    sorted_expert = jnp.take_along_axis(flat_expert, sort_idx, axis=1)
+    # rank of each entry within its expert's run (per group)
+    group_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_expert)
+    rank = jnp.arange(n * top_k)[None] - jnp.take_along_axis(
+        group_start, sorted_expert, axis=1)
+    keep = rank < cap                                        # (G, N*k)
+    slot_c = jnp.clip(rank, 0, cap - 1)
+    token_of = sort_idx // top_k                             # (G, N*k)
+    gates_sorted = jnp.take_along_axis(
+        gate_vals.reshape(g, n * top_k), sort_idx, axis=1)
+    gates_sorted = jnp.where(keep, gates_sorted, 0.0)        # drop -> 0
+
+    # Slot-indexed metadata (token id + gate per (e, c) slot), built by a
+    # small (G, E, C) scatter.  Dropped entries carry gate 0 and write
+    # zero-valued updates, so clipping their slot is harmless.
+    tok_of_slot = jax.vmap(
+        lambda t_, e_, c_, k_: jnp.zeros((e, cap), jnp.int32)
+        .at[e_, c_].add(jnp.where(k_, t_, 0)))(
+            token_of, sorted_expert, slot_c, keep)           # (G, E, C)
+    gate_of_slot = jax.vmap(
+        lambda gt, e_, c_: jnp.zeros((e, cap), jnp.float32)
+        .at[e_, c_].add(gt))(gates_sorted, sorted_expert, slot_c)
+
+    # dispatch: gather tokens per slot (shard-local: x is group-sharded,
+    # tok_of_slot indexes within the group)
+    buf = jax.vmap(lambda xx, tt: xx[tt])(x, tok_of_slot)    # (G, E, C, d)
+    buf = buf * (gate_of_slot[..., None] > 0).astype(buf.dtype)
+    buf = _hint(buf, "moe_buf")          # group-sharded -> +expert-sharded
+
+    # ---- expert FFNs: batched over the (sharded) expert axis ----
+    gate = jnp.einsum("gecd,edf->gecf", buf, params["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    act = jax.nn.silu(gate) * up
+    out_buf = jnp.einsum("gecf,efd->gecd", act, params["w_down"])
+
+    # ---- combine: slot-indexed scatter-add back into (G, N, d).  The
+    # updates are expert-sharded, so GSPMD emits per-shard partial
+    # scatters + ONE (G, N, d) all-reduce per layer — instead of
+    # replicating the whole (G, E, C, d) buffer over "model".
+    vals = out_buf * gate_of_slot[..., None].astype(out_buf.dtype)
+    out = jax.vmap(lambda tt, vv: jnp.zeros((n, d), vv.dtype)
+                   .at[tt.reshape(-1)].add(vv.reshape(-1, d)))(
+        tok_of_slot, vals)
+    out = _hint(out, "hidden")
+
+    metrics = {
+        "aux_loss": aux_loss,
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.astype(x.dtype), metrics

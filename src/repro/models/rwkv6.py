@@ -1,0 +1,144 @@
+"""RWKV6 "Finch" blocks (arXiv:2404.05892) — attention-free SSM family.
+
+Hallmarks implemented faithfully:
+  * token-shift channel mixing (mu interpolation with the previous token),
+  * **data-dependent decay** w_t = exp(-exp(w0 + LoRA(x_t))) per channel,
+  * bonus term u on the current token,
+  * multi-head WKV state S in R^{Dk x Dv} per head, group-normed output,
+  * squared-ReLU channel-mix FFN.
+
+The sequence scan runs through kernels/rwkv6_scan.py (chunked Pallas kernel
+on TPU, jnp scan oracle on CPU).  Decode carries (shift_x, wkv_state) — an
+O(1)-memory cache, which is why rwkv6 runs the long_500k shape natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import layers as nn
+
+DECAY_LORA = 64
+
+
+def time_mix_init(key, d_model, num_heads, head_dim, dtype):
+    ks = jax.random.split(key, 10)
+    h = num_heads * head_dim
+    return {
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_v": jnp.full((d_model,), 0.5, dtype),
+        "mu_w": jnp.full((d_model,), 0.5, dtype),
+        "mu_g": jnp.full((d_model,), 0.5, dtype),
+        "w_r": nn.dense_init(ks[0], (d_model, h), dtype),
+        "w_k": nn.dense_init(ks[1], (d_model, h), dtype),
+        "w_v": nn.dense_init(ks[2], (d_model, h), dtype),
+        "w_g": nn.dense_init(ks[3], (d_model, h), dtype),
+        "w_o": nn.dense_init(ks[4], (h, d_model), dtype),
+        # data-dependent decay: w0 + B tanh(A x)
+        "decay_a": nn.dense_init(ks[5], (d_model, DECAY_LORA), dtype),
+        "decay_b": nn.dense_init(ks[6], (DECAY_LORA, h), dtype),
+        "decay_w0": (jnp.linspace(-6.0, -1.0, h)).astype(dtype),
+        "bonus_u": nn.dense_init(ks[7], (num_heads, head_dim), jnp.float32,
+                                 scale=1.0),
+        "ln_x": nn.rmsnorm_init(h, dtype),
+    }
+
+
+def _shift(x, last):
+    """Token shift: concat(last_token, x[:, :-1])."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(params, x, num_heads, head_dim, *, shift_state=None,
+             wkv_state=None):
+    """x: (B, T, d).  Returns (y, (new_shift, new_wkv))."""
+    b, t, d = x.shape
+    last = shift_state if shift_state is not None else jnp.zeros(
+        (b, d), x.dtype)
+    xs = _shift(x, last)
+
+    def mix(mu):
+        return x + (xs - x) * mu
+
+    r = jnp.einsum("btd,dh->bth", mix(params["mu_r"]), params["w_r"])
+    k = jnp.einsum("btd,dh->bth", mix(params["mu_k"]), params["w_k"])
+    v = jnp.einsum("btd,dh->bth", mix(params["mu_v"]), params["w_v"])
+    g = jax.nn.silu(jnp.einsum("btd,dh->bth", mix(params["mu_g"]),
+                               params["w_g"]))
+    # data-dependent decay (Finch):
+    dlow = jnp.tanh(jnp.einsum("btd,dl->btl", mix(params["mu_w"]),
+                               params["decay_a"]))
+    dexp = params["decay_w0"][None, None] + jnp.einsum(
+        "btl,lh->bth", dlow, params["decay_b"])
+    w = jnp.exp(-jnp.exp(dexp.astype(jnp.float32)))            # (B, T, H*Dk)
+
+    def heads(z):
+        return z.reshape(b, t, num_heads, head_dim).transpose(0, 2, 1, 3)
+
+    y, new_state = kops.rwkv6(
+        heads(r).astype(jnp.float32), heads(k).astype(jnp.float32),
+        heads(v).astype(jnp.float32), heads(w),
+        params["bonus_u"], wkv_state)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, num_heads * head_dim)
+    y = nn.rmsnorm(params["ln_x"], y.astype(x.dtype)) * g
+    out = jnp.einsum("bth,hd->btd", y, params["w_o"])
+    return out, (x[:, -1], new_state)
+
+
+def channel_mix_init(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "w_k": nn.dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_v": nn.dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+
+
+def channel_mix(params, x, *, shift_state=None):
+    b, t, d = x.shape
+    last = shift_state if shift_state is not None else jnp.zeros(
+        (b, d), x.dtype)
+    xs = _shift(x, last)
+    xk = x + (xs - x) * params["mu_k"]
+    k = jnp.einsum("btd,df->btf", xk, params["w_k"])
+    k = jnp.square(jax.nn.relu(k))
+    out = jnp.einsum("btf,fd->btd", k, params["w_v"])
+    return out, x[:, -1]
+
+
+def block_init(key, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dtype),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dtype),
+        "time": time_mix_init(ks[0], cfg.d_model, cfg.num_heads,
+                              cfg.head_dim, dtype),
+        "chan": channel_mix_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def block_apply(params, x, cfg, cache=None):
+    """cache: None or dict(time_shift, wkv, chan_shift)."""
+    c = cache or {}
+    att, (tshift, wkv) = time_mix(
+        params["time"], nn.rmsnorm(params["ln1"], x), cfg.num_heads,
+        cfg.head_dim, shift_state=c.get("time_shift"),
+        wkv_state=c.get("wkv"))
+    x = x + att
+    ffn, cshift = channel_mix(params["chan"], nn.rmsnorm(params["ln2"], x),
+                              shift_state=c.get("chan_shift"))
+    x = x + ffn
+    new_cache = {"time_shift": tshift, "wkv": wkv, "chan_shift": cshift}
+    return x, new_cache
+
+
+def init_cache(cfg, batch, dtype):
+    h = cfg.num_heads * cfg.head_dim
+    return {
+        "time_shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.head_dim),
+                         jnp.float32),
+        "chan_shift": jnp.zeros((batch, cfg.d_model), dtype),
+    }

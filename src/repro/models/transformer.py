@@ -1,0 +1,591 @@
+"""Decoder assembly for every architecture family in the zoo.
+
+A model is a sequence of *stages*; each stage is a ``lax.scan`` over a stack
+of identical (super-)blocks, which keeps the HLO size O(1) in depth:
+
+  dense / moe / audio : scan over N identical decoder layers
+  ssm (rwkv6)         : scan over N rwkv blocks
+  hybrid (jamba)      : scan over N/8 super-blocks of (7 mamba + 1 attn),
+                        MoE FFN on odd layers (arXiv:2403.19887 layout)
+  vlm (llama-vision)  : scan over N/5 super-blocks of (4 self + 1 gated
+                        cross-attention on image embeddings)
+
+Three entry points (used by launch/{train,serve,dryrun}.py):
+  * forward(...)            — full-sequence teacher-forced logits (train),
+  * prefill(...)            — forward + KV/state cache population,
+  * decode_step(...)        — one token with cache (serve_step).
+
+KV caches support "full" layout (write at position, decode_32k) and
+"window" layout (ring buffer via roll, long_500k sliding-window).
+SSM/hybrid caches are O(1) in context.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.models import layers as nn
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _hint(x, kind: str):
+    """Activation-sharding constraint (no-op unless the launcher installed a
+    policy — see launch/shardings.activation_hints)."""
+    from repro.launch import shardings as _sh
+    return _sh.hint(x, kind)
+
+
+# ---------------------------------------------------------------------------
+# attention sub-layer (shared by dense/moe/audio/vlm/hybrid)
+# ---------------------------------------------------------------------------
+
+def _decode_attend(q, ck, cv, valid_mask):
+    """Single-token attention over a cache.  q: (B,H,1,D); ck/cv (B,Hk,S,D).
+
+    Sequence-parallel over the cache (flash-decode): q replicated, scores
+    sharded on S (see shardings "decode_q"/"decode_logits" hints)."""
+    group = q.shape[1] // ck.shape[1]
+    kk = jnp.repeat(ck, group, axis=1)
+    vv = jnp.repeat(cv, group, axis=1)
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    logits = _hint(jnp.where(valid_mask[None, None, None, :], logits, -1e30),
+                   "decode_logits")
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def self_attn_apply(p, x, cfg: ArchConfig, *, cache=None, window=0,
+                    cache_mode="full", start_pos=0):
+    """Returns (out, new_cache).  cache None -> full-sequence causal."""
+    b, t, _ = x.shape
+    q, k, v = nn.attention_qkv(p, x, qk_norm=cfg.qk_norm)
+
+    if cache is None:
+        if cfg.pos_embed == "rope":
+            pos = jnp.arange(t) + start_pos
+            q = nn.apply_rope(q, pos, cfg.rope_theta)
+            k = nn.apply_rope(k, pos, cfg.rope_theta)
+        ctx = kops.attention(q, k, v, causal=True,
+                             window=window if window else None)
+        return nn.attention_out(p, ctx), None
+
+    pos = cache["pos"]                    # scalar int32: index being written
+    if cfg.pos_embed == "rope":
+        q = nn.apply_rope(q, jnp.arange(t) + pos, cfg.rope_theta)
+        k = nn.apply_rope(k, jnp.arange(t) + pos, cfg.rope_theta)
+
+    if t > 1:
+        # prefill: causal attention over the current chunk (pos == 0 start);
+        # flash-style blocked softmax so (T, S) logits never materialize.
+        ctx = kops.attention(q, k, v, causal=True,
+                             window=window if window else None)
+        if cache_mode == "full":
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+        else:  # ring buffer: keep the trailing window
+            w = cache["k"].shape[2]
+            if t >= w:
+                ck = k[:, :, -w:].astype(cache["k"].dtype)
+                cv = v[:, :, -w:].astype(cache["v"].dtype)
+            else:
+                ck = jnp.roll(cache["k"], -t, axis=2)
+                cv = jnp.roll(cache["v"], -t, axis=2)
+                ck = jax.lax.dynamic_update_slice(
+                    ck, k.astype(ck.dtype), (0, 0, w - t, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cv, v.astype(cv.dtype), (0, 0, w - t, 0))
+        return nn.attention_out(p, ctx), {"k": ck, "v": cv, "pos": pos}
+
+    if cache_mode == "full":
+        s = cache["k"].shape[2]
+        # one-hot masked write instead of dynamic_update_slice: a DUS at a
+        # traced position into the sequence-SHARDED cache forces GSPMD to
+        # all-gather the whole cache per layer (2 x 1 GB observed on
+        # decode_32k); the elementwise select shards cleanly and costs one
+        # local cache rewrite instead (EXPERIMENTS.md §Perf-extra)
+        positions = jnp.arange(s)
+        wmask = ((positions >= pos) &
+                 (positions < pos + t))[None, None, :, None]
+        if t == 1:
+            # (B, H, 1, hd) broadcasts along the sharded seq dim — no
+            # gather/scatter anywhere in the cache update
+            ck = jnp.where(wmask, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(wmask, v.astype(cache["v"].dtype), cache["v"])
+        else:
+            src = jnp.clip(positions - pos, 0, t - 1)
+            ck = jnp.where(wmask, jnp.take(k.astype(cache["k"].dtype), src,
+                                           axis=2), cache["k"])
+            cv = jnp.where(wmask, jnp.take(v.astype(cache["v"].dtype), src,
+                                           axis=2), cache["v"])
+        valid = jnp.arange(s) <= (pos + t - 1)
+        if window:
+            valid &= jnp.arange(s) > (pos + t - 1 - window)
+    else:  # ring buffer (sliding window)
+        w = cache["k"].shape[2]
+        ck = jnp.roll(cache["k"], -t, axis=2)
+        cv = jnp.roll(cache["v"], -t, axis=2)
+        ck = jax.lax.dynamic_update_slice(
+            ck, k.astype(ck.dtype), (0, 0, w - t, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, v.astype(cv.dtype), (0, 0, w - t, 0))
+        n_valid = jnp.minimum(pos + t, w)
+        valid = jnp.arange(w) >= (w - n_valid)
+
+    ctx = _decode_attend(_hint(q, "decode_q"), ck, cv, valid)
+    return nn.attention_out(p, ctx), {"k": ck, "v": cv, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# decoder layer (attention + FFN/MoE) — dense, moe, audio families
+# ---------------------------------------------------------------------------
+
+def decoder_layer_init(key, cfg: ArchConfig, *, use_moe: bool):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dt),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dt),
+        "attn": nn.attention_init(ks[0], cfg.d_model, cfg.num_heads,
+                                  cfg.num_kv_heads, cfg.resolved_head_dim,
+                                  dt, qk_norm=cfg.qk_norm),
+    }
+    if use_moe:
+        p["moe"] = moe_mod.moe_init(ks[1], cfg.d_model, cfg.d_ff,
+                                    cfg.num_experts, dt)
+    else:
+        p["mlp"] = nn.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def decoder_layer_apply(p, x, cfg: ArchConfig, *, cache=None, window=0,
+                        cache_mode="full"):
+    att, new_cache = self_attn_apply(p["attn"], nn.rmsnorm(p["ln1"], x), cfg,
+                                     cache=cache, window=window,
+                                     cache_mode=cache_mode)
+    x = x + att
+    h = nn.rmsnorm(p["ln2"], x)
+    if "moe" in p:
+        ffn, metrics = moe_mod.moe_apply(
+            p["moe"], h, top_k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor)
+        aux = metrics["aux_loss"]
+    else:
+        ffn = nn.mlp(p["mlp"], h)
+        aux = jnp.float32(0.0)
+    return x + ffn, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# jamba super-block: (attn_every) layers, one attention in the middle
+# ---------------------------------------------------------------------------
+
+def jamba_block_init(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    n = cfg.attn_every
+    attn_idx = n // 2
+    keys = jax.random.split(key, n)
+    layers = []
+    for j in range(n):
+        kj = jax.random.split(keys[j], 3)
+        layer = {
+            "ln1": nn.rmsnorm_init(cfg.d_model, dt),
+            "ln2": nn.rmsnorm_init(cfg.d_model, dt),
+        }
+        if j == attn_idx:
+            layer["attn"] = nn.attention_init(
+                kj[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dt, qk_norm=cfg.qk_norm)
+        else:
+            layer["mamba"] = mamba_mod.mamba_init(
+                kj[0], cfg.d_model, cfg.mamba_d_state, cfg.mamba_expand,
+                cfg.mamba_dt_rank_resolved, dt)
+        if cfg.num_experts and j % cfg.moe_every == cfg.moe_every - 1:
+            layer["moe"] = moe_mod.moe_init(kj[1], cfg.d_model, cfg.d_ff,
+                                            cfg.num_experts, dt)
+        else:
+            layer["mlp"] = nn.mlp_init(kj[1], cfg.d_model, cfg.d_ff, dt)
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def jamba_block_apply(p, x, cfg: ArchConfig, *, cache=None, window=0,
+                      cache_mode="full"):
+    aux_total = jnp.float32(0.0)
+    new_caches = []
+    for j, layer in enumerate(p["layers"]):
+        c = cache["layers"][j] if cache is not None else None
+        h = nn.rmsnorm(layer["ln1"], x)
+        if "attn" in layer:
+            att, nc = self_attn_apply(layer["attn"], h, cfg, cache=c,
+                                      window=window, cache_mode=cache_mode)
+        else:
+            att, nc = mamba_mod.mamba_apply(
+                layer["mamba"], h, d_state=cfg.mamba_d_state,
+                dt_rank=cfg.mamba_dt_rank_resolved, cache=c)
+        x = x + att
+        h2 = nn.rmsnorm(layer["ln2"], x)
+        if "moe" in layer:
+            ffn, metrics = moe_mod.moe_apply(
+                layer["moe"], h2, top_k=cfg.experts_per_token,
+                capacity_factor=cfg.capacity_factor)
+            aux_total = aux_total + metrics["aux_loss"]
+        else:
+            ffn = nn.mlp(layer["mlp"], h2)
+        x = x + ffn
+        new_caches.append(nc)
+    return x, ({"layers": new_caches} if cache is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# vlm super-block: (cross_attn_every - 1) self layers + 1 cross layer
+# ---------------------------------------------------------------------------
+
+def vlm_block_init(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    n = cfg.cross_attn_every
+    keys = jax.random.split(key, n)
+    layers = []
+    for j in range(n):
+        kj = jax.random.split(keys[j], 3)
+        layer = {
+            "ln1": nn.rmsnorm_init(cfg.d_model, dt),
+            "ln2": nn.rmsnorm_init(cfg.d_model, dt),
+            "mlp": nn.mlp_init(kj[1], cfg.d_model, cfg.d_ff, dt),
+        }
+        if j == n - 1:   # gated cross-attention layer
+            layer["xattn"] = nn.attention_init(
+                kj[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dt)
+            layer["gate"] = jnp.zeros((), jnp.float32)
+        else:
+            layer["attn"] = nn.attention_init(
+                kj[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dt, qk_norm=cfg.qk_norm)
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def vlm_block_apply(p, x, cfg: ArchConfig, *, image_x=None, cache=None,
+                    window=0, cache_mode="full"):
+    new_caches = []
+    for j, layer in enumerate(p["layers"]):
+        c = cache["layers"][j] if cache is not None else None
+        h = nn.rmsnorm(layer["ln1"], x)
+        if "xattn" in layer:
+            if c is not None and x.shape[1] == 1 and "ik" in c:
+                # decode: image K/V were projected once at prefill and live
+                # in the cache — skip the vision_proj + K/V projections of
+                # 1600 patches per generated token (beyond-paper perf fix;
+                # EXPERIMENTS.md §Perf-extra)
+                q = jnp.einsum("btd,dhk->bhtk", h, layer["xattn"]["wq"])
+                ctx = kops.attention(q, c["ik"], c["iv"], causal=False)
+                nc = c
+            else:
+                q, k, v = nn.attention_qkv(layer["xattn"], h, image_x)
+                ctx = kops.attention(q, k, v, causal=False)
+                nc = ({"ik": k.astype(_dtype(cfg)),
+                       "iv": v.astype(_dtype(cfg))} if c is not None else None)
+            att = nn.attention_out(layer["xattn"], ctx)
+            att = att * jnp.tanh(layer["gate"]).astype(att.dtype)
+        else:
+            att, nc = self_attn_apply(layer["attn"], h, cfg, cache=c,
+                                      window=window, cache_mode=cache_mode)
+        x = x + att
+        x = x + nn.mlp(layer["mlp"], nn.rmsnorm(layer["ln2"], x))
+        new_caches.append(nc)
+    return x, ({"layers": new_caches} if cache is not None else None), \
+        jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig):
+    dt = _dtype(cfg)
+    k_embed, k_stack, k_extra = jax.random.split(key, 3)
+    params: dict[str, Any] = {"final_norm": nn.rmsnorm_init(cfg.d_model, dt)}
+    if cfg.input_mode == "tokens":
+        params["embed"] = nn.embedding_init(k_embed, cfg.vocab_size,
+                                            cfg.d_model, dt)
+    else:
+        # embeddings-input backbone still needs an output head
+        params["embed"] = nn.embedding_init(k_embed, cfg.vocab_size,
+                                            cfg.d_model, dt)
+    if cfg.family == "vlm":
+        params["vision_proj"] = {
+            "w": nn.dense_init(k_extra, (cfg.vision_dim, cfg.d_model), dt)}
+
+    n_blocks, block_init = _stage_plan(cfg)
+    keys = jax.random.split(k_stack, n_blocks)
+    params["blocks"] = jax.vmap(block_init)(keys)
+    return params
+
+
+def _stage_plan(cfg: ArchConfig):
+    """Returns (num_scanned_blocks, per-block init fn)."""
+    if cfg.family == "ssm":
+        return cfg.num_layers, functools.partial(
+            rwkv_mod.block_init, cfg=cfg, dtype=_dtype(cfg))
+    if cfg.family == "hybrid":
+        assert cfg.num_layers % cfg.attn_every == 0
+        return cfg.num_layers // cfg.attn_every, functools.partial(
+            jamba_block_init, cfg=cfg)
+    if cfg.family == "vlm":
+        assert cfg.num_layers % cfg.cross_attn_every == 0
+        return cfg.num_layers // cfg.cross_attn_every, functools.partial(
+            vlm_block_init, cfg=cfg)
+    use_moe = cfg.num_experts > 0
+    return cfg.num_layers, functools.partial(
+        decoder_layer_init, cfg=cfg, use_moe=use_moe)
+
+
+def _block_apply_fn(cfg: ArchConfig, cache_mode: str = "full"):
+    if cfg.family == "ssm":
+        def fn(p, x, cache, image_x, window):
+            x, nc = rwkv_mod.block_apply(p, x, cfg, cache=cache)
+            return x, nc, jnp.float32(0.0)
+        return fn
+    if cfg.family == "hybrid":
+        def fn(p, x, cache, image_x, window):
+            return jamba_block_apply(p, x, cfg, cache=cache, window=window,
+                                     cache_mode=cache_mode)
+        return fn
+    if cfg.family == "vlm":
+        def fn(p, x, cache, image_x, window):
+            return vlm_block_apply(p, x, cfg, image_x=image_x, cache=cache,
+                                   window=window, cache_mode=cache_mode)
+        return fn
+
+    def fn(p, x, cache, image_x, window):
+        return decoder_layer_apply(p, x, cfg, cache=cache, window=window,
+                                   cache_mode=cache_mode)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# forward / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ArchConfig, tokens=None, embeds=None):
+    if cfg.input_mode == "tokens":
+        x = nn.embed(params["embed"], tokens)
+        t = tokens.shape[1]
+    else:
+        x = embeds.astype(_dtype(cfg))
+        t = embeds.shape[1]
+    if cfg.pos_embed == "sinusoidal":
+        x = x + nn.sinusoidal_positions(jnp.arange(t), cfg.d_model)[None] \
+            .astype(x.dtype)
+    return _hint(x, "hidden")
+
+
+def _run_stack(params, cfg: ArchConfig, x, *, cache=None, image_x=None,
+               window=0, remat=False, cache_mode="full"):
+    fn = _block_apply_fn(cfg, cache_mode)
+
+    def body(carry, pc):
+        x, aux = carry
+        p, c = pc
+        x, nc, a = fn(p, x, c, image_x, window)
+        return (_hint(x, "hidden"), aux + a), nc
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    layer_cache = cache["layers"] if cache is not None else None
+    if layer_cache is None:
+        def body_nc(carry, p):
+            x, aux = carry
+            x, _, a = fn(p, x, None, image_x, window)
+            return (_hint(x, "hidden"), aux + a), None
+        if remat:
+            body_nc = jax.checkpoint(body_nc)
+        (x, aux), _ = jax.lax.scan(body_nc, (x, jnp.float32(0.0)),
+                                   params["blocks"])
+        return x, None, aux
+
+    (x, aux), new_layer_cache = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (params["blocks"], layer_cache))
+    new_cache = dict(cache)
+    new_cache["layers"] = new_layer_cache
+    return x, new_cache, aux
+
+
+def forward(params, cfg: ArchConfig, tokens=None, embeds=None,
+            image_embeds=None, *, window=0, remat=False,
+            return_hidden=False):
+    """Full-sequence teacher-forced logits: (B, T, vocab) f32, aux loss.
+
+    ``return_hidden=True`` returns the final-norm hidden states instead of
+    logits — used by the FedTV personalization wrapper (core/fedtv.py) to
+    apply per-client gains before the unembed.
+    """
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    image_x = None
+    if cfg.family == "vlm":
+        image_x = jnp.einsum("bpe,ed->bpd", image_embeds.astype(_dtype(cfg)),
+                             params["vision_proj"]["w"])
+    x, _, aux = _run_stack(params, cfg, x, image_x=image_x, window=window,
+                           remat=remat)
+    x = nn.rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        return x, aux
+    return _hint(nn.unembed(params["embed"], x), "logits"), aux
+
+
+def prefill(params, cfg: ArchConfig, tokens=None, embeds=None,
+            image_embeds=None, cache=None, *, window=0, cache_mode="full"):
+    """Inference prefill: full-sequence forward that also populates the
+    decode cache.  Returns (last-position logits (B, 1, vocab) f32, cache).
+
+    ``cache`` must be a fresh init_cache(...) pytree (pos == 0).
+    """
+    x = _embed_inputs(params, cfg, tokens, embeds)
+    t = x.shape[1]
+    image_x = None
+    if cfg.family == "vlm":
+        image_x = jnp.einsum("bpe,ed->bpd", image_embeds.astype(_dtype(cfg)),
+                             params["vision_proj"]["w"])
+    cache = _sync_layer_pos(cache)
+    x, new_cache, _ = _run_stack(params, cfg, x, cache=cache,
+                                 image_x=image_x, window=window,
+                                 cache_mode=cache_mode)
+    x = nn.rmsnorm(params["final_norm"], x[:, -1:])
+    logits = _hint(nn.unembed(params["embed"], x), "logits")
+    new_cache["pos"] = cache["pos"] + t
+    return logits, new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, *,
+               mode: str = "full"):
+    """Build an all-zeros decode cache pytree (ShapeDtypeStruct-compatible)."""
+    dt = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+
+    def kv():
+        return {"k": jnp.zeros((batch, cfg.num_kv_heads, cache_len, hd), dt),
+                "v": jnp.zeros((batch, cfg.num_kv_heads, cache_len, hd), dt),
+                "pos": jnp.int32(0)}
+
+    if cfg.family == "ssm":
+        per_layer = [rwkv_mod.init_cache(cfg, batch, dt)
+                     for _ in range(cfg.num_layers)]
+    elif cfg.family == "hybrid":
+        n = cfg.num_layers // cfg.attn_every
+        attn_idx = cfg.attn_every // 2
+        per_layer = []
+        for _ in range(n):
+            layers = []
+            for j in range(cfg.attn_every):
+                if j == attn_idx:
+                    layers.append(kv())
+                else:
+                    layers.append(mamba_mod.init_cache(
+                        cfg.d_model, cfg.mamba_d_state, cfg.mamba_expand,
+                        batch, dt))
+            per_layer.append({"layers": layers})
+    elif cfg.family == "vlm":
+        n = cfg.num_layers // cfg.cross_attn_every
+        per_layer = []
+        for _ in range(n):
+            layers = [kv() for _ in range(cfg.cross_attn_every - 1)]
+            # cross layer: projected image K/V, written once at prefill
+            layers.append({
+                "ik": jnp.zeros((batch, cfg.num_kv_heads,
+                                 cfg.num_image_tokens, hd), dt),
+                "iv": jnp.zeros((batch, cfg.num_kv_heads,
+                                 cfg.num_image_tokens, hd), dt)})
+            per_layer.append({"layers": layers})
+    else:
+        per_layer = [kv() for _ in range(cfg.num_layers)]
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer) \
+        if len(per_layer) > 1 else jax.tree.map(
+            lambda x: x[None], per_layer[0])
+    return {"pos": jnp.int32(0), "layers": stacked}
+
+
+def _sync_layer_pos(cache):
+    """Broadcast the top-level position into every layer's kv cache."""
+    pos = cache["pos"]
+
+    def fix(sub):
+        sub = dict(sub)
+        sub["pos"] = jnp.broadcast_to(pos, sub["pos"].shape).astype(
+            sub["pos"].dtype)
+        return sub
+    # walk manually: caches are nests of dict/list
+    def walk(node):
+        if isinstance(node, dict):
+            if "k" in node and "pos" in node:
+                return fix(node)
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+    new = dict(cache)
+    new["layers"] = walk(cache["layers"])
+    return new
+
+
+def decode_step(params, cfg: ArchConfig, tokens=None, embeds=None,
+                image_embeds=None, cache=None, *, window=0,
+                cache_mode="full"):
+    """serve_step: ONE new token per sequence.  tokens: (B, 1) int32.
+
+    Returns (logits (B, 1, vocab) f32, new_cache).
+    """
+    x = _embed_inputs_decode(params, cfg, tokens, embeds, cache["pos"])
+    # vlm: image K/V come from the cache (projected at prefill) — the
+    # vision projection is NOT recomputed per generated token
+    image_x = None
+    cache = _sync_layer_pos(cache)
+    x, new_cache, _ = _run_stack(params, cfg, x, cache=cache,
+                                 image_x=image_x, window=window,
+                                 cache_mode=cache_mode)
+    x = nn.rmsnorm(params["final_norm"], x)
+    logits = _hint(nn.unembed(params["embed"], x), "logits")
+    new_cache["pos"] = cache["pos"] + 1
+    return logits, new_cache
+
+
+def _embed_inputs_decode(params, cfg, tokens, embeds, pos):
+    if cfg.input_mode == "tokens":
+        x = nn.embed(params["embed"], tokens)
+    else:
+        x = embeds.astype(_dtype(cfg))
+    if cfg.pos_embed == "sinusoidal":
+        x = x + nn.sinusoidal_positions(pos[None].astype(jnp.float32),
+                                        cfg.d_model)[None].astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jnp.ndarray, targets: jnp.ndarray,
+            mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token cross entropy.  logits (B,T,V) f32, targets (B,T)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

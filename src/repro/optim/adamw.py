@@ -1,0 +1,80 @@
+"""AdamW optimizer in plain JAX (optax is not available in this env).
+
+Moments are kept in float32 regardless of parameter dtype (bf16 params +
+f32 moments is the memory layout assumed by the dry-run memory analysis,
+see EXPERIMENTS.md §Dry-run).  The update math runs in f32 and casts back.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+def adamw(learning_rate: float | Callable, *, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip: float = 1.0):
+    """Returns (init_fn, update_fn)."""
+
+    def lr_at(step):
+        if callable(learning_rate):
+            return learning_rate(step)
+        return learning_rate
+
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        # global-norm clip
+        if grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) * scale, grads)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state.v, grads)
+        mhat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+        vhat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+        lr = lr_at(step)
+
+        def upd(p, m_, v_):
+            delta = (m_ * mhat_scale) / (
+                jnp.sqrt(v_ * vhat_scale) + eps)
+            delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v)
+
+    return init, update
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(
+            jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return lr

@@ -1,0 +1,128 @@
+"""Distributed (shard_map) nLasso solver tests.
+
+The sharded message-passing solver must agree with the single-program
+solver exactly (same fixed-point iteration, different communication
+pattern).  Multi-device behaviour is exercised in a subprocess with 8
+virtual host devices so the main pytest process keeps 1 device (the brief
+requires smoke tests to see exactly one).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.distributed import shard_problem, solve_and_unpermute
+from repro.core.graph import sbm_graph
+from repro.core.nlasso import nlasso
+from repro.core.partition import (block_partition, cluster_partition,
+                                  plan_partition, permute_node_array,
+                                  unpermute_node_array)
+from repro.data.synthetic import make_sbm_regression
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_sbm_regression(seed=3, cluster_sizes=(24, 24), p_in=0.5,
+                               p_out=5e-3, num_labeled=12)
+
+
+def test_sharded_matches_reference_single_shard(ds):
+    mesh = make_host_mesh(1, 1)
+    w_sharded = solve_and_unpermute(ds.graph, ds.data, mesh, lam=1e-3,
+                                    num_iters=150)
+    ref = nlasso(ds.graph, ds.data, lam=1e-3, num_iters=150)
+    np.testing.assert_allclose(w_sharded, np.asarray(ref.w), atol=2e-4)
+
+
+def test_boundary_comm_matches_dense(ds):
+    mesh = make_host_mesh(1, 1)
+    w_dense = solve_and_unpermute(ds.graph, ds.data, mesh, lam=1e-3,
+                                  num_iters=100, comm="dense")
+    w_bnd = solve_and_unpermute(ds.graph, ds.data, mesh, lam=1e-3,
+                                num_iters=100, comm="boundary")
+    np.testing.assert_allclose(w_bnd, w_dense, atol=2e-4)
+
+
+def test_partition_plan_roundtrip(ds):
+    g = ds.graph
+    assign = cluster_partition(g, 4)
+    plan = plan_partition(g, assign, 4)
+    rng = np.random.default_rng(0)
+    arr = rng.standard_normal((g.num_nodes, 3)).astype(np.float32)
+    packed = permute_node_array(plan, arr)
+    back = unpermute_node_array(plan, packed, g.num_nodes)
+    np.testing.assert_allclose(back, arr)
+    # every real node appears exactly once
+    perm = plan.node_perm[plan.node_perm >= 0]
+    assert sorted(perm) == list(range(g.num_nodes))
+
+
+def test_cluster_partition_cuts_fewer_edges_than_block():
+    rng = np.random.default_rng(7)
+    g, _ = sbm_graph(rng, (40, 40, 40, 40), p_in=0.5, p_out=5e-3)
+    a_blk = block_partition(g.num_nodes, 4)
+    a_cls = cluster_partition(g, 4)
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    # node ids are cluster-ordered in the SBM generator, so block partition
+    # is already strong; cluster partitioning must be comparable or better
+    # on a scrambled ordering
+    perm = rng.permutation(g.num_nodes)
+    from repro.core.graph import build_graph
+    g2 = build_graph(np.stack([perm[src], perm[dst]], 1),
+                     np.asarray(g.weights), g.num_nodes)
+    a_blk2 = block_partition(g2.num_nodes, 4)
+    a_cls2 = cluster_partition(g2, 4)
+    s2, d2 = np.asarray(g2.src), np.asarray(g2.dst)
+    cut_blk = int(np.sum(a_blk2[s2] != a_blk2[d2]))
+    cut_cls = int(np.sum(a_cls2[s2] != a_cls2[d2]))
+    assert cut_cls < cut_blk, (cut_cls, cut_blk)
+
+
+def test_shard_problem_preserves_edge_weights(ds):
+    prob = shard_problem(ds.graph, ds.data, 2)
+    valid = prob.plan.edge_perm >= 0
+    np.testing.assert_allclose(
+        np.sort(np.asarray(prob.bound_unit)[valid]),
+        np.sort(np.asarray(ds.graph.weights)))
+
+
+MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core.distributed import solve_and_unpermute
+    from repro.core.nlasso import nlasso
+    from repro.data.synthetic import make_sbm_regression
+    from repro.launch.mesh import make_host_mesh
+
+    ds = make_sbm_regression(seed=3, cluster_sizes=(24, 24), p_in=0.5,
+                             p_out=5e-3, num_labeled=12)
+    mesh = make_host_mesh(8, 1)
+    out = {}
+    for comm in ("dense", "boundary"):
+        w = solve_and_unpermute(ds.graph, ds.data, mesh, lam=1e-3,
+                                num_iters=150, comm=comm)
+        ref = nlasso(ds.graph, ds.data, lam=1e-3, num_iters=150)
+        out[comm] = float(np.max(np.abs(w - np.asarray(ref.w))))
+    print(json.dumps(out))
+""")
+
+
+def test_sharded_solver_8_virtual_devices(ds):
+    """End-to-end 8-way shard_map run in a subprocess (own XLA_FLAGS)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    errs = json.loads(res.stdout.strip().splitlines()[-1])
+    assert errs["dense"] < 2e-4, errs
+    assert errs["boundary"] < 2e-4, errs

@@ -1,0 +1,103 @@
+"""Empirical-graph structure tests: incidence operators, TV, preconditioners.
+
+Includes hypothesis property tests on the system invariant
+<u, D w> == <D^T u, w> (adjointness) for random graphs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (EmpiricalGraph, build_graph, chain_graph,
+                              graph_signal_mse, sbm_graph)
+
+
+def random_graph(seed: int, num_nodes: int, num_edges: int) -> EmpiricalGraph:
+    rng = np.random.default_rng(seed)
+    edges = set()
+    while len(edges) < num_edges:
+        i, j = rng.integers(0, num_nodes, 2)
+        if i != j:
+            edges.add((min(i, j), max(i, j)))
+    edges = np.array(sorted(edges))
+    w = rng.random(len(edges)).astype(np.float32) + 0.1
+    return build_graph(edges, w, num_nodes)
+
+
+def test_chain_graph_incidence():
+    g = chain_graph(4)
+    w = jnp.array([[0.0], [1.0], [3.0], [6.0]])
+    dw = g.incidence_apply(w)
+    # D w = w_i - w_j for i < j => [-1, -2, -3]
+    np.testing.assert_allclose(np.asarray(dw)[:, 0], [-1.0, -2.0, -3.0])
+
+
+def test_incidence_transpose_matches_scatter_oracle():
+    g = random_graph(0, 50, 120)
+    u = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (g.num_edges, 3)).astype(np.float32))
+    got = g.incidence_transpose_apply(u)
+    want = g.incidence_transpose_apply_scatter(u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), v=st.integers(3, 40),
+       n=st.integers(1, 6))
+def test_incidence_adjointness(seed, v, n):
+    """<u, D w> == <D^T u, w> — D and D^T are true adjoints."""
+    e = min(2 * v, v * (v - 1) // 2)
+    g = random_graph(seed, v, e)
+    rng = np.random.default_rng(seed + 1)
+    w = jnp.asarray(rng.standard_normal((v, n)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((g.num_edges, n)).astype(np.float32))
+    lhs = jnp.sum(u * g.incidence_apply(w))
+    rhs = jnp.sum(g.incidence_transpose_apply(u) * w)
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_tv_seminorm_properties(seed):
+    """TV >= 0; TV(constant signal) == 0; TV(a w) == |a| TV(w)."""
+    g = random_graph(seed, 20, 40)
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((20, 2)).astype(np.float32))
+    tv = float(g.total_variation(w))
+    assert tv >= 0
+    const = jnp.ones((20, 2))
+    assert float(g.total_variation(const)) == pytest.approx(0.0, abs=1e-5)
+    np.testing.assert_allclose(float(g.total_variation(3.0 * w)), 3.0 * tv,
+                               rtol=1e-5)
+
+
+def test_preconditioners_paper_eq13():
+    g = chain_graph(5)
+    tau = np.asarray(g.primal_stepsizes())
+    # interior nodes have degree 2 -> tau = 1/2; endpoints 1
+    np.testing.assert_allclose(tau, [1.0, 0.5, 0.5, 0.5, 1.0])
+    np.testing.assert_allclose(np.asarray(g.dual_stepsizes()), 0.5)
+
+
+def test_sbm_graph_structure():
+    rng = np.random.default_rng(0)
+    g, assign = sbm_graph(rng, (50, 50), p_in=0.5, p_out=0.0)
+    # no cross-cluster edges when p_out = 0
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    assert (assign[src] == assign[dst]).all()
+    # roughly p_in * C(50,2) * 2 edges
+    assert 800 < g.num_edges < 1600
+
+
+def test_build_graph_rejects_self_loops():
+    with pytest.raises(ValueError):
+        build_graph(np.array([[0, 0]]), np.array([1.0]), 3)
+
+
+def test_graph_signal_mse_matches_eq24():
+    w_hat = jnp.zeros((4, 2))
+    w_true = jnp.ones((4, 2))
+    mask = jnp.array([1.0, 1.0, 0.0, 0.0])
+    # sum over masked nodes of ||1||^2 = 2 each, / V=4 -> 1.0
+    assert float(graph_signal_mse(w_hat, w_true, mask)) == pytest.approx(1.0)

@@ -1,0 +1,164 @@
+"""Paper Algorithm 1 reproduction tests (§4, §5 of the paper).
+
+The headline claim (Table 1): on the SBM setup, nLasso reaches MSE ~1e-6
+while pooled linear regression / decision trees sit at ~4 — validated end
+to end in benchmarks/table1.py; here we assert the statistical behaviour
+on reduced-size instances so the suite stays fast on CPU.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, losses as L
+from repro.core.graph import chain_graph
+from repro.core.nlasso import (nlasso, nlasso_continuation, pd_step,
+                               primal_dual_gap_certificate, solve_nlasso)
+from repro.data.synthetic import make_classification_sbm, make_sbm_regression
+
+
+@pytest.fixture(scope="module")
+def sbm():
+    # reduced paper setup: 2 clusters x 40 nodes, m_i = 5, n = 2
+    return make_sbm_regression(seed=0, cluster_sizes=(40, 40), p_in=0.5,
+                               p_out=1e-3, num_labeled=16)
+
+
+def test_objective_monotone_decrease(sbm):
+    res = nlasso(sbm.graph, sbm.data, lam=1e-3, num_iters=200,
+                 w_true=sbm.w_true)
+    obj = np.asarray(res.objective)
+    # primal objective settles (allow tiny numerical wiggle)
+    assert obj[-1] <= obj[10] * 1.01
+    assert np.isfinite(obj).all()
+
+
+def test_nlasso_recovers_clustered_weights(sbm):
+    res = nlasso_continuation(sbm.graph, sbm.data, lam=1e-3,
+                              warm_iters=1500, final_iters=500,
+                              w_true=sbm.w_true)
+    mse = float(res.mse[-1])
+    # paper reaches ~1e-6 at 500 nodes/30 labels; reduced instance: << 0.1
+    assert mse < 5e-2, mse
+    # cluster means recovered
+    w = np.asarray(res.w)
+    c0 = w[sbm.clusters == 0].mean(axis=0)
+    c1 = w[sbm.clusters == 1].mean(axis=0)
+    np.testing.assert_allclose(c0, [2.0, 2.0], atol=0.25)
+    np.testing.assert_allclose(c1, [-2.0, 2.0], atol=0.25)
+
+
+def test_nlasso_beats_pooled_baselines(sbm):
+    """Table-1 ordering: nLasso MSE << pooled LR and CART."""
+    res = nlasso_continuation(sbm.graph, sbm.data, lam=1e-3,
+                              warm_iters=1500, final_iters=500,
+                              w_true=sbm.w_true)
+    w_pool = baselines.pooled_linear_regression(sbm.data)
+    lr_mse = baselines.linreg_mse(sbm.data, w_pool, on="test")
+    tree_mse = baselines.decision_tree_mse(sbm.data, on="test")
+    # prediction MSE of the networked model on unlabeled nodes
+    x = np.asarray(sbm.data.x)
+    y = np.asarray(sbm.data.y)
+    pred = np.einsum("vmn,vn->vm", x, np.asarray(res.w))
+    lm = np.asarray(sbm.data.labeled_mask) > 0
+    ours = float(np.mean((pred[~lm] - y[~lm]) ** 2))
+    assert ours < 0.1 * lr_mse, (ours, lr_mse)
+    assert ours < 0.1 * tree_mse, (ours, tree_mse)
+
+
+def test_dual_feasibility_certificate(sbm):
+    lam = 1e-3
+    res = nlasso(sbm.graph, sbm.data, lam=lam, num_iters=300)
+    cert = primal_dual_gap_certificate(sbm.graph, sbm.data, res.w, res.u,
+                                       lam)
+    # clipping guarantees feasibility by construction
+    assert float(cert["dual_infeasibility"]) <= 1e-6
+
+
+def test_dual_iterates_always_feasible(sbm):
+    """|u_j^(e)| <= lambda A_e after every iteration (Algorithm 1 step 10)."""
+    lam = 5e-3
+    res = nlasso(sbm.graph, sbm.data, lam=lam, num_iters=50)
+    bound = lam * np.asarray(sbm.graph.weights)[:, None]
+    assert (np.abs(np.asarray(res.u)) <= bound + 1e-6).all()
+
+
+def test_pout_sensitivity_direction():
+    """Fig. 3: MSE grows as cross-cluster connectivity p_out grows."""
+    mses = []
+    for p_out in (1e-3, 0.3):
+        ds = make_sbm_regression(seed=1, cluster_sizes=(30, 30), p_in=0.5,
+                                 p_out=p_out, num_labeled=12)
+        res = nlasso_continuation(ds.graph, ds.data, lam=1e-3,
+                                  warm_iters=800, final_iters=300,
+                                  w_true=ds.w_true)
+        mses.append(float(res.mse[-1]))
+    assert mses[0] < mses[1], mses
+
+
+def test_lasso_loss_variant_high_dim():
+    """§4.2: m_i << n regime — lasso prox recovers sparse weights."""
+    rng = np.random.default_rng(0)
+    V, m, n = 30, 3, 10
+    g = chain_graph(V)
+    w_true = np.zeros((V, n), np.float32)
+    w_true[:, 0] = 2.0
+    w_true[:, 1] = -1.0
+    x = rng.standard_normal((V, m, n)).astype(np.float32)
+    y = np.einsum("vmn,vn->vm", x, w_true)
+    labeled = np.zeros(V, np.float32)
+    labeled[::2] = 1.0
+    data = L.NodeData(x=jnp.asarray(x), y=jnp.asarray(y),
+                      sample_mask=jnp.ones((V, m), jnp.float32),
+                      labeled_mask=jnp.asarray(labeled))
+    res = nlasso(g, data, lam=1e-2, num_iters=1200, loss="lasso", alpha=0.02,
+                 num_inner=40, rho=1.9, w_true=jnp.asarray(w_true))
+    w = np.asarray(res.w)
+    # support recovery: active coords dominate the (shrunk) inactive ones
+    assert np.abs(w[:, 2:]).mean() < 0.3 * w[:, 0].mean()
+    assert w[:, 0].mean() > 1.0          # sign + magnitude of active coords
+    assert w[:, 1].mean() < -0.4
+    # l1 shrinkage is real but bounded
+    assert w[:, 0].mean() < 2.0 + 0.2
+
+
+def test_logistic_loss_variant_classification():
+    """§4.3: networked logistic regression separates the two clusters."""
+    ds = make_classification_sbm(seed=0, cluster_sizes=(30, 30),
+                                 samples_per_node=10, num_labeled=16)
+    res = nlasso(ds.graph, ds.data, lam=1e-2, num_iters=400,
+                 loss="logistic", rho=1.5)
+    w = np.asarray(res.w)
+    # the sign pattern of the true weights (3,3) vs (-3,3) must be recovered
+    c0 = w[ds.clusters == 0].mean(axis=0)
+    c1 = w[ds.clusters == 1].mean(axis=0)
+    assert c0[0] > 0.1 and c1[0] < -0.1
+    assert c0[1] > 0.1 and c1[1] > 0.1
+    # classification accuracy on unlabeled nodes
+    logits = np.einsum("vmn,vn->vm", np.asarray(ds.data.x), w)
+    pred = (logits > 0).astype(np.float32)
+    lm = np.asarray(ds.data.labeled_mask) > 0
+    acc = (pred[~lm] == np.asarray(ds.data.y)[~lm]).mean()
+    assert acc > 0.8, acc
+
+
+def test_overrelaxation_converges_faster(sbm):
+    """Beyond-paper rho=1.9 reaches a lower MSE in the same iterations."""
+    base = nlasso(sbm.graph, sbm.data, lam=1e-3, num_iters=400,
+                  w_true=sbm.w_true, rho=1.0)
+    fast = nlasso(sbm.graph, sbm.data, lam=1e-3, num_iters=400,
+                  w_true=sbm.w_true, rho=1.9)
+    assert float(fast.mse[-1]) < float(base.mse[-1])
+
+
+def test_prox_is_firmly_nonexpansive_squared(sbm):
+    """||prox(a) - prox(b)|| <= ||a - b|| (resolvent of monotone operator)."""
+    tau = sbm.graph.primal_stepsizes()
+    prox = L.make_prox("squared", sbm.data, tau)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((sbm.data.num_nodes, 2)).astype(
+        np.float32))
+    b = jnp.asarray(rng.standard_normal((sbm.data.num_nodes, 2)).astype(
+        np.float32))
+    lhs = float(jnp.linalg.norm(prox(a) - prox(b)))
+    rhs = float(jnp.linalg.norm(a - b))
+    assert lhs <= rhs + 1e-5

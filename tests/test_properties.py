@@ -1,0 +1,140 @@
+"""Hypothesis property tests on system invariants (brief deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses as L
+from repro.core.graph import build_graph
+from repro.core.nlasso import clip_dual
+from repro.kernels import ref
+from repro.kernels.tv_prox import tv_prox
+
+
+@settings(max_examples=30, deadline=None)
+@given(e=st.integers(1, 64), n=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_dual_clip_is_projection_onto_linf_ball(e, n, seed):
+    """T^(lam A_e) is the Euclidean projection onto {|u_j| <= lam A_e}:
+    idempotent, non-expansive, and exact on interior points."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.standard_normal((e, n)).astype(np.float32) * 3)
+    bound = jnp.asarray(np.abs(rng.standard_normal(e)).astype(np.float32))
+    once = clip_dual(u, bound)
+    twice = clip_dual(once, bound)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice))
+    assert (np.abs(np.asarray(once)) <= np.asarray(bound)[:, None] + 1e-6).all()
+    inside = jnp.clip(u, -bound[:, None] * 0.5, bound[:, None] * 0.5)
+    np.testing.assert_allclose(np.asarray(clip_dual(inside, bound)),
+                               np.asarray(inside))
+
+
+@settings(max_examples=15, deadline=None)
+@given(e=st.integers(1, 40), n=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_tv_prox_kernel_matches_clip(e, n, seed):
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.standard_normal((e, n)).astype(np.float32) * 2)
+    bound = jnp.asarray(np.abs(rng.standard_normal(e)).astype(np.float32))
+    out = tv_prox(u, bound, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(clip_dual(u, bound)), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=st.integers(2, 20), m=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_squared_prox_minimizes_eq18(v, m, seed):
+    """PU_i(v) is the argmin of L_i(z) + (1/2 tau)||z - v||^2: perturbing
+    the output in random directions never decreases the objective."""
+    rng = np.random.default_rng(seed)
+    n = 2
+    x = rng.standard_normal((v, m, n)).astype(np.float32)
+    y = rng.standard_normal((v, m)).astype(np.float32)
+    data = L.NodeData(x=jnp.asarray(x), y=jnp.asarray(y),
+                      sample_mask=jnp.ones((v, m), jnp.float32),
+                      labeled_mask=jnp.ones(v, jnp.float32))
+    tau = jnp.asarray(np.abs(rng.standard_normal(v)).astype(np.float32)
+                      + 0.1)
+    prox = L.make_prox("squared", data, tau)
+    vin = jnp.asarray(rng.standard_normal((v, n)).astype(np.float32))
+    z = prox(vin)
+
+    def objective(zz):
+        return (L.squared_loss(data, zz)
+                + jnp.sum((zz - vin) ** 2, axis=1) / (2 * tau))
+
+    base = np.asarray(objective(z))
+    for _ in range(5):
+        d = jnp.asarray(rng.standard_normal((v, n)).astype(np.float32))
+        pert = np.asarray(objective(z + 1e-2 * d))
+        assert (pert >= base - 1e-4).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 2), h=st.integers(1, 2),
+       t=st.sampled_from([16, 32, 48]), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_rwkv6_state_composition(b, h, t, d, seed):
+    """Running the scan on [0:t/2] then [t/2:t] with the carried state
+    equals one full scan — the invariant the chunked kernel relies on."""
+    rng = np.random.default_rng(seed)
+
+    def rnd(shape, scale=0.5):
+        return jnp.asarray(rng.standard_normal(shape).astype(np.float32)
+                           * scale)
+
+    r, k = rnd((b, h, t, d)), rnd((b, h, t, d))
+    v = rnd((b, h, t, d))
+    w = jnp.exp(-jnp.exp(rnd((b, h, t, d))))
+    u = rnd((h, d))
+    y_full, s_full = ref.rwkv6_ref(r, k, v, w, u)
+    half = t // 2
+    y1, s1 = ref.rwkv6_ref(r[:, :, :half], k[:, :, :half], v[:, :, :half],
+                           w[:, :, :half], u)
+    y2, s2 = ref.rwkv6_ref(r[:, :, half:], k[:, :, half:], v[:, :, half:],
+                           w[:, :, half:], u, state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 2)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.sampled_from([32, 64]), s_extra=st.sampled_from([0, 32]),
+       window=st.sampled_from([None, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_blocked_attention_matches_reference(t, s_extra, window, seed):
+    from repro.kernels.ops import _blocked_attention
+    rng = np.random.default_rng(seed)
+    b, hq, hkv, d = 1, 4, 2, 16
+    s = t + s_extra
+    q = jnp.asarray(rng.standard_normal((b, hq, t, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
+    out = _blocked_attention(q, k, v, causal=True, window=window, block_k=16)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=st.integers(2, 30), shards=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2**31 - 1))
+def test_partition_edges_owned_once(v, shards, seed):
+    from repro.core.partition import cluster_partition, plan_partition
+    rng = np.random.default_rng(seed)
+    e = min(2 * v, v * (v - 1) // 2)
+    edges = set()
+    while len(edges) < e:
+        i, j = rng.integers(0, v, 2)
+        if i != j:
+            edges.add((min(i, j), max(i, j)))
+    g = build_graph(np.array(sorted(edges)),
+                    np.ones(len(edges), np.float32), v)
+    assign = cluster_partition(g, shards, seed=seed)
+    plan = plan_partition(g, assign, shards)
+    owned = plan.edge_perm[plan.edge_perm >= 0]
+    assert sorted(owned) == list(range(g.num_edges))
+    # shard sizes are balanced to the padded size
+    assert len(plan.node_perm) == shards * plan.nodes_per_shard

@@ -1,0 +1,123 @@
+"""Unit tests for the sharding policy: parameter rules with divisibility
+guards, batch-lead selection, and activation hint specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import param_specs
+
+
+class FakeMesh:
+    """Mesh stand-in with just .shape / .axis_names (no devices)."""
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh(data=16, model=16)
+POD_MESH = FakeMesh(pod=2, data=16, model=16)
+
+
+def test_param_rule_divisible_table():
+    # qwen3 vocab 151936 % 16 == 0 -> vocab over model, d_model over data
+    assert sh._param_rule("table", (151936, 2048), None, MESH) == \
+        P("model", "data")
+
+
+def test_param_rule_indivisible_vocab_falls_back():
+    # granite vocab 49155 divides nothing -> d_model over (data, model)
+    spec = sh._param_rule("table", (49155, 2048), None, MESH)
+    assert spec == P(None, ("data", "model"))
+
+
+def test_param_rule_indivisible_heads_fall_back():
+    # musicgen 24 heads % 16 != 0 -> no head sharding on wq
+    spec = sh._param_rule("wq", (1536, 24, 64), None, MESH)
+    assert spec[1] is None
+    # but divisible head_dim path still shards kv
+    spec = sh._param_rule("wk", (1536, 24, 64), None, MESH)
+    assert spec == P("data", None, "model")
+
+
+def test_param_rule_moe_expert_axis():
+    spec = sh._param_rule("w_gate", (128, 4096, 1536), None, MESH)
+    assert spec == P("model", "data", None)
+    # 8 experts < 16 shards -> replicate expert axis
+    spec = sh._param_rule("w_gate", (8, 4096, 1536), None, MESH)
+    assert spec[0] is None
+
+
+def test_param_rule_small_params_replicated():
+    assert sh._param_rule("scale", (2048,), None, MESH) == P()
+
+
+def test_batch_lead_selection():
+    assert sh._batch_lead(MESH, 256, False) == ("data",)
+    assert sh._batch_lead(POD_MESH, 256, False) == ("pod", "data")
+    assert sh._batch_lead(MESH, 1, False) is None
+    # fsdp mode spreads over model too when divisible
+    assert sh._batch_lead(MESH, 256, True) == ("data", "model")
+    assert sh._batch_lead(POD_MESH, 512, True) == ("pod", "data", "model")
+
+
+def test_hint_is_noop_without_policy():
+    x = jnp.ones((4, 8, 16))
+    assert sh.hint(x, "hidden") is x
+
+
+def test_hint_specs_inside_policy():
+    mesh = make_host_mesh(1, 1)
+    x = jnp.ones((4, 8, 16))
+    with sh.activation_hints(mesh):
+        # smoke: applies without error on a real (1,1) mesh and returns
+        # an array of the same shape/dtype
+        y = sh.hint(x, "hidden")
+        assert y.shape == x.shape
+        z = sh.hint(jnp.ones((4, 8, 32)), "logits")
+        assert z.shape == (4, 8, 32)
+        q = sh.hint(jnp.ones((2, 4, 1, 8)), "decode_q")
+        assert q.shape == (2, 4, 1, 8)
+        s = sh.hint(jnp.ones((2, 4, 1, 64)), "decode_logits")
+        assert s.shape == (2, 4, 1, 64)
+        b = sh.hint(jnp.ones((4, 4, 8, 16)), "moe_buf")
+        assert b.shape == (4, 4, 8, 16)
+    with pytest.raises(ValueError):
+        with sh.activation_hints(mesh):
+            sh.hint(x, "nope")
+
+
+def test_policy_restores_on_exit():
+    mesh = make_host_mesh(1, 1)
+    x = jnp.ones((4, 4))
+    with sh.activation_hints(mesh):
+        pass
+    assert sh.hint(x, "hidden") is x    # policy cleared
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "granite-3-2b",
+                                  "musicgen-medium", "qwen3-moe-235b-a22b",
+                                  "rwkv6-3b", "jamba-v0.1-52b"])
+def test_param_pspecs_cover_every_leaf(arch):
+    """Every parameter leaf gets a PartitionSpec whose sharded dims all
+    divide evenly (the jit-argument requirement the dry-run relies on)."""
+    cfg = get_config(arch)
+    tree = param_specs(cfg)
+    specs = sh.param_pspecs(tree, cfg, MESH)
+
+    def check(leaf, spec):
+        assert isinstance(spec, P)
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= MESH.shape[a]
+            assert dim % n == 0, (arch, leaf.shape, spec)
+
+    jax.tree.map(check, tree, specs,
+                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,204 @@
+"""System-level tests: launcher plumbing, specs, roofline parser, optimizer,
+data pipeline, checkpointing, and a short end-to-end training run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import restore, save
+from repro.configs.base import INPUT_SHAPES, get_config, list_archs
+from repro.data.tokens import EmbeddingStream, TokenStream
+from repro.launch import roofline as rl
+from repro.launch import specs
+from repro.launch.serve import generate
+from repro.launch.train import train_loop
+from repro.models import transformer as model
+from repro.optim.adamw import adamw, cosine_schedule
+
+
+# ---------------------------------------------------------------------------
+# input specs: all 40 (arch x shape) combos build without allocation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_input_specs_build(arch, shape):
+    cfg = get_config(arch)
+    ins = specs.input_specs(cfg, shape)
+    spec = INPUT_SHAPES[shape]
+    b = spec["global_batch"]
+    key = "tokens" if cfg.input_mode == "tokens" else "embeds"
+    t_expect = 1 if spec["kind"] == "decode" else spec["seq_len"]
+    assert ins["batch"][key].shape[0] == b
+    assert ins["batch"][key].shape[1] == t_expect
+    if spec["kind"] in ("prefill", "decode"):
+        assert "cache" in ins
+        leaves = jax.tree.leaves(ins["cache"])
+        assert leaves, "cache must not be empty"
+        for leaf in leaves:
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+    # params are ShapeDtypeStructs (never allocated)
+    for leaf in jax.tree.leaves(ins["params"]):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_decode_plan_long_context_subquadratic():
+    for arch in list_archs():
+        cfg = get_config(arch)
+        plan = specs.decode_plan(cfg, "long_500k")
+        if cfg.family == "ssm":
+            assert plan["variant"] == "native"
+        else:
+            # everything else bounds the KV cache by the window
+            assert plan["cache_len"] <= 32768
+        p32 = specs.decode_plan(cfg, "decode_32k")
+        assert p32["cache_len"] == 32768 and p32["variant"] == "native"
+
+
+# ---------------------------------------------------------------------------
+# roofline HLO parser
+# ---------------------------------------------------------------------------
+
+SYNTH_HLO = """
+HloModule synth
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %ar = f32[8,16]{1,0} all-reduce(%gte), to_apply=%add.1
+  %d = f32[8,16]{1,0} dot(%ar, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,16]) tuple(%c, %d)
+}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main.1 (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %ag = f32[8,32]{1,0} all-gather(%a), dimensions={1}
+  %w = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,16]{1,0} copy(%gte2)
+}
+"""
+
+
+def test_roofline_parser_trip_counts_and_bytes():
+    a = rl.analyze_hlo(SYNTH_HLO)
+    # all-reduce inside the x12 loop: 8*16*4 bytes * 12
+    assert a.collective_bytes_by_kind["all-reduce"] == 8 * 16 * 4 * 12
+    assert a.collective_count_by_kind["all-reduce"] == 12
+    # all-gather at top level, once
+    assert a.collective_bytes_by_kind["all-gather"] == 8 * 32 * 4
+    # dot: 2 * 8*16 (result) * 16 (contracted dim of f32[8,16]) * 12 trips
+    assert a.flops == 2 * 8 * 16 * 16 * 12
+
+
+def test_roofline_terms_and_dominance():
+    r = rl.roofline_terms(197e12, 819e9 * 2, 50e9 * 0.5)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.dominant == "memory"
+    assert r.step_s == pytest.approx(2.0)
+
+
+def test_count_params_moe_discount():
+    from repro.launch.dryrun import count_params
+    dense = count_params(get_config("qwen3-1.7b"))
+    assert dense["total"] == dense["active"]
+    moe = count_params(get_config("qwen3-moe-235b-a22b"))
+    assert moe["active"] < 0.25 * moe["total"]
+    # published scale: ~235B total, ~22B active
+    assert 180e9 < moe["total"] < 280e9
+    assert 12e9 < moe["active"] < 30e9
+
+
+# ---------------------------------------------------------------------------
+# optimizer / schedule
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    init, update = adamw(0.1, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        return update(grads, state, params)
+
+    for _ in range(120):
+        params, state = step(params, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.int32(10))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr(jnp.int32(100))) == pytest.approx(1e-4, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_token_stream_deterministic_and_learnable():
+    a = TokenStream(vocab_size=97, seq_len=33, batch_size=4, seed=5)
+    b = TokenStream(vocab_size=97, seq_len=33, batch_size=4, seed=5)
+    ba, bb = a.next_batch(), b.next_batch()
+    np.testing.assert_array_equal(ba["tokens"], bb["tokens"])
+    assert ba["tokens"].shape == (4, 32)
+    # targets are the shifted stream
+    np.testing.assert_array_equal(ba["tokens"][:, 1:], ba["targets"][:, :-1])
+
+
+def test_embedding_stream_shapes():
+    s = EmbeddingStream(d_model=32, vocab_size=64, seq_len=16, batch_size=2)
+    b = s.next_batch()
+    assert b["embeds"].shape == (2, 16, 32)
+    assert b["targets"].shape == (2, 16)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("qwen3-0.6b").smoke().with_(num_layers=2)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    save(str(tmp_path / "ckpt"), params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    back = restore(str(tmp_path / "ckpt"), zeros)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    save(str(tmp_path / "c2"), {"w": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        restore(str(tmp_path / "c2"), {"w": jnp.ones((4,))})
+
+
+# ---------------------------------------------------------------------------
+# end to end: short LM training run must reduce loss; serving must decode
+# ---------------------------------------------------------------------------
+
+def test_train_loop_loss_decreases():
+    cfg = get_config("qwen3-0.6b").smoke().with_(
+        num_layers=2, vocab_size=97)
+    _, hist = train_loop(cfg, steps=30, batch=8, seq=32,
+                         learning_rate=3e-3, log_every=29)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.1, hist
+
+
+def test_generate_serves_batch():
+    cfg = get_config("qwen3-0.6b").smoke().with_(num_layers=2)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+    toks = generate(params, cfg, prompts, max_new_tokens=5)
+    assert toks.shape == (3, 5)
+    assert (toks >= 0).all() and (toks < cfg.vocab_size).all()
