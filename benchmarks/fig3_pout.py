@@ -6,21 +6,23 @@ increases with p_out.
 """
 from __future__ import annotations
 
-from repro.core.nlasso import nlasso_continuation
+from repro.core import Problem, Solver, SolverConfig
 from repro.data.synthetic import make_sbm_regression
 
 from benchmarks.common import save_result
 
 P_OUTS = (1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1)
 
+SOLVER = Solver(SolverConfig(continuation=True, rho=1.9,
+                             warm_iters=2000, final_iters=800))
+
 
 def run(seed: int = 0, verbose: bool = True) -> dict:
     rows = {}
     for p_out in P_OUTS:
         ds = make_sbm_regression(seed=seed, p_out=p_out)
-        res = nlasso_continuation(ds.graph, ds.data, lam=1e-3,
-                                  warm_iters=2000, final_iters=800,
-                                  w_true=ds.w_true)
+        res = SOLVER.run(Problem.create(ds.graph, ds.data, lam=1e-3),
+                         w_true=ds.w_true)
         rows[f"{p_out:g}"] = float(res.mse[-1])
 
     payload = {"mse_by_pout": rows, "p_in": 0.5, "lam": 1e-3, "seed": seed}

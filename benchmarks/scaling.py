@@ -12,9 +12,9 @@ import time
 
 import numpy as np
 
+from repro.core import Problem, Solver, SolverConfig
 from repro.core import losses as L
 from repro.core.graph import sbm_graph
-from repro.core.nlasso import solve_nlasso
 
 from benchmarks.common import save_result
 
@@ -44,14 +44,12 @@ def run(seed: int = 0, verbose: bool = True) -> dict:
     rows = {}
     for v in SIZES:
         g, data = _make(v, seed)
-        tau = g.primal_stepsizes()
-        prox = L.make_prox("squared", data, tau)
-        # warmup / compile
-        w, u, _, _ = solve_nlasso(g, data, prox, 1e-3, 2)
-        w.block_until_ready()
+        problem = Problem.create(g, data, lam=1e-3)
+        # warmup / compile (separate trace, shared prox-setup constants)
+        Solver(SolverConfig(num_iters=2)).run(problem).w.block_until_ready()
         t0 = time.time()
-        w, u, _, _ = solve_nlasso(g, data, prox, 1e-3, ITERS)
-        w.block_until_ready()
+        res = Solver(SolverConfig(num_iters=ITERS)).run(problem)
+        res.w.block_until_ready()
         dt = time.time() - t0
         rows[str(v)] = {
             "edges": int(g.num_edges),

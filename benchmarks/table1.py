@@ -22,8 +22,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import baselines
-from repro.core.nlasso import nlasso, nlasso_continuation
+from repro.core import Problem, Solver, SolverConfig, baselines
 from repro.data.synthetic import make_sbm_regression
 
 from benchmarks.common import prediction_mse, save_result
@@ -31,33 +30,38 @@ from benchmarks.common import prediction_mse, save_result
 
 def run(seed: int = 0, verbose: bool = True) -> dict:
     ds = make_sbm_regression(seed=seed)   # defaults == paper §5
+    problem = Problem.create(ds.graph, ds.data, lam=1e-3)
 
     t0 = time.time()
-    faithful = nlasso(ds.graph, ds.data, lam=1e-3, num_iters=500,
-                      w_true=ds.w_true)
+    faithful = Solver(SolverConfig(num_iters=500)).run(problem,
+                                                       w_true=ds.w_true)
     t_faithful = time.time() - t0
 
     t0 = time.time()
-    faithful_20k = nlasso(ds.graph, ds.data, lam=1e-3, num_iters=20_000,
-                          w_true=ds.w_true)
+    faithful_20k = Solver(SolverConfig(num_iters=20_000)).run(
+        problem, w_true=ds.w_true)
     t_faithful_20k = time.time() - t0
 
     t0 = time.time()
-    ours = nlasso_continuation(ds.graph, ds.data, lam=1e-3,
-                               warm_iters=3000, final_iters=1000,
-                               w_true=ds.w_true)
+    ours = Solver(SolverConfig(continuation=True, rho=1.9, warm_iters=3000,
+                               final_iters=1000)).run(problem,
+                                                      w_true=ds.w_true)
     t_ours = time.time() - t0
 
     w_pool = baselines.pooled_linear_regression(ds.data)
 
+    # label with the iterations that actually ran (REPRO_SOLVER_MAX_ITERS
+    # may cap the budgets)
+    it_short = len(faithful.objective)
+    it_long = len(faithful_20k.objective)
     rows = {
-        "our method (paper-faithful, 500 it)": {
+        f"our method (paper-faithful, {it_short} it)": {
             "train": prediction_mse(ds.data, faithful.w, "train"),
             "test": prediction_mse(ds.data, faithful.w, "test"),
             "weights_mse_eq24": float(faithful.mse[-1]),
             "seconds": t_faithful,
         },
-        "our method (paper-faithful, 20k it)": {
+        f"our method (paper-faithful, {it_long} it)": {
             "train": prediction_mse(ds.data, faithful_20k.w, "train"),
             "test": prediction_mse(ds.data, faithful_20k.w, "test"),
             "weights_mse_eq24": float(faithful_20k.mse[-1]),

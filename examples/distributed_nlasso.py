@@ -1,6 +1,7 @@
 """Distributed nLasso: Algorithm 1 as shard_map message passing over 8
 (virtual) devices, with cluster-aware graph partitioning and boundary-only
-halo exchange.
+halo exchange — all through the unified Problem/Solver API (the "sharded"
+backend).
 
     PYTHONPATH=src python examples/distributed_nlasso.py
 """
@@ -18,40 +19,39 @@ import time                                                    # noqa: E402
 
 import numpy as np                                             # noqa: E402
 
-from repro.core.distributed import shard_problem, \
-    solve_nlasso_sharded                                       # noqa: E402
-from repro.core.nlasso import nlasso                           # noqa: E402
-from repro.core.partition import unpermute_node_array          # noqa: E402
+from repro.core import Problem, Solver, SolverConfig           # noqa: E402
+from repro.core.distributed import shard_problem               # noqa: E402
 from repro.data.synthetic import make_sbm_regression           # noqa: E402
 from repro.launch.mesh import make_host_mesh                   # noqa: E402
 
 ds = make_sbm_regression(seed=0, cluster_sizes=(150, 150), p_in=0.5,
                          p_out=1e-3, num_labeled=30)
 mesh = make_host_mesh(8, 1)
+problem = Problem.create(ds.graph, ds.data, lam=1e-3)
 print(f"mesh: {dict(mesh.shape)}  graph: |V|={ds.graph.num_nodes} "
       f"|E|={ds.graph.num_edges}")
 
 for partitioner in ("block", "cluster"):
+    # partition statistics (the layout the sharded backend will build)
     prob = shard_problem(ds.graph, ds.data, 8, partitioner=partitioner)
     print(f"\npartitioner={partitioner}: cut edges {prob.plan.cut_edges} "
           f"/ {ds.graph.num_edges}, boundary nodes "
           f"{prob.plan.boundary_nodes} / {ds.graph.num_nodes}")
     for comm in ("dense", "boundary"):
+        cfg = SolverConfig(backend="sharded", mesh=mesh, num_iters=500,
+                           rho=1.9, partitioner=partitioner, comm=comm)
         t0 = time.time()
-        w = solve_nlasso_sharded(prob, mesh, lam=1e-3, num_iters=500,
-                                 comm=comm, rho=1.9)
-        w = unpermute_node_array(prob.plan, np.asarray(w),
-                                 ds.graph.num_nodes)
+        res = Solver(cfg).run(problem)
         dt = time.time() - t0
-        err = float(np.mean((w - np.asarray(ds.w_true)) ** 2))
+        err = float(np.mean((np.asarray(res.w) - np.asarray(ds.w_true)) ** 2))
         print(f"  comm={comm:9s} 500 iters in {dt:5.1f}s   "
               f"weight MSE vs truth {err:.3e}")
 
-ref = nlasso(ds.graph, ds.data, lam=1e-3, num_iters=500, rho=1.9)
-prob = shard_problem(ds.graph, ds.data, 8, partitioner="cluster")
-w = solve_nlasso_sharded(prob, mesh, lam=1e-3, num_iters=500, comm="dense",
-                         rho=1.9)
-w = unpermute_node_array(prob.plan, np.asarray(w), ds.graph.num_nodes)
-gap = float(np.max(np.abs(w - np.asarray(ref.w))))
-print(f"\nmax |sharded - single-program| after 500 iters: {gap:.2e} "
+# same Problem, same Solver surface — only the backend string changes
+ref = Solver(SolverConfig(backend="dense", num_iters=500, rho=1.9)
+             ).run(problem)
+shd = Solver(SolverConfig(backend="sharded", mesh=mesh, num_iters=500,
+                          rho=1.9, comm="dense")).run(problem)
+gap = float(np.max(np.abs(np.asarray(shd.w) - np.asarray(ref.w))))
+print(f"\nmax |sharded - dense| after 500 iters: {gap:.2e} "
       "(identical fixed-point iteration, different communication pattern)")

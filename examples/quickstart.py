@@ -1,10 +1,12 @@
 """Quickstart: federated networked linear regression on the paper's setup.
 
-Builds the §5 stochastic-block-model empirical graph, runs Algorithm 1
-(primal-dual network Lasso), and compares against the pooled baselines —
-the 60-second tour of the whole public API.
+Builds the §5 stochastic-block-model empirical graph, declares the network
+Lasso as a `Problem`, runs Algorithm 1 through the unified `Solver`, and
+compares against the pooled baselines — the 60-second tour of the whole
+public API.
 
-    python examples/quickstart.py
+    python examples/quickstart.py            # full §5 setup
+    REPRO_SMOKE=1 python examples/quickstart.py   # CI-sized instance
 """
 import os
 import sys
@@ -13,28 +15,40 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np                                             # noqa: E402
 
-from repro.core import baselines                               # noqa: E402
-from repro.core.nlasso import nlasso_continuation              # noqa: E402
+from repro.core import (Problem, Solver, SolverConfig,         # noqa: E402
+                        baselines)
 from repro.data.synthetic import make_sbm_regression           # noqa: E402
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
 # 1. networked data: 300 local datasets, 2 clusters, 30 labeled nodes
-ds = make_sbm_regression(seed=0, cluster_sizes=(150, 150), p_in=0.5,
-                         p_out=1e-3, num_labeled=30)
+sizes, labeled = ((40, 40), 16) if SMOKE else ((150, 150), 30)
+ds = make_sbm_regression(seed=0, cluster_sizes=sizes, p_in=0.5,
+                         p_out=1e-3, num_labeled=labeled)
 print(f"empirical graph: |V|={ds.graph.num_nodes} |E|={ds.graph.num_edges} "
       f"labeled={len(ds.labeled_nodes)}")
 
-# 2. solve the network Lasso (Algorithm 1 + lambda continuation)
-res = nlasso_continuation(ds.graph, ds.data, lam=1e-3, w_true=ds.w_true)
-print(f"weight-vector MSE (paper eq. 24): {float(res.mse[-1]):.2e}")
+# 2. declare the problem (graph + data + pluggable loss/regularizer) ...
+problem = Problem.create(ds.graph, ds.data, lam=1e-3,
+                         loss="squared", regularizer="tv")
 
-# 3. the learned weights recover the per-cluster ground truth
+# 3. ... and solve it (Algorithm 1 + lambda continuation, over-relaxed)
+config = SolverConfig(continuation=True, rho=1.9,
+                      warm_iters=600 if SMOKE else 3000,
+                      final_iters=300 if SMOKE else 1000)
+res = Solver(config).run(problem, w_true=ds.w_true)
+print(f"weight-vector MSE (paper eq. 24): {float(res.mse[-1]):.2e}")
+print("optimality certificate:",
+      {k: f"{float(v):.2e}" for k, v in res.diagnostics.items()})
+
+# 4. the learned weights recover the per-cluster ground truth
 w = np.asarray(res.w)
 for c, truth in ((0, (2.0, 2.0)), (1, (-2.0, 2.0))):
     mean = w[ds.clusters == c].mean(axis=0)
     print(f"cluster {c}: learned mean w = ({mean[0]:+.3f}, {mean[1]:+.3f})"
           f"   truth = ({truth[0]:+.1f}, {truth[1]:+.1f})")
 
-# 4. baselines that ignore the network structure (paper Table 1)
+# 5. baselines that ignore the network structure (paper Table 1)
 pred = np.einsum("vmn,vn->vm", np.asarray(ds.data.x), w)
 lm = np.asarray(ds.data.labeled_mask) > 0
 ours = float(np.mean((pred[~lm] - np.asarray(ds.data.y)[~lm]) ** 2))

@@ -1,0 +1,34 @@
+"""Unified Problem/Solver API for networked federated learning.
+
+The declarative surface over the paper's Algorithm 1 and its GTVMin /
+model-agnostic generalizations:
+
+    from repro.api import Problem, Solver, SolverConfig
+
+    problem = Problem.create(graph, data, lam=1e-3,
+                             loss="squared", regularizer="tv")
+    result = Solver(SolverConfig(num_iters=1000, rho=1.9)).run(problem)
+    result.w, result.objective, result.diagnostics
+
+Losses (§4.1-4.3), regularizers (TV / GTVMin), and execution backends
+(dense scan / shard_map message passing / Pallas TPU kernels) are all
+registries — plug in new ones without touching call sites.
+"""
+from repro.api.backends import (BACKENDS, certificate, get_backend,
+                                pd_iteration, register_backend)
+from repro.api.losses import (LOSSES, CallableLoss, LassoLoss, LogisticLoss,
+                              Loss, SquaredLoss, get_loss, register_loss)
+from repro.api.problem import Problem, SolveResult, SolverConfig
+from repro.api.regularizers import (REGULARIZERS, Regularizer, SquaredTV,
+                                    TotalVariation, get_regularizer,
+                                    register_regularizer)
+from repro.api.solver import Solver, solve, solve_path
+
+__all__ = [
+    "BACKENDS", "CallableLoss", "LOSSES", "LassoLoss", "LogisticLoss",
+    "Loss", "Problem", "REGULARIZERS", "Regularizer", "SolveResult",
+    "Solver", "SolverConfig", "SquaredLoss", "SquaredTV", "TotalVariation",
+    "certificate", "get_backend", "get_loss", "get_regularizer",
+    "pd_iteration", "register_backend", "register_loss",
+    "register_regularizer", "solve", "solve_path",
+]

@@ -1,0 +1,274 @@
+"""Execution backends for the unified solver + the shared PD iteration.
+
+Three registered backends, all running the same diagonally-preconditioned
+primal-dual iteration (paper eqs. 14-15) and returning one
+:class:`~repro.api.problem.SolveResult`:
+
+  * ``dense``   — single-program ``lax.scan`` (jit-compatible,
+                  differentiable, the CPU/GPU/TPU default),
+  * ``pallas``  — the dense path with the TPU kernels auto-wired
+                  (``kernels.ops.tv_prox`` for the dual clip,
+                  ``kernels.ops.batched_affine`` for the ridge prox),
+  * ``sharded`` — the ``shard_map`` message-passing realization in
+                  ``core.distributed`` (graph partitioned over a device
+                  mesh, halo-exchange collectives per iteration).
+
+``register_backend`` makes new execution strategies reachable from
+``Solver.run`` without touching call sites.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.losses import Loss, SquaredLoss
+from repro.api.problem import Problem, SolveResult, SolverConfig
+from repro.api.regularizers import Regularizer, TotalVariation
+from repro.core.graph import graph_signal_mse
+from repro.kernels import ops
+
+BACKENDS: dict[str, Callable] = {}
+
+
+def register_backend(name: str):
+    """Decorator adding ``fn(problem, config, *, w0, u0, w_true)``."""
+    def deco(fn):
+        BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def get_backend(name: str) -> Callable:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {sorted(BACKENDS)}")
+
+
+# ---------------------------------------------------------------------------
+# Shared primal-dual iteration (paper Algorithm 1 body, eqs. 14-15)
+# ---------------------------------------------------------------------------
+
+def pd_iteration(graph, prox: Callable, regularizer: Regularizer, lam,
+                 tau: jnp.ndarray, sigma: jnp.ndarray, w: jnp.ndarray,
+                 u: jnp.ndarray, *, clip_fn: Callable | None = None):
+    """One primal-dual step; the single source of truth for the iteration.
+
+    primal (eq. 17):  w+ = PU(w - T D^T u)
+    dual  (step 10):  u+ = prox_{sigma dg*}(u + Sigma D (2 w+ - w))
+
+    Used by every backend, by the legacy ``core.nlasso.pd_step`` shim, and
+    by FedTV's personalization update.
+    """
+    dtu = graph.incidence_transpose_apply(u)
+    w_new = prox(w - tau[:, None] * dtu)
+    dw = graph.incidence_apply(2.0 * w_new - w)
+    u_new = regularizer.dual_prox(u + sigma[:, None] * dw, graph, lam,
+                                  sigma, clip_fn=clip_fn)
+    return w_new, u_new
+
+
+def certificate(problem: Problem, w: jnp.ndarray, u: jnp.ndarray) -> dict:
+    """Optimality diagnostics from the coupled conditions (paper eq. 11).
+
+    * dual feasibility (regularizer-defined; <= 0 means feasible),
+    * stationarity residual at labeled nodes for the squared loss.
+    """
+    diag = {"dual_infeasibility": problem.regularizer.dual_infeasibility(
+        u, problem.graph, problem.lam)}
+    if isinstance(problem.loss, SquaredLoss):
+        data = problem.data
+        pred = jnp.einsum("vmn,vn->vm", data.x, w)
+        r = (pred - data.y) * data.sample_mask
+        grad = 2.0 * jnp.einsum("vm,vmn->vn", r,
+                                data.x) / data.counts()[:, None]
+        grad = grad * data.labeled_mask[:, None]
+        station = grad + (problem.graph.incidence_transpose_apply(u)
+                          * data.labeled_mask[:, None])
+        diag["stationarity_residual_labeled"] = jnp.max(jnp.abs(station))
+    return diag
+
+
+def _diagnostics(problem: Problem, w, u, config: SolverConfig) -> dict:
+    """Certificate per config — empty for throwaway (warm-phase) solves."""
+    if not config.compute_diagnostics:
+        return {}
+    return certificate(problem, w, u)
+
+
+# ---------------------------------------------------------------------------
+# Dense backend (single-program lax.scan) + Pallas kernel wiring
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("loss", "reg", "num_iters", "rho",
+                                   "metric_every", "clip_fn", "affine_fn"))
+def _dense_scan(graph, data, lam, w0, u0, w_true, *, loss: Loss,
+                reg: Regularizer, num_iters: int, rho: float,
+                metric_every: int, clip_fn, affine_fn):
+    """The jitted engine: scan Algorithm 1, recording metrics on a cadence.
+
+    ``loss``/``reg`` are static (hashable frozen dataclasses), so repeated
+    solves of equally-templated problems share one trace.
+    """
+    tau = graph.primal_stepsizes()
+    sigma = graph.dual_stepsizes()
+    prox = loss.make_prox(data, tau, affine_fn=affine_fn)
+    unlabeled = 1.0 - data.labeled_mask
+
+    def metrics(w):
+        obj = loss.empirical_error(data, w) + reg.value(graph, w, lam)
+        if w_true is None:
+            mse = jnp.float32(0.0)
+        else:
+            # paper eq. (24): MSE over the unlabeled (test) nodes
+            mse = graph_signal_mse(w, w_true, unlabeled)
+        return obj, mse
+
+    def one_iter(state):
+        w, u = state
+        w_new, u_new = pd_iteration(graph, prox, reg, lam, tau, sigma, w, u,
+                                    clip_fn=clip_fn)
+        if rho != 1.0:
+            w_new = w + rho * (w_new - w)
+            u_new = reg.project_dual(u + rho * (u_new - u), graph, lam)
+        return w_new, u_new
+
+    if metric_every == 1:
+        def step(state, _):
+            new = one_iter(state)
+            return new, metrics(new[0])
+        length = num_iters
+    else:
+        def step(state, _):
+            new = jax.lax.fori_loop(0, metric_every,
+                                    lambda _, s: one_iter(s), state)
+            return new, metrics(new[0])
+        length = num_iters // metric_every
+
+    (w, u), (obj_trace, mse_trace) = jax.lax.scan(
+        step, (w0, u0), None, length=length)
+    return w, u, obj_trace, mse_trace
+
+
+def _solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
+                 w_true=None, clip_fn=None, affine_fn=None) -> SolveResult:
+    if config.num_iters % config.metric_every:
+        raise ValueError(
+            f"metric_every={config.metric_every} must divide "
+            f"num_iters={config.num_iters}")
+    V, n = problem.num_nodes, problem.num_features
+    if w0 is None:
+        w0 = jnp.zeros((V, n), jnp.float32)
+    if u0 is None:
+        u0 = jnp.zeros((problem.graph.num_edges, n), jnp.float32)
+    w, u, obj, mse = _dense_scan(
+        problem.graph, problem.data, problem.lam, w0, u0, w_true,
+        loss=problem.loss, reg=problem.regularizer,
+        num_iters=config.num_iters, rho=config.rho,
+        metric_every=config.metric_every, clip_fn=clip_fn,
+        affine_fn=affine_fn)
+    return SolveResult(w=w, u=u, objective=obj,
+                       mse=None if w_true is None else mse,
+                       lam=problem.lam,
+                       diagnostics=_diagnostics(problem, w, u, config))
+
+
+def resolve_kernel_hooks(problem: Problem, config: SolverConfig,
+                         use_pallas: bool):
+    """(clip_fn, affine_fn) for a dense-engine run.
+
+    Caller-supplied hooks from the config always win; the pallas backend
+    fills unset ones with the stock TPU kernels (the dual-clip kernel only
+    applies to the TV regularizer).
+    """
+    clip_fn, affine_fn = config.clip_fn, config.affine_fn
+    if use_pallas:
+        if clip_fn is None and isinstance(problem.regularizer,
+                                          TotalVariation):
+            clip_fn = ops.tv_prox
+        if affine_fn is None:
+            affine_fn = ops.batched_affine
+    return clip_fn, affine_fn
+
+
+@register_backend("dense")
+def solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
+                w_true=None) -> SolveResult:
+    clip_fn, affine_fn = resolve_kernel_hooks(problem, config, False)
+    return _solve_dense(problem, config, w0=w0, u0=u0, w_true=w_true,
+                        clip_fn=clip_fn, affine_fn=affine_fn)
+
+
+@register_backend("pallas")
+def solve_pallas(problem: Problem, config: SolverConfig, *, w0=None,
+                 u0=None, w_true=None) -> SolveResult:
+    """Dense path with the TPU kernels auto-wired (interpret mode off-TPU).
+
+    The dual clip routes through ``kernels.ops.tv_prox`` (only meaningful
+    for the TV regularizer) and affine-prox losses through
+    ``kernels.ops.batched_affine``; ``config.clip_fn``/``config.affine_fn``
+    override either.
+    """
+    clip_fn, affine_fn = resolve_kernel_hooks(problem, config, True)
+    return _solve_dense(problem, config, w0=w0, u0=u0, w_true=w_true,
+                        clip_fn=clip_fn, affine_fn=affine_fn)
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend (shard_map message passing, core/distributed.py)
+# ---------------------------------------------------------------------------
+
+@register_backend("sharded")
+def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
+                  u0=None, w_true=None) -> SolveResult:
+    """Partition the graph over ``config.mesh`` and run the halo-exchange
+    solver.  Objective/MSE are evaluated once at the final iterate (the
+    sharded loop carries prox parameters, not raw node data), so the traces
+    have length 1.
+    """
+    # local imports: core.distributed is a peer of the api package and
+    # delegates its own front-end back here (lazy on both sides).
+    import numpy as np
+    from repro.core.distributed import shard_problem, solve_nlasso_sharded
+    from repro.core.partition import (permute_edge_array, permute_node_array,
+                                      unpermute_edge_array,
+                                      unpermute_node_array)
+    from repro.launch.mesh import make_host_mesh
+
+    if not isinstance(problem.loss, SquaredLoss):
+        raise NotImplementedError(
+            "sharded backend currently supports the squared loss "
+            "(paper §4.1); other losses run on the dense/pallas backends")
+    if not isinstance(problem.regularizer, TotalVariation):
+        raise NotImplementedError(
+            "sharded backend currently supports the TV regularizer")
+
+    mesh = config.mesh if config.mesh is not None else make_host_mesh(1, 1)
+    num_shards = (config.num_shards if config.num_shards is not None
+                  else mesh.shape[config.mesh_axis])
+    sp = shard_problem(problem.graph, problem.data, num_shards,
+                       partitioner=config.partitioner)
+    if w0 is not None:
+        w0 = jnp.asarray(permute_node_array(sp.plan, np.asarray(w0)))
+    if u0 is not None:
+        u0 = jnp.asarray(permute_edge_array(sp.plan, np.asarray(u0)))
+    lam = float(problem.lam)
+    w_pad, u_pad = solve_nlasso_sharded(
+        sp, mesh, lam, config.num_iters, axis=config.mesh_axis,
+        rho=config.rho, comm=config.comm, w0=w0, u0=u0, return_u=True)
+    w = jnp.asarray(unpermute_node_array(sp.plan, np.asarray(w_pad),
+                                         problem.graph.num_nodes))
+    u = jnp.asarray(unpermute_edge_array(sp.plan, np.asarray(u_pad),
+                                         problem.graph.num_edges))
+    obj = problem.objective(w)[None]
+    if w_true is None:
+        mse = None
+    else:
+        mse = graph_signal_mse(w, w_true,
+                               1.0 - problem.data.labeled_mask)[None]
+    return SolveResult(w=w, u=u, objective=obj, mse=mse, lam=problem.lam,
+                       diagnostics=_diagnostics(problem, w, u, config))

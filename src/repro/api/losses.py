@@ -1,0 +1,149 @@
+"""Pluggable local losses — the object registry replacing string dispatch.
+
+Paper §4: Algorithm 1 is a *template*; a concrete federated learning
+algorithm is obtained by choosing the local loss L(X^(i), w) and hence the
+node-wise primal update operator (eq. 18).  A :class:`Loss` bundles the two
+halves of that choice:
+
+  * ``node_values(data, w)`` — the per-node loss values (eq. 2 summands),
+  * ``make_prox(data, tau)`` — the batched primal-update operator PU_i.
+
+Losses are small frozen dataclasses, so they are hashable and ride through
+``jax.jit`` as static arguments; numerical kernels stay in
+``repro.core.losses`` and are re-used here.  Registering a new loss makes it
+reachable from every backend via ``Problem.create(..., loss="<name>")`` —
+the model-agnostic plug-in point of *Towards Model-Agnostic Federated
+Learning over Networks*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, ClassVar
+
+import jax.numpy as jnp
+
+from repro.core import losses as _core
+
+NodeData = _core.NodeData
+
+LOSSES: dict[str, type] = {}
+
+
+def register_loss(name: str):
+    """Class decorator adding a Loss subclass to the registry."""
+    def deco(cls):
+        cls.name = name
+        LOSSES[name] = cls
+        return cls
+    return deco
+
+
+def get_loss(spec, **kwargs) -> "Loss":
+    """Resolve a Loss instance from an instance or a registry name.
+
+    Extra keyword arguments configure the loss when ``spec`` is a name
+    (e.g. ``get_loss("lasso", alpha=0.02)``); they must be empty when an
+    instance is passed.
+    """
+    if isinstance(spec, Loss):
+        if kwargs:
+            raise TypeError("loss kwargs only apply to registry names")
+        return spec
+    if isinstance(spec, str):
+        try:
+            cls = LOSSES[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown loss {spec!r}; registered: {sorted(LOSSES)}")
+        return cls(**kwargs)
+    raise TypeError(f"loss must be a Loss or a registry name, got {spec!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """Local loss interface (paper §4 template slot)."""
+
+    name: ClassVar[str] = "base"
+
+    def node_values(self, data: NodeData, w: jnp.ndarray) -> jnp.ndarray:
+        """Per-node loss L(X^(i), w^(i)): (V,)."""
+        raise NotImplementedError
+
+    def empirical_error(self, data: NodeData, w: jnp.ndarray) -> jnp.ndarray:
+        """E_hat(w) = sum_{i in M} L(X^(i), w^(i))  (paper eq. 2)."""
+        return jnp.sum(self.node_values(data, w) * data.labeled_mask)
+
+    def make_prox(self, data: NodeData, tau: jnp.ndarray, *,
+                  affine_fn: Callable | None = None) -> Callable:
+        """Batched primal-update operator PU (eq. 18): (V, n) -> (V, n).
+
+        ``affine_fn`` routes affine-map losses through the Pallas
+        ``batched_affine`` kernel; losses with iterative inner solvers may
+        ignore it.
+        """
+        raise NotImplementedError
+
+
+@register_loss("squared")
+@dataclasses.dataclass(frozen=True)
+class SquaredLoss(Loss):
+    """Squared error (paper §4.1, eq. 20) — closed-form ridge prox (eq. 21)."""
+
+    def node_values(self, data, w):
+        return _core.squared_loss(data, w)
+
+    def make_prox(self, data, tau, *, affine_fn=None):
+        return _core.make_squared_prox(data, tau, affine_fn=affine_fn)
+
+
+@register_loss("lasso")
+@dataclasses.dataclass(frozen=True)
+class LassoLoss(Loss):
+    """Lasso (paper §4.2, eq. 22) — ISTA inner loop for the m_i << n regime.
+
+    ``alpha`` is the local l1 weight (lambda inside eq. 22; renamed to
+    avoid clashing with the TV strength).
+    """
+
+    alpha: float = 0.0
+    num_inner: int = 50
+
+    def node_values(self, data, w):
+        return _core.lasso_loss(data, w, self.alpha)
+
+    def make_prox(self, data, tau, *, affine_fn=None):
+        return _core.make_lasso_prox(data, tau, self.alpha,
+                                     num_inner=self.num_inner)
+
+
+@register_loss("logistic")
+@dataclasses.dataclass(frozen=True)
+class LogisticLoss(Loss):
+    """Logistic (paper §4.3, eq. 23) — damped-Newton inner loop."""
+
+    num_inner: int = 8
+
+    def node_values(self, data, w):
+        return _core.logistic_loss(data, w)
+
+    def make_prox(self, data, tau, *, affine_fn=None):
+        return _core.make_logistic_prox(data, tau, num_inner=self.num_inner)
+
+
+@dataclasses.dataclass(frozen=True)
+class CallableLoss(Loss):
+    """Adapter for caller-supplied prox operators (legacy entry points).
+
+    Wraps an externally-built ``prox(v)`` while delegating metric values to
+    ``base``.  Not registered — exists so ``core.nlasso.solve_nlasso`` can
+    keep accepting arbitrary prox callables through the new solver.
+    """
+
+    prox_fn: Callable = None
+    base: Loss = None
+
+    def node_values(self, data, w):
+        return self.base.node_values(data, w)
+
+    def make_prox(self, data, tau, *, affine_fn=None):
+        return self.prox_fn

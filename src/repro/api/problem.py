@@ -1,0 +1,180 @@
+"""Declarative problem / config / result containers for the unified solver.
+
+A :class:`Problem` is everything eq. (4) needs — the empirical graph, the
+batched node-local datasets, the TV strength lambda, plus the two template
+slots (a :class:`~repro.api.losses.Loss` and a
+:class:`~repro.api.regularizers.Regularizer`).  It is a pytree whose array
+leaves (graph, data, lambda) are traced and whose template slots are static
+aux data, so Problems flow through ``jax.jit`` / ``jax.vmap`` unchanged —
+``solve_path`` vmaps one Problem over a whole lambda path.
+
+:class:`SolverConfig` carries the *how* (iterations, over-relaxation,
+continuation schedule, metric cadence, backend selection) and
+:class:`SolveResult` is the single result pytree every backend returns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.losses import Loss, SquaredLoss, get_loss
+from repro.api.regularizers import Regularizer, TotalVariation, \
+    get_regularizer
+from repro.core.graph import EmpiricalGraph
+from repro.core.losses import NodeData
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """One networked-learning instance: min_w E_hat(w) + lam * g(D w)."""
+
+    graph: EmpiricalGraph
+    data: NodeData
+    lam: jnp.ndarray | float = 1e-3
+    loss: Loss = SquaredLoss()
+    regularizer: Regularizer = TotalVariation()
+
+    # -- pytree plumbing (loss/regularizer are static template slots) -------
+    def tree_flatten(self):
+        return (self.graph, self.data, self.lam), (self.loss,
+                                                   self.regularizer)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        graph, data, lam = children
+        loss, regularizer = aux
+        return cls(graph=graph, data=data, lam=lam, loss=loss,
+                   regularizer=regularizer)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def create(cls, graph: EmpiricalGraph, data: NodeData, lam=1e-3, *,
+               loss="squared", regularizer="tv", **loss_kwargs) -> "Problem":
+        """Build a Problem resolving registry names for the template slots.
+
+        ``loss`` / ``regularizer`` accept instances or registry names;
+        extra kwargs (``alpha``, ``num_inner``) configure a named loss.
+        """
+        return cls(graph=graph, data=data, lam=lam,
+                   loss=get_loss(loss, **loss_kwargs),
+                   regularizer=get_regularizer(regularizer))
+
+    def with_lam(self, lam) -> "Problem":
+        """Same instance at a different TV strength (lambda-path helper)."""
+        return dataclasses.replace(self, lam=lam)
+
+    # -- objective -----------------------------------------------------------
+    def objective(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Primal objective E_hat(w) + lam * g(D w) (paper eq. 4)."""
+        return (self.loss.empirical_error(self.data, w)
+                + self.regularizer.value(self.graph, w, self.lam))
+
+    @property
+    def num_nodes(self) -> int:
+        return self.data.num_nodes
+
+    @property
+    def num_features(self) -> int:
+        return self.data.num_features
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """How to run Algorithm 1 (everything static / Python-side).
+
+    Core iteration:
+      num_iters:    primal-dual iterations (ignored when continuation=True).
+      rho:          Krasnosel'skii-Mann over-relaxation in (0, 2); ~1.9
+                    roughly doubles per-iteration progress (EXPERIMENTS.md).
+      metric_every: objective/MSE cadence; must divide the iteration count.
+                    Traces then have length num_iters // metric_every.
+
+    Continuation (beyond-paper warm-start schedule, see
+    ``core.nlasso.nlasso_continuation`` for the rationale):
+      continuation: solve first at warm_lam (default 10x target clipped to
+                    [1e-2, 1]), re-project the duals, then solve at the
+                    target lambda.
+      warm_lam / warm_iters / final_iters: the schedule.
+
+    Backend dispatch:
+      backend:     "dense" (single-program lax.scan), "sharded" (shard_map
+                   message passing), or "pallas" (dense with the TPU
+                   kernels auto-wired).
+      mesh / mesh_axis / num_shards / partitioner / comm: sharded-backend
+                   layout knobs (mesh defaults to a (1, 1) host mesh).
+      clip_fn / affine_fn: custom kernel hooks for the dual clip and the
+                   affine primal update (dense/pallas backends; the pallas
+                   backend fills unset hooks with the stock TPU kernels).
+                   Prefer ``backend="pallas"`` unless you need a
+                   non-standard kernel.
+    """
+
+    num_iters: int = 500
+    rho: float = 1.0
+    metric_every: int = 1
+    # continuation schedule
+    continuation: bool = False
+    warm_lam: float | None = None
+    warm_iters: int = 3000
+    final_iters: int = 1000
+    # backend dispatch
+    backend: str = "dense"
+    mesh: Any = dataclasses.field(default=None, compare=False, repr=False)
+    mesh_axis: str = "data"
+    num_shards: int | None = None
+    partitioner: str = "cluster"
+    comm: str = "dense"
+    # custom kernel hooks
+    clip_fn: Any = dataclasses.field(default=None, compare=False,
+                                     repr=False)
+    affine_fn: Any = dataclasses.field(default=None, compare=False,
+                                       repr=False)
+    # eq.-11 certificate on the result (disabled internally for
+    # warm-phase solves whose result is discarded)
+    compute_diagnostics: bool = True
+
+    def replace(self, **kw) -> "SolverConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    """What every backend returns.
+
+    Attributes:
+      w:           (V, n) final primal weights (original node order).
+      u:           (E, n) final dual edge variables (original edge order).
+      objective:   (T,) primal-objective trace (T = iters / metric_every;
+                   length 1 for the sharded backend, which evaluates
+                   metrics once at the final iterate).
+      mse:         (T,) eq.-24 MSE trace vs. w_true, or None.
+      lam:         the TV strength solved at (scalar; (L,) after
+                   ``solve_path``).
+      diagnostics: optimality certificate (eq. 11): ``dual_infeasibility``
+                   always; ``stationarity_residual_labeled`` for the
+                   squared loss.
+    """
+
+    w: jnp.ndarray
+    u: jnp.ndarray
+    objective: jnp.ndarray
+    mse: jnp.ndarray | None
+    lam: jnp.ndarray | float
+    diagnostics: dict
+
+    def tree_flatten(self):
+        return (self.w, self.u, self.objective, self.mse, self.lam,
+                self.diagnostics), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def final_objective(self) -> jnp.ndarray:
+        return self.objective[-1]

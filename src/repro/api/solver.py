@@ -1,0 +1,138 @@
+"""The Solver front-end: backend dispatch, continuation, lambda paths.
+
+One production surface for Algorithm 1 (and its GTVMin generalizations):
+
+    problem = Problem.create(graph, data, lam=1e-3, loss="squared")
+    result = Solver(SolverConfig(num_iters=1000, rho=1.9)).run(problem)
+
+``Solver.run`` dispatches through the backend registry
+(``dense`` | ``sharded`` | ``pallas``) and optionally wraps the run in the
+beyond-paper lambda-continuation schedule.  ``solve_path`` vmaps the dense
+engine over a whole lambda path for hyperparameter sweeps, warm-started
+from one shared coarse solve.
+
+``REPRO_SOLVER_MAX_ITERS`` (env) caps every phase's iteration count — the
+short-iteration knob CI smoke jobs use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.backends import (_solve_dense, certificate, get_backend,
+                                resolve_kernel_hooks)
+from repro.api.problem import Problem, SolveResult, SolverConfig
+
+
+def _iter_cap() -> int:
+    return int(os.environ.get("REPRO_SOLVER_MAX_ITERS", 1 << 30))
+
+
+def _capped(num_iters: int, metric_every: int = 1) -> int:
+    """Apply the env cap, keeping the metric cadence divisibility.
+
+    Leaves ``num_iters`` untouched when no cap bites (so mismatched
+    cadences still error loudly in the backend).
+    """
+    cap = _iter_cap()
+    if num_iters <= cap:
+        return num_iters
+    capped = max(cap, metric_every)
+    return capped - capped % metric_every if metric_every > 1 else capped
+
+
+def _default_warm_lam(lam: float) -> float:
+    """Continuation warm strength: 10x target, clipped to [1e-2, 1].
+
+    The dual-clip bound lambda*A_e limits how far an unlabeled node moves
+    per iteration, so a cold start at small lambda needs ~||w*||/lambda
+    iterations just to travel; warming at a larger lambda propagates fast
+    (see core.nlasso.nlasso_continuation and EXPERIMENTS.md).
+    """
+    return float(min(max(10.0 * lam, 1e-2), 1.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class Solver:
+    """Backend-dispatching runner for :class:`Problem` instances."""
+
+    config: SolverConfig = SolverConfig()
+
+    def run(self, problem: Problem, *, w0=None, u0=None,
+            w_true=None) -> SolveResult:
+        """Solve ``problem`` per the config; returns a SolveResult pytree."""
+        cfg = self.config
+        backend = get_backend(cfg.backend)
+        if not cfg.continuation:
+            run_cfg = cfg.replace(
+                num_iters=_capped(cfg.num_iters, cfg.metric_every))
+            return backend(problem, run_cfg, w0=w0, u0=u0, w_true=w_true)
+
+        warm_lam = (cfg.warm_lam if cfg.warm_lam is not None
+                    else _default_warm_lam(float(problem.lam)))
+        warm_cfg = cfg.replace(
+            continuation=False, compute_diagnostics=False,
+            num_iters=_capped(cfg.warm_iters, cfg.metric_every))
+        warm = backend(problem.with_lam(warm_lam), warm_cfg, w0=w0, u0=u0)
+        # re-project the warm duals onto the target feasible set and debias
+        u_warm = problem.regularizer.project_dual(warm.u, problem.graph,
+                                                  problem.lam)
+        final_cfg = cfg.replace(
+            continuation=False,
+            num_iters=_capped(cfg.final_iters, cfg.metric_every))
+        return backend(problem, final_cfg, w0=warm.w, u0=u_warm,
+                       w_true=w_true)
+
+
+def solve_path(problem: Problem, lams, config: SolverConfig | None = None,
+               *, w_true=None) -> SolveResult:
+    """Solve one problem along a whole lambda path (hyperparameter sweep).
+
+    One coarse solve at the continuation warm strength is shared by every
+    path point; the per-lambda final solves are then ``jax.vmap``-ed, so
+    the sweep compiles once and runs batched.  Returns a SolveResult whose
+    leaves carry a leading ``len(lams)`` axis (``result.lam`` recovers the
+    path).  Dense/pallas backends only.
+    """
+    cfg = config if config is not None else SolverConfig(rho=1.9)
+    if cfg.backend not in ("dense", "pallas"):
+        raise NotImplementedError(
+            "solve_path vmaps the dense engine; backend must be "
+            f"'dense' or 'pallas', got {cfg.backend!r}")
+    lams = jnp.asarray(lams, jnp.float32)
+    if lams.ndim != 1 or lams.shape[0] == 0:
+        raise ValueError("lams must be a non-empty 1-D array")
+
+    warm_lam = (cfg.warm_lam if cfg.warm_lam is not None
+                else _default_warm_lam(float(jnp.max(lams))))
+    warm_cfg = cfg.replace(
+        continuation=False, compute_diagnostics=False,
+        num_iters=_capped(cfg.warm_iters, cfg.metric_every))
+    warm = get_backend(cfg.backend)(problem.with_lam(warm_lam), warm_cfg)
+
+    final_cfg = cfg.replace(
+        continuation=False,
+        num_iters=_capped(cfg.final_iters, cfg.metric_every))
+    clip_fn, affine_fn = resolve_kernel_hooks(problem, cfg,
+                                              cfg.backend == "pallas")
+
+    def solve_one(lam):
+        p = problem.with_lam(lam)
+        u0 = p.regularizer.project_dual(warm.u, p.graph, lam)
+        return _solve_dense(p, final_cfg, w0=warm.w, u0=u0, w_true=w_true,
+                            clip_fn=clip_fn, affine_fn=affine_fn)
+
+    return jax.vmap(solve_one)(lams)
+
+
+def solve(problem: Problem, config: SolverConfig | None = None,
+          **run_kwargs) -> SolveResult:
+    """Functional convenience: ``Solver(config).run(problem, ...)``."""
+    return Solver(config if config is not None else SolverConfig()).run(
+        problem, **run_kwargs)
+
+
+__all__ = ["Solver", "solve", "solve_path", "certificate"]

@@ -1,0 +1,51 @@
+"""Version-compat shims for the installed JAX.
+
+The codebase targets the current JAX surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``) but must
+also run on older releases (0.4.x) where ``shard_map`` still lives under
+``jax.experimental`` and ``AxisType`` does not exist.  Every
+version-dependent lookup is concentrated here so call sites stay clean and
+the test-suite passes on both old and new JAX.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "default_axis_types", "make_mesh"]
+
+
+# -- shard_map ---------------------------------------------------------------
+# jax >= 0.6 exposes jax.shard_map; 0.4.x only has the experimental module.
+# Both accept (f, mesh=..., in_specs=..., out_specs=...) keywords, so a plain
+# symbol alias is enough.
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:  # pragma: no cover - exercised on old JAX only
+    from jax.experimental.shard_map import shard_map
+else:
+    shard_map = _shard_map
+
+
+def default_axis_types(num_axes: int):
+    """``(AxisType.Auto,) * num_axes`` where supported, else ``None``.
+
+    ``jax.sharding.AxisType`` appeared well after 0.4.x; meshes built
+    without it behave as fully-auto meshes there, which is what the
+    launchers want anyway.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * num_axes
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` requesting Auto axis types only when supported."""
+    kwargs = {} if devices is None else {"devices": devices}
+    types = default_axis_types(len(axis_names))
+    if types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names, axis_types=types,
+                                 **kwargs)
+        except TypeError:  # pragma: no cover - axis_types kw not accepted
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

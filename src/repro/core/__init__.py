@@ -1,3 +1,55 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Public surface of the networked federated learning core.
+
+The paper's system — empirical graphs of local datasets, the network
+Lasso objective (eq. 4), and Algorithm 1 — behind one declarative API:
+
+    from repro.core import Problem, Solver, SolverConfig
+
+    problem = Problem.create(graph, data, lam=1e-3, loss="squared")
+    result = Solver(SolverConfig(num_iters=1000, rho=1.9)).run(problem)
+
+Losses (§4.1-4.3), regularizers (TV / GTVMin), and execution backends
+(dense / sharded / pallas) are pluggable registries; the legacy
+convenience front-ends remain available as thin adapters in
+``repro.core.nlasso``.
+
+Implementation note: the ``repro.api`` package itself imports the leaf
+modules here (graph, losses), so everything that would close that cycle is
+re-exported lazily (PEP 562) — only the leaf modules load eagerly.
+"""
+import importlib
+
+from repro.core.graph import (EmpiricalGraph, build_graph, chain_graph,
+                              graph_signal_mse, sbm_graph)
+from repro.core.losses import NodeData
+
+# name -> defining module, resolved on first attribute access
+_LAZY = {name: "repro.api" for name in (
+    "BACKENDS", "LOSSES", "REGULARIZERS", "LassoLoss", "LogisticLoss",
+    "Loss", "Problem", "Regularizer", "SolveResult", "Solver",
+    "SolverConfig", "SquaredLoss", "SquaredTV", "TotalVariation",
+    "certificate", "get_backend", "get_loss", "get_regularizer",
+    "pd_iteration", "register_backend", "register_loss",
+    "register_regularizer", "solve", "solve_path")}
+# NOTE: the function `nlasso` is deliberately NOT re-exported here — the
+# name would collide with the `repro.core.nlasso` submodule (Python binds
+# the submodule on `from repro.core import nlasso`, shadowing any lazy
+# attribute).  Use `from repro.core.nlasso import nlasso`.
+_LAZY.update({name: "repro.core.nlasso" for name in (
+    "NLassoResult", "nlasso_continuation",
+    "primal_dual_gap_certificate")})
+
+__all__ = sorted(set(_LAZY) | {
+    "EmpiricalGraph", "NodeData", "build_graph", "chain_graph",
+    "graph_signal_mse", "sbm_graph"})
+
+
+def __getattr__(name: str):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

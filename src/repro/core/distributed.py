@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import losses as L
 from repro.core.graph import EmpiricalGraph
 from repro.core.partition import (PartitionPlan, block_partition,
@@ -103,29 +104,35 @@ def shard_problem(graph: EmpiricalGraph, data: L.NodeData,
 
 def solve_nlasso_sharded(problem: ShardedProblem, mesh: Mesh, lam: float,
                          num_iters: int, *, axis: str = "data",
-                         rho: float = 1.0,
-                         comm: str = "dense") -> jnp.ndarray:
+                         rho: float = 1.0, comm: str = "dense",
+                         w0: jnp.ndarray | None = None,
+                         u0: jnp.ndarray | None = None,
+                         return_u: bool = False):
     """Run Algorithm 1 under shard_map; returns W in plan layout (S*vp, n).
 
-    ``comm``: "dense" | "boundary" (see module docstring).
+    ``comm``: "dense" | "boundary" (see module docstring).  ``w0``/``u0``
+    warm-start the iteration (plan layout); ``return_u=True`` additionally
+    returns the final dual state U in plan layout (S*ep, n).
     """
     plan = problem.plan
     S, vp, ep = plan.num_shards, plan.nodes_per_shard, plan.edges_per_shard
     n = problem.prox_params["b"].shape[1]
     V_pad = S * vp
-    w0 = jnp.zeros((V_pad, n), jnp.float32)
-    u0 = jnp.zeros((S * ep, n), jnp.float32)
+    if w0 is None:
+        w0 = jnp.zeros((V_pad, n), jnp.float32)
+    if u0 is None:
+        u0 = jnp.zeros((S * ep, n), jnp.float32)
     bound = lam * problem.bound_unit[:, None]
     sigma = 0.5
 
     node_spec = P(axis)
     edge_spec = P(axis)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(node_spec, edge_spec, node_spec,
                        P(axis, None, None), node_spec, node_spec,
                        edge_spec, edge_spec, edge_spec, node_spec),
-             out_specs=node_spec)
+             out_specs=(node_spec, edge_spec))
     def run(w, u, tau, pmat, b, labeled, src, dst, bnd, send):
         me = jax.lax.axis_index(axis)
         base = me * vp
@@ -179,19 +186,39 @@ def solve_nlasso_sharded(problem: ShardedProblem, mesh: Mesh, lam: float,
                 u_new = jnp.clip(u_loc + rho * (u_new - u_loc), -bnd, bnd)
             return (w_new, u_new), None
 
-        (w_fin, _), _ = jax.lax.scan(body, (w, u), None, length=num_iters)
-        return w_fin
+        (w_fin, u_fin), _ = jax.lax.scan(body, (w, u), None,
+                                         length=num_iters)
+        return w_fin, u_fin
 
-    return run(w0, u0, problem.tau, problem.prox_params["p"],
-               problem.prox_params["b"], problem.labeled,
-               problem.src, problem.dst, bound, problem.send_rows)
+    w_out, u_out = run(w0, u0, problem.tau, problem.prox_params["p"],
+                       problem.prox_params["b"], problem.labeled,
+                       problem.src, problem.dst, bound, problem.send_rows)
+    return (w_out, u_out) if return_u else w_out
 
 
 def solve_and_unpermute(graph: EmpiricalGraph, data: L.NodeData, mesh: Mesh,
                         lam: float, num_iters: int, **kw) -> np.ndarray:
-    """Front-end: shard, solve, and return W in the original node order."""
-    num_shards = mesh.shape[kw.get("axis", "data")]
-    problem = shard_problem(graph, data, num_shards,
-                            partitioner=kw.pop("partitioner", "cluster"))
-    w = solve_nlasso_sharded(problem, mesh, lam, num_iters, **kw)
-    return unpermute_node_array(problem.plan, np.asarray(w), graph.num_nodes)
+    """Deprecated shim: shard, solve, return W in the original node order.
+
+    Thin adapter over the unified API — equivalent to
+    ``Solver(SolverConfig(backend="sharded", mesh=mesh, ...)).run(problem)``;
+    prefer that surface for new code (it also returns duals, traces, and
+    diagnostics).
+    """
+    import warnings
+
+    from repro.api import Problem, Solver, SolverConfig
+
+    warnings.warn(
+        "solve_and_unpermute is deprecated; use repro.api.Solver with "
+        "SolverConfig(backend='sharded')", DeprecationWarning, stacklevel=2)
+
+    cfg = SolverConfig(
+        backend="sharded", mesh=mesh, num_iters=num_iters,
+        mesh_axis=kw.pop("axis", "data"), rho=kw.pop("rho", 1.0),
+        comm=kw.pop("comm", "dense"),
+        partitioner=kw.pop("partitioner", "cluster"))
+    if kw:
+        raise TypeError(f"unexpected arguments {sorted(kw)}")
+    res = Solver(cfg).run(Problem.create(graph, data, lam))
+    return np.asarray(res.w)

@@ -32,7 +32,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.backends import pd_iteration
+from repro.api.regularizers import TotalVariation
 from repro.core.graph import EmpiricalGraph, build_graph, chain_graph, sbm_graph
+
+_TV = TotalVariation()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,16 +90,22 @@ def pd_update(state: dict, grad_delta: jnp.ndarray, cfg: FedTVConfig):
         delta <- delta - tau_c (prox_lr * grad_delta + (D^T u)_c)
     dual (step 10):
         u <- clip_{lam A_e}(u + sigma D (2 delta+ - delta))
+
+    Thin adapter over the unified API's ``pd_iteration`` — the primal
+    update is expressed as the inexact (one-gradient-step) prox the paper
+    allows, the dual update is the TV regularizer's resolvent.
     """
     g: EmpiricalGraph = state["graph"]
     delta, u = state["delta"], state["dual"]
-    tau = g.primal_stepsizes()[:, None]
-    sigma = 0.5
-    dtu = g.incidence_transpose_apply(u)
-    delta_new = delta - tau * (cfg.prox_lr * grad_delta + dtu)
-    bound = cfg.lam * g.weights[:, None]
-    u_new = jnp.clip(u + sigma * g.incidence_apply(2.0 * delta_new - delta),
-                     -bound, bound)
+    tau = g.primal_stepsizes()
+
+    def grad_step_prox(v):
+        # single gradient step approximating PU_i (paper §4 remark on
+        # robustness to inexact resolvent evaluation)
+        return v - tau[:, None] * (cfg.prox_lr * grad_delta)
+
+    delta_new, u_new = pd_iteration(g, grad_step_prox, _TV, cfg.lam, tau,
+                                    g.dual_stepsizes(), delta, u)
     return {"delta": delta_new, "dual": u_new, "graph": g}
 
 

@@ -1,30 +1,43 @@
-"""Network Lasso primal-dual solver (paper Algorithm 1).
+"""Network Lasso primal-dual solver (paper Algorithm 1) — legacy surface.
 
 Solves   min_w  sum_{i in M} L(X^(i), w^(i)) + lambda ||w||_TV        (eq. 4)
 jointly with its dual (eq. 7) by the diagonally-preconditioned primal-dual
-iterations (eqs. 14-15):
+iterations (eqs. 14-15) with preconditioners sigma_e = 1/2, tau_i = 1/|N_i|
+(eq. 13).
 
-    w_{k+1} = PU( w_k - T D^T u_k )                         (primal, eq. 17)
-    u_tild  = u_k + Sigma D (2 w_{k+1} - w_k)
-    u_{k+1} = clip_{lambda A_e}( u_tild )                    (dual, step 10)
+The iteration itself now lives in the unified API (``repro.api``): a
+:class:`~repro.api.problem.Problem` (graph + data + pluggable loss and
+regularizer) solved by :class:`~repro.api.solver.Solver` through a backend
+registry (dense ``lax.scan`` / ``shard_map`` message passing / Pallas
+kernels).  Everything in this module is a thin adapter kept so existing
+call sites — and the paper-reading experience of "here is Algorithm 1" —
+keep working:
 
-with preconditioners sigma_e = 1/2, tau_i = 1/|N_i| (eq. 13).
-
-The whole solve is a single ``lax.scan`` — jit-compatible, differentiable in
-the data if needed, and shardable (see core/distributed.py for the explicit
-shard_map message-passing variant).
+  * :func:`nlasso` / :func:`nlasso_continuation` — convenience front-ends,
+  * :func:`solve_nlasso` — the old tuple-returning engine entry point
+    (deprecated; accepts caller-built prox/clip callables),
+  * :func:`pd_step` — one primal-dual iteration (delegates to
+    ``api.pd_iteration``),
+  * :func:`primal_dual_gap_certificate` — eq. 11 diagnostics (delegates to
+    ``api.certificate``).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import warnings
 from typing import Callable, NamedTuple
 
-import jax
 import jax.numpy as jnp
 
+from repro.api.backends import _solve_dense, certificate, pd_iteration
+from repro.api.losses import CallableLoss, get_loss
+from repro.api.problem import Problem, SolverConfig
+from repro.api.regularizers import TotalVariation
+from repro.api.solver import Solver
 from repro.core.graph import EmpiricalGraph
 from repro.core import losses as L
+
+_TV = TotalVariation()
 
 
 class SolverState(NamedTuple):
@@ -54,20 +67,27 @@ def clip_dual(u: jnp.ndarray, bound: jnp.ndarray,
 def pd_step(graph: EmpiricalGraph, prox: Callable, lam: float,
             tau: jnp.ndarray, sigma: jnp.ndarray, state: SolverState,
             clip_fn: Callable | None = None) -> SolverState:
-    """One primal-dual iteration (Algorithm 1 body)."""
-    w, u = state
-    # primal: steps 2-7 (labeled/unlabeled handled inside prox via masking)
-    dtu = graph.incidence_transpose_apply(u)              # D^T u
-    w_new = prox(w - tau[:, None] * dtu)
-    # dual: steps 9-10 (over-relaxed point 2 w_{k+1} - w_k)
-    dw = graph.incidence_apply(2.0 * w_new - w)           # D (2w+ - w)
-    u_new = clip_dual(u + sigma[:, None] * dw, lam * graph.weights,
-                      clip_fn=clip_fn)
-    return SolverState(w_new, u_new)
+    """One primal-dual iteration (Algorithm 1 body) — adapter over
+    ``api.pd_iteration`` with the TV regularizer."""
+    w, u = pd_iteration(graph, prox, _TV, lam, tau, sigma, state.w, state.u,
+                        clip_fn=clip_fn)
+    return SolverState(w, u)
 
 
-@partial(jax.jit, static_argnames=("prox", "num_iters", "loss", "clip_fn",
-                                   "rho"))
+def _legacy_problem(graph, data, lam, loss, alpha, num_inner):
+    """Map the old string-dispatch arguments onto a Problem.
+
+    The legacy front-ends accepted ``alpha``/``num_inner`` regardless of
+    the loss; drop whatever the named loss doesn't take.
+    """
+    kwargs = {"alpha": alpha, "num_inner": num_inner}
+    if loss == "logistic":
+        kwargs = {"num_inner": min(num_inner, 12)}
+    elif loss == "squared":
+        kwargs = {}
+    return Problem.create(graph, data, lam, loss=loss, **kwargs)
+
+
 def solve_nlasso(graph: EmpiricalGraph, data: L.NodeData, prox: Callable,
                  lam: float, num_iters: int, *, loss: str = "squared",
                  w0: jnp.ndarray | None = None,
@@ -75,46 +95,24 @@ def solve_nlasso(graph: EmpiricalGraph, data: L.NodeData, prox: Callable,
                  w_true: jnp.ndarray | None = None,
                  clip_fn: Callable | None = None,
                  rho: float = 1.0):
-    """Run Algorithm 1 for ``num_iters`` iterations.
+    """Deprecated: run Algorithm 1 with a caller-built ``prox``.
 
-    Returns (w, u, objective_trace, mse_trace). ``prox`` must be built with
-    the same graph-derived tau (losses.make_prox(loss, data, tau)).
+    Returns the old ``(w, u, objective_trace, mse_trace)`` tuple.  Prefer
+    ``Solver(SolverConfig(...)).run(Problem.create(...))`` — the prox is
+    then built from the loss registry and kernels are wired per backend.
 
-    ``rho`` in (0, 2) is the Krasnosel'skii-Mann over-relaxation factor
-    (beyond-paper: rho ~ 1.9 roughly doubles the per-iteration progress of
-    the fixed-point iteration while preserving convergence; see
-    EXPERIMENTS.md §Perf-algorithm).
+    Note the objective trace prices the local loss with the *base* loss
+    (alpha = 0 for "lasso"), matching the historical behaviour.
     """
-    V, n = data.num_nodes, data.num_features
-    tau = graph.primal_stepsizes()
-    sigma = graph.dual_stepsizes()
-    w = jnp.zeros((V, n), jnp.float32) if w0 is None else w0
-    u = jnp.zeros((graph.num_edges, n), jnp.float32) if u0 is None else u0
-
-    unlabeled = 1.0 - data.labeled_mask
-    bound = lam * graph.weights[:, None]
-
-    def metrics(w):
-        obj = L.empirical_error(data, w, loss) + lam * graph.total_variation(w)
-        if w_true is None:
-            mse = jnp.float32(0.0)
-        else:
-            # paper eq. (24): MSE over the unlabeled (test) nodes
-            mse = jnp.sum(jnp.sum((w - w_true) ** 2, axis=1) * unlabeled) / V
-        return obj, mse
-
-    def step(state, _):
-        new = pd_step(graph, prox, lam, tau, sigma, state, clip_fn=clip_fn)
-        if rho != 1.0:
-            w_r = state.w + rho * (new.w - state.w)
-            u_r = jnp.clip(state.u + rho * (new.u - state.u), -bound, bound)
-            new = SolverState(w_r, u_r)
-        return new, metrics(new.w)
-
-    init = SolverState(w, u)
-    final, (obj_trace, mse_trace) = jax.lax.scan(
-        step, init, None, length=num_iters)
-    return final.w, final.u, obj_trace, mse_trace
+    warnings.warn(
+        "solve_nlasso is deprecated; use repro.api.Solver.run "
+        "(Problem.create + SolverConfig)", DeprecationWarning, stacklevel=2)
+    problem = Problem(graph=graph, data=data, lam=lam,
+                      loss=CallableLoss(prox_fn=prox, base=get_loss(loss)))
+    res = _solve_dense(problem, SolverConfig(num_iters=num_iters, rho=rho),
+                       w0=w0, u0=u0, w_true=w_true, clip_fn=clip_fn)
+    mse = res.mse if res.mse is not None else jnp.zeros_like(res.objective)
+    return res.w, res.u, res.objective, mse
 
 
 def nlasso(graph: EmpiricalGraph, data: L.NodeData, lam: float,
@@ -129,15 +127,23 @@ def nlasso(graph: EmpiricalGraph, data: L.NodeData, lam: float,
     loss in {"squared", "lasso", "logistic"} — paper §4.1 / §4.2 / §4.3.
     ``alpha`` is the local Lasso regularization weight (called lambda inside
     eq. 22; renamed to avoid clashing with the TV strength ``lam``).
+
+    Thin adapter over the unified API; the caller-supplied
+    ``affine_fn``/``clip_fn`` kernel hooks are forwarded through
+    ``SolverConfig`` (the "pallas" backend wires the stock kernels without
+    any hooks).
+
+    Behaviour change vs. the historical implementation: for
+    ``loss="lasso"`` the objective trace now includes the local
+    ``alpha * ||w||_1`` term (the old code priced the trace at alpha = 0);
+    iterates w/u are unchanged.
     """
-    tau = graph.primal_stepsizes()
-    prox = L.make_prox(loss, data, tau, alpha=alpha, num_inner=num_inner,
-                       affine_fn=affine_fn)
-    w, u, obj, mse = solve_nlasso(
-        graph, data, prox, lam, num_iters, loss=loss, w_true=w_true,
-        clip_fn=clip_fn, rho=rho)
-    return NLassoResult(w=w, u=u, objective=obj,
-                        mse=None if w_true is None else mse)
+    problem = _legacy_problem(graph, data, lam, loss, alpha, num_inner)
+    res = Solver(SolverConfig(num_iters=num_iters, rho=rho,
+                              clip_fn=clip_fn, affine_fn=affine_fn)).run(
+        problem, w_true=w_true)
+    return NLassoResult(w=res.w, u=res.u, objective=res.objective,
+                        mse=res.mse)
 
 
 def nlasso_continuation(graph: EmpiricalGraph, data: L.NodeData,
@@ -158,21 +164,18 @@ def nlasso_continuation(graph: EmpiricalGraph, data: L.NodeData,
     to [1e-2, 1]) where propagation is fast, then re-clip the duals to the
     target bound and debias.  On the paper's §5 setup this reaches the
     asymptotic MSE in ~4k iterations instead of ~40k (see EXPERIMENTS.md).
+
+    Thin adapter over ``SolverConfig(continuation=True)``; caller-supplied
+    kernel hooks are forwarded through the config.  As with :func:`nlasso`,
+    the ``loss="lasso"`` objective trace now includes the alpha term.
     """
-    if warm_lam is None:
-        warm_lam = float(min(max(10.0 * lam, 1e-2), 1.0))
-    tau = graph.primal_stepsizes()
-    prox = L.make_prox(loss, data, tau, alpha=alpha, num_inner=num_inner,
-                       affine_fn=affine_fn)
-    w, u, _, _ = solve_nlasso(graph, data, prox, warm_lam, warm_iters,
-                              loss=loss, rho=rho, clip_fn=clip_fn)
-    bound = lam * graph.weights[:, None]
-    u = jnp.clip(u, -bound, bound)
-    w, u, obj, mse = solve_nlasso(graph, data, prox, lam, final_iters,
-                                  loss=loss, w0=w, u0=u, rho=rho,
-                                  w_true=w_true, clip_fn=clip_fn)
-    return NLassoResult(w=w, u=u, objective=obj,
-                        mse=None if w_true is None else mse)
+    problem = _legacy_problem(graph, data, lam, loss, alpha, num_inner)
+    cfg = SolverConfig(continuation=True, warm_lam=warm_lam,
+                       warm_iters=warm_iters, final_iters=final_iters,
+                       rho=rho, clip_fn=clip_fn, affine_fn=affine_fn)
+    res = Solver(cfg).run(problem, w_true=w_true)
+    return NLassoResult(w=res.w, u=res.u, objective=res.objective,
+                        mse=res.mse)
 
 
 def primal_dual_gap_certificate(graph: EmpiricalGraph, data: L.NodeData,
@@ -183,14 +186,7 @@ def primal_dual_gap_certificate(graph: EmpiricalGraph, data: L.NodeData,
     * dual feasibility: max |u_j^(e)| - lambda A_e  (must be <= 0)
     * stationarity residual for squared loss at labeled nodes:
         grad_i L + (D^T u)_i  (must be ~ 0)
+
+    Adapter over ``api.certificate``.
     """
-    feas = jnp.max(jnp.abs(u) - lam * graph.weights[:, None])
-    pred = jnp.einsum("vmn,vn->vm", data.x, w)
-    r = (pred - data.y) * data.sample_mask
-    grad = 2.0 * jnp.einsum("vm,vmn->vn", r, data.x) / data.counts()[:, None]
-    grad = grad * data.labeled_mask[:, None]
-    station = grad + graph.incidence_transpose_apply(u) * data.labeled_mask[:, None]
-    return {
-        "dual_infeasibility": feas,
-        "stationarity_residual_labeled": jnp.max(jnp.abs(station)),
-    }
+    return certificate(Problem.create(graph, data, lam), w, u)

@@ -162,3 +162,24 @@ def unpermute_node_array(plan: PartitionPlan, arr: np.ndarray,
     valid = plan.node_perm >= 0
     out[plan.node_perm[valid]] = arr[valid]
     return out
+
+
+def permute_edge_array(plan: PartitionPlan, arr: np.ndarray,
+                       fill=0.0) -> np.ndarray:
+    """Reorder+pad an (E, ...) array into the plan's (S * ep, ...) layout."""
+    arr = np.asarray(arr)
+    out = np.full((len(plan.edge_perm),) + arr.shape[1:], fill,
+                  dtype=arr.dtype)
+    valid = plan.edge_perm >= 0
+    out[valid] = arr[plan.edge_perm[valid]]
+    return out
+
+
+def unpermute_edge_array(plan: PartitionPlan, arr: np.ndarray,
+                         num_edges: int) -> np.ndarray:
+    """Inverse of permute_edge_array (drops padding)."""
+    arr = np.asarray(arr)
+    out = np.empty((num_edges,) + arr.shape[1:], dtype=arr.dtype)
+    valid = plan.edge_perm >= 0
+    out[plan.edge_perm[valid]] = arr[valid]
+    return out

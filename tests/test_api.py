@@ -1,0 +1,318 @@
+"""Unified Problem/Solver API tests.
+
+Covers the api_redesign contract: registry round-trips (every loss x every
+backend agreeing on w), SolveResult pytree plumbing, solve_path sanity,
+and equivalence of the legacy entry points (now deprecation shims /
+adapters) with the new surface.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (BACKENDS, LOSSES, REGULARIZERS, Problem, SolveResult,
+                       Solver, SolverConfig, SquaredLoss, TotalVariation,
+                       get_loss, get_regularizer, register_loss, solve_path)
+from repro.core.distributed import solve_and_unpermute
+from repro.core.losses import make_prox
+from repro.core.nlasso import (nlasso, nlasso_continuation, solve_nlasso)
+from repro.data.synthetic import make_classification_sbm, make_sbm_regression
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def sbm():
+    # reduced §5 instance: 2 clusters x 40 nodes
+    return make_sbm_regression(seed=0, cluster_sizes=(40, 40), p_in=0.5,
+                               p_out=1e-3, num_labeled=16)
+
+
+@pytest.fixture(scope="module")
+def paper():
+    # the paper's §5 setup proper (|C1| = |C2| = 150, 30 labeled)
+    return make_sbm_regression(seed=0)
+
+
+@pytest.fixture(scope="module")
+def problem(sbm):
+    return Problem.create(sbm.graph, sbm.data, lam=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_registries_resolve_names():
+    assert set(LOSSES) >= {"squared", "lasso", "logistic"}
+    assert set(REGULARIZERS) >= {"tv", "tv2"}
+    assert set(BACKENDS) >= {"dense", "sharded", "pallas"}
+    for name in LOSSES:
+        loss = get_loss(name)
+        assert loss.name == name
+        assert get_loss(loss) is loss
+    for name in REGULARIZERS:
+        assert get_regularizer(name).name == name
+    with pytest.raises(ValueError):
+        get_loss("nope")
+    with pytest.raises(ValueError):
+        get_regularizer("nope")
+
+
+def test_loss_objects_match_string_dispatch(sbm):
+    """Registry proxes reproduce the legacy make_prox string dispatch."""
+    tau = sbm.graph.primal_stepsizes()
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.standard_normal(
+        (sbm.data.num_nodes, 2)).astype(np.float32))
+    for name, kw in (("squared", {}), ("lasso", {"alpha": 0.02}),
+                     ("logistic", {})):
+        legacy = make_prox(name, sbm.data, tau, **kw)
+        new = get_loss(name, **kw).make_prox(sbm.data, tau)
+        np.testing.assert_allclose(np.asarray(new(v)),
+                                   np.asarray(legacy(v)), atol=1e-6)
+
+
+def test_custom_loss_plugs_into_every_dense_backend(sbm):
+    """The registry is an extension point: a new loss solves end-to-end."""
+
+    @register_loss("scaled_squared")
+    @dataclasses.dataclass(frozen=True)
+    class ScaledSquared(SquaredLoss):
+        scale: float = 1.0
+
+        def node_values(self, data, w):
+            return self.scale * super().node_values(data, w)
+
+    try:
+        p = Problem.create(sbm.graph, sbm.data, 1e-3, loss="scaled_squared",
+                           scale=1.0)
+        res = Solver(SolverConfig(num_iters=50)).run(p)
+        ref = Solver(SolverConfig(num_iters=50)).run(
+            Problem.create(sbm.graph, sbm.data, 1e-3))
+        np.testing.assert_allclose(np.asarray(res.w), np.asarray(ref.w),
+                                   atol=1e-6)
+    finally:
+        LOSSES.pop("scaled_squared")
+
+
+# ---------------------------------------------------------------------------
+# backend agreement (acceptance: <= 1e-4 max-abs-diff on the §5 setup)
+# ---------------------------------------------------------------------------
+
+def test_all_backends_agree_on_paper_setup(paper):
+    p = Problem.create(paper.graph, paper.data, lam=1e-3)
+    cfg = SolverConfig(num_iters=300, rho=1.9)
+    w = {}
+    for backend in ("dense", "pallas", "sharded"):
+        bc = cfg.replace(backend=backend)
+        if backend == "sharded":
+            bc = bc.replace(mesh=make_host_mesh(1, 1))
+        w[backend] = np.asarray(Solver(bc).run(p).w)
+    for a in ("pallas", "sharded"):
+        diff = float(np.max(np.abs(w[a] - w["dense"])))
+        assert diff <= 1e-4, (a, diff)
+
+
+@pytest.mark.parametrize("loss,kw", [("squared", {}),
+                                     ("lasso", {"alpha": 0.02}),
+                                     ("logistic", {})])
+def test_dense_and_pallas_agree_for_every_loss(sbm, loss, kw):
+    ds = sbm if loss != "logistic" else make_classification_sbm(
+        seed=0, cluster_sizes=(20, 20), num_labeled=10)
+    p = Problem.create(ds.graph, ds.data, 1e-2, loss=loss, **kw)
+    res_d = Solver(SolverConfig(num_iters=80)).run(p)
+    res_p = Solver(SolverConfig(num_iters=80, backend="pallas")).run(p)
+    diff = float(np.max(np.abs(np.asarray(res_d.w) - np.asarray(res_p.w))))
+    assert diff <= 1e-5, diff
+
+
+def test_sharded_backend_rejects_unsupported_losses(sbm):
+    p = Problem.create(sbm.graph, sbm.data, 1e-3, loss="logistic")
+    with pytest.raises(NotImplementedError):
+        Solver(SolverConfig(num_iters=10, backend="sharded")).run(p)
+
+
+# ---------------------------------------------------------------------------
+# pytree plumbing
+# ---------------------------------------------------------------------------
+
+def test_solve_result_pytree_roundtrip(problem, sbm):
+    res = Solver(SolverConfig(num_iters=20)).run(problem, w_true=sbm.w_true)
+    leaves, treedef = jax.tree_util.tree_flatten(res)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, SolveResult)
+    for a, b in zip(jax.tree_util.tree_leaves(res),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # tree_map keeps the container type
+    doubled = jax.tree.map(lambda x: 2 * x, res)
+    np.testing.assert_allclose(np.asarray(doubled.w),
+                               2 * np.asarray(res.w))
+
+
+def test_problem_is_jit_and_vmap_compatible(problem):
+    @jax.jit
+    def objective_at_zero(p: Problem):
+        return p.objective(jnp.zeros((p.num_nodes, p.num_features)))
+
+    eager = problem.objective(
+        jnp.zeros((problem.num_nodes, problem.num_features)))
+    np.testing.assert_allclose(float(objective_at_zero(problem)),
+                               float(eager), rtol=1e-6)
+
+
+def test_metric_cadence(problem):
+    full = Solver(SolverConfig(num_iters=60)).run(problem)
+    coarse = Solver(SolverConfig(num_iters=60, metric_every=20)).run(problem)
+    assert coarse.objective.shape == (3,)
+    np.testing.assert_allclose(float(coarse.objective[-1]),
+                               float(full.objective[-1]), rtol=1e-6)
+    with pytest.raises(ValueError):
+        Solver(SolverConfig(num_iters=50, metric_every=7)).run(problem)
+
+
+def test_env_iteration_cap(problem, monkeypatch):
+    monkeypatch.setenv("REPRO_SOLVER_MAX_ITERS", "10")
+    res = Solver(SolverConfig(num_iters=500)).run(problem)
+    assert res.objective.shape == (10,)
+
+
+# ---------------------------------------------------------------------------
+# solve_path
+# ---------------------------------------------------------------------------
+
+def test_solve_path_objective_monotone_in_lam(sbm, problem):
+    lams = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2)
+    res = solve_path(problem, lams,
+                     SolverConfig(rho=1.9, warm_iters=400, final_iters=200),
+                     w_true=sbm.w_true)
+    assert res.w.shape == (len(lams), sbm.graph.num_nodes, 2)
+    np.testing.assert_allclose(np.asarray(res.lam), lams, rtol=1e-6)
+    objs = np.asarray(res.objective[:, -1])
+    # f(lam) = min_w L(w) + lam*TV(w) is nondecreasing in lam
+    assert np.all(np.diff(objs) >= -1e-6 * np.abs(objs[:-1])), objs
+    assert np.all(np.isfinite(np.asarray(res.mse)))
+
+
+def test_solve_path_matches_single_solves(problem):
+    lams = (1e-3, 1e-2)
+    cfg = SolverConfig(rho=1.9, warm_iters=300, final_iters=150)
+    path = solve_path(problem, lams, cfg)
+    for i, lam in enumerate(lams):
+        single = Solver(cfg.replace(continuation=True, warm_lam=float(
+            min(max(10.0 * max(lams), 1e-2), 1.0)))).run(
+                problem.with_lam(lam))
+        np.testing.assert_allclose(np.asarray(path.w[i]),
+                                   np.asarray(single.w), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# GTVMin regularizer
+# ---------------------------------------------------------------------------
+
+def test_squared_tv_smooths_instead_of_clustering(sbm):
+    """tv2 (GTVMin quadratic coupling) runs end-to-end; large lam shrinks
+    the between-node variation without the piecewise-constant clustering
+    of TV, and its dual is unbounded (no clip)."""
+    p = Problem.create(sbm.graph, sbm.data, 1.0, regularizer="tv2")
+    res = Solver(SolverConfig(num_iters=200)).run(p)
+    assert np.isfinite(float(res.objective[-1]))
+    w = np.asarray(res.w)
+    tv_after = float(sbm.graph.total_variation(res.w))
+    res0 = Solver(SolverConfig(num_iters=200)).run(p.with_lam(1e-6))
+    tv_before = float(sbm.graph.total_variation(res0.w))
+    assert tv_after < 0.5 * tv_before, (tv_after, tv_before)
+    assert float(res.diagnostics["dual_infeasibility"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims / adapters keep the old surface working
+# ---------------------------------------------------------------------------
+
+def test_nlasso_adapter_equals_solver(sbm):
+    res_old = nlasso(sbm.graph, sbm.data, lam=1e-3, num_iters=120, rho=1.9,
+                     w_true=sbm.w_true)
+    res_new = Solver(SolverConfig(num_iters=120, rho=1.9)).run(
+        Problem.create(sbm.graph, sbm.data, 1e-3), w_true=sbm.w_true)
+    np.testing.assert_allclose(np.asarray(res_old.w),
+                               np.asarray(res_new.w), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(res_old.u),
+                               np.asarray(res_new.u), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(res_old.mse),
+                               np.asarray(res_new.mse), atol=1e-9)
+
+
+def test_nlasso_continuation_adapter_equals_solver(sbm):
+    res_old = nlasso_continuation(sbm.graph, sbm.data, lam=1e-3,
+                                  warm_iters=400, final_iters=200,
+                                  w_true=sbm.w_true)
+    cfg = SolverConfig(continuation=True, warm_iters=400, final_iters=200,
+                       rho=1.9)
+    res_new = Solver(cfg).run(Problem.create(sbm.graph, sbm.data, 1e-3),
+                              w_true=sbm.w_true)
+    np.testing.assert_allclose(np.asarray(res_old.w),
+                               np.asarray(res_new.w), atol=1e-7)
+
+
+def test_solve_nlasso_shim_warns_and_matches(sbm):
+    tau = sbm.graph.primal_stepsizes()
+    prox = make_prox("squared", sbm.data, tau)
+    with pytest.warns(DeprecationWarning):
+        w, u, obj, mse = solve_nlasso(sbm.graph, sbm.data, prox, 1e-3, 100)
+    ref = Solver(SolverConfig(num_iters=100)).run(
+        Problem.create(sbm.graph, sbm.data, 1e-3))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(ref.w), atol=1e-6)
+    assert obj.shape == (100,) and mse.shape == (100,)
+
+
+def test_custom_clip_fn_hook_is_invoked_and_equivalent(sbm):
+    """Caller-supplied kernel hooks (legacy nlasso args / SolverConfig
+    fields) must actually route the dual clip, not be silently dropped."""
+    calls = []
+
+    def my_clip(u, bound):
+        calls.append(1)
+        return jnp.clip(u, -bound[:, None], bound[:, None])
+
+    res = nlasso(sbm.graph, sbm.data, lam=1e-3, num_iters=60,
+                 clip_fn=my_clip)
+    assert calls, "custom clip_fn was never invoked"
+    ref = Solver(SolverConfig(num_iters=60)).run(
+        Problem.create(sbm.graph, sbm.data, 1e-3))
+    np.testing.assert_allclose(np.asarray(res.w), np.asarray(ref.w),
+                               atol=1e-7)
+    # and through the new surface directly (same hook -> jit cache hit, so
+    # the closure is not re-traced; equivalence is the check here)
+    res2 = Solver(SolverConfig(num_iters=60, clip_fn=my_clip)).run(
+        Problem.create(sbm.graph, sbm.data, 1e-3))
+    np.testing.assert_allclose(np.asarray(res2.w), np.asarray(ref.w),
+                               atol=1e-7)
+
+
+def test_solve_and_unpermute_shim_matches_sharded_backend(sbm):
+    mesh = make_host_mesh(1, 1)
+    with pytest.warns(DeprecationWarning):
+        w_shim = solve_and_unpermute(sbm.graph, sbm.data, mesh, 1e-3, 100)
+    res = Solver(SolverConfig(backend="sharded", mesh=mesh,
+                              num_iters=100)).run(
+        Problem.create(sbm.graph, sbm.data, 1e-3))
+    np.testing.assert_allclose(w_shim, np.asarray(res.w), atol=1e-7)
+    assert float(res.diagnostics["dual_infeasibility"]) <= 1e-6
+
+
+def test_sharded_backend_supports_warm_start_continuation(sbm):
+    """The warm-started duals survive the node/edge permutation round-trip:
+    sharded continuation tracks dense continuation step for step."""
+    p = Problem.create(sbm.graph, sbm.data, 1e-3)
+    cfg = SolverConfig(continuation=True, warm_iters=300, final_iters=150,
+                       rho=1.9)
+    dense = Solver(cfg).run(p, w_true=sbm.w_true)
+    sharded = Solver(cfg.replace(backend="sharded",
+                                 mesh=make_host_mesh(1, 1))).run(
+        p, w_true=sbm.w_true)
+    diff = float(np.max(np.abs(np.asarray(sharded.w) - np.asarray(dense.w))))
+    assert diff <= 1e-4, diff
+    np.testing.assert_allclose(float(sharded.mse[-1]),
+                               float(dense.mse[-1]), rtol=1e-4)
