@@ -1,0 +1,168 @@
+"""Experiment harness: sweep scenarios x backends x lambda, emit a report.
+
+Runs every registered scenario (or a ``--scenarios`` subset) through the
+requested backends over the scenario's default lambda path (or ``--lams``),
+and writes a JSON + CSV report of reference metrics — the baseline every
+perf/scale PR is measured against.
+
+Dense/pallas sweeps reuse :func:`repro.api.solve_path` (one shared warm
+solve, vmapped finals); the sharded backend solves each lambda separately
+through the continuation schedule.  Backends that cannot run a scenario
+(e.g. sharded x logistic loss) are recorded as skips, not errors.
+
+    python experiments/run.py --smoke                  # CI-sized sweep
+    python experiments/run.py --scenarios grid2d,small_world \
+        --backends dense,pallas --out results/experiments
+
+``REPRO_SOLVER_MAX_ITERS`` caps every solve phase (the CI smoke knob).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np                                             # noqa: E402
+
+from repro.api import (Solver, SolverConfig, get_backend,      # noqa: E402
+                       solve_path)
+from repro.launch.mesh import make_host_mesh                   # noqa: E402
+from repro.scenarios import SCENARIOS, get_scenario            # noqa: E402
+
+METRIC_KEYS = ("objective", "weight_mse", "prediction_mse", "accuracy")
+CSV_FIELDS = ("scenario", "backend", "lam", *METRIC_KEYS,
+              "dual_infeasibility", "sweep_seconds", "num_nodes",
+              "num_edges", "status")
+
+
+def _row(inst, backend, lam, metrics, diag, seconds, status="ok"):
+    g = inst.problem.graph
+    row = {"scenario": inst.name, "backend": backend, "lam": float(lam),
+           "dual_infeasibility": diag, "sweep_seconds": seconds,
+           "num_nodes": g.num_nodes, "num_edges": g.num_edges,
+           "status": status}
+    for k in METRIC_KEYS:
+        row[k] = metrics.get(k)
+    return row
+
+
+def run_scenario(name: str, backends: list[str], *, seed: int, smoke: bool,
+                 lams: list[float] | None, config: SolverConfig):
+    """All (backend, lambda) rows for one scenario (plus skip records)."""
+    scenario = get_scenario(name)
+    inst = scenario.build(seed=seed, smoke=smoke)
+    path = tuple(lams) if lams else scenario.lam_path
+    rows, skips = [], []
+    for backend in backends:
+        t0 = time.perf_counter()
+        try:
+            if backend in ("dense", "pallas"):
+                res = solve_path(inst.problem, path,
+                                 config.replace(backend=backend))
+                seconds = time.perf_counter() - t0
+                for i, lam in enumerate(path):
+                    metrics = inst.evaluate(res.w[i], lam=float(lam))
+                    diag = float(res.diagnostics["dual_infeasibility"][i])
+                    rows.append(_row(inst, backend, lam, metrics, diag,
+                                     seconds))
+            else:
+                solver = Solver(config.replace(
+                    backend=backend, continuation=True,
+                    mesh=make_host_mesh(1, 1)))
+                results = [(lam, solver.run(inst.problem.with_lam(
+                    float(lam)))) for lam in path]
+                # like the vmapped sweep: one whole-path wall time per row
+                seconds = time.perf_counter() - t0
+                for lam, res in results:
+                    metrics = inst.evaluate(res.w, lam=float(lam))
+                    diag = float(res.diagnostics["dual_infeasibility"])
+                    rows.append(_row(inst, backend, lam, metrics, diag,
+                                     seconds))
+        except NotImplementedError as e:
+            skips.append({"scenario": name, "backend": backend,
+                          "reason": str(e)})
+    return rows, skips
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated subset (default: all registered)")
+    ap.add_argument("--backends", default="dense,pallas,sharded")
+    ap.add_argument("--lams", default=None,
+                    help="comma-separated lambda override for every scenario")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized instances and short iteration budgets")
+    ap.add_argument("--out", default=os.path.join("results", "experiments"))
+    args = ap.parse_args(argv)
+
+    names = (args.scenarios.split(",") if args.scenarios
+             else sorted(SCENARIOS))
+    backends = args.backends.split(",")
+    # fail fast on typos — a bad name must not kill a half-finished sweep
+    for name in names:
+        get_scenario(name)
+    for backend in backends:
+        get_backend(backend)
+    lams = ([float(x) for x in args.lams.split(",")] if args.lams else None)
+    config = SolverConfig(
+        rho=1.9,
+        warm_iters=300 if args.smoke else 3000,
+        final_iters=200 if args.smoke else 1000,
+        num_iters=500 if args.smoke else 2000)
+
+    all_rows, all_skips = [], []
+    for name in names:
+        t0 = time.perf_counter()
+        rows, skips = run_scenario(name, backends, seed=args.seed,
+                                   smoke=args.smoke, lams=lams,
+                                   config=config)
+        all_rows.extend(rows)
+        all_skips.extend(skips)
+        done = sorted({r["backend"] for r in rows})
+        print(f"[{name}] {len(rows)} rows on {done} "
+              f"({time.perf_counter() - t0:.1f}s)"
+              + (f", skipped {[s['backend'] for s in skips]}"
+                 if skips else ""))
+
+    report = {
+        "config": {"seed": args.seed, "smoke": args.smoke,
+                   "backends": backends, "scenarios": names,
+                   "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                   "max_iters_env":
+                       os.environ.get("REPRO_SOLVER_MAX_ITERS")},
+        "scenarios": {n: {"description": SCENARIOS[n].description,
+                          "graph_family": SCENARIOS[n].graph_family,
+                          "data_model": SCENARIOS[n].data_model,
+                          "loss": SCENARIOS[n].loss,
+                          "regularizer": SCENARIOS[n].regularizer,
+                          "lam_path": list(SCENARIOS[n].lam_path),
+                          "metric": SCENARIOS[n].metric}
+                      for n in names},
+        "rows": all_rows,
+        "skipped": all_skips,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    json_path = os.path.join(args.out, "report.json")
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2)
+    csv_path = os.path.join(args.out, "report.csv")
+    with open(csv_path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=CSV_FIELDS)
+        writer.writeheader()
+        writer.writerows(all_rows)
+    covered = {(r["scenario"], r["backend"]) for r in all_rows}
+    print(f"report: {json_path} ({len(all_rows)} rows, "
+          f"{len({s for s, _ in covered})} scenarios x "
+          f"{len({b for _, b in covered})} backends); csv: {csv_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

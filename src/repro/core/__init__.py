@@ -19,8 +19,9 @@ re-exported lazily (PEP 562) — only the leaf modules load eagerly.
 """
 import importlib
 
-from repro.core.graph import (EmpiricalGraph, build_graph, chain_graph,
-                              graph_signal_mse, sbm_graph)
+from repro.core.graph import (EmpiricalGraph, barabasi_albert_graph,
+                              build_graph, chain_graph, graph_signal_mse,
+                              grid_graph, sbm_graph, watts_strogatz_graph)
 from repro.core.losses import NodeData
 
 # name -> defining module, resolved on first attribute access
@@ -40,8 +41,9 @@ _LAZY.update({name: "repro.core.nlasso" for name in (
     "primal_dual_gap_certificate")})
 
 __all__ = sorted(set(_LAZY) | {
-    "EmpiricalGraph", "NodeData", "build_graph", "chain_graph",
-    "graph_signal_mse", "sbm_graph"})
+    "EmpiricalGraph", "NodeData", "barabasi_albert_graph", "build_graph",
+    "chain_graph", "graph_signal_mse", "grid_graph", "sbm_graph",
+    "watts_strogatz_graph"})
 
 
 def __getattr__(name: str):

@@ -52,9 +52,9 @@ class FedTVConfig:
 
 
 def make_client_graph(cfg: FedTVConfig) -> EmpiricalGraph:
-    if cfg.graph_kind == "chain":
-        return chain_graph(cfg.num_clients)
     rng = np.random.default_rng(cfg.seed)
+    if cfg.graph_kind == "chain":
+        return chain_graph(rng, cfg.num_clients)
     sizes = [cfg.num_clients // cfg.num_clusters] * cfg.num_clusters
     sizes[-1] += cfg.num_clients - sum(sizes)
     g, _ = sbm_graph(rng, sizes, cfg.p_in, cfg.p_out)

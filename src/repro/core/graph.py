@@ -187,10 +187,87 @@ def sbm_graph(rng: np.random.Generator, cluster_sizes, p_in: float,
     return g, assign
 
 
-def chain_graph(num_nodes: int, weight: float = 1.0) -> EmpiricalGraph:
-    """Simple path graph — handy for tests (fused-lasso structure)."""
+def chain_graph(rng: np.random.Generator, num_nodes: int,
+                weight: float = 1.0) -> EmpiricalGraph:
+    """Path graph 0-1-...-(V-1) — the fused-lasso / changepoint structure.
+
+    Every generator in this module takes a ``numpy.random.Generator`` as
+    its first argument, deterministic families included, so scenario code
+    can treat the whole zoo uniformly (same seed -> identical graph).
+    """
+    del rng  # deterministic family; accepted for the uniform signature
     e = np.stack([np.arange(num_nodes - 1), np.arange(1, num_nodes)], axis=1)
     return build_graph(e, np.full(num_nodes - 1, weight, np.float32), num_nodes)
+
+
+def grid_graph(rng: np.random.Generator, rows: int, cols: int,
+               weight: float = 1.0) -> EmpiricalGraph:
+    """2-D lattice with 4-neighbour connectivity (image-denoising TV)."""
+    del rng  # deterministic family; accepted for the uniform signature
+    idx = np.arange(rows * cols).reshape(rows, cols)
+    right = np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], axis=1)
+    down = np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], axis=1)
+    edges = np.concatenate([right, down], axis=0)
+    return build_graph(edges, np.full(len(edges), weight, np.float32),
+                       rows * cols)
+
+
+def watts_strogatz_graph(rng: np.random.Generator, num_nodes: int,
+                         k: int = 4, p_rewire: float = 0.1,
+                         weight: float = 1.0) -> EmpiricalGraph:
+    """Watts-Strogatz small world: ring lattice (k/2 neighbours per side)
+    with each lattice edge rewired to a random endpoint with prob p_rewire.
+
+    Rewiring keeps the source endpoint, never creates self-loops, and lets
+    ``build_graph`` drop the (rare) duplicate edges, matching the usual
+    construction.
+    """
+    if k % 2 or k <= 0:
+        raise ValueError(f"k must be a positive even integer, got {k}")
+    src, dst = [], []
+    for hop in range(1, k // 2 + 1):
+        i = np.arange(num_nodes)
+        j = (i + hop) % num_nodes
+        src.append(i)
+        dst.append(j)
+    src = np.concatenate(src)
+    dst = np.concatenate(dst)
+    rewire = rng.random(len(src)) < p_rewire
+    new_dst = rng.integers(0, num_nodes, size=len(src))
+    # avoid self-loops on rewired edges (shift by one when they collide)
+    new_dst = np.where(new_dst == src, (new_dst + 1) % num_nodes, new_dst)
+    dst = np.where(rewire, new_dst, dst)
+    edges = np.stack([src, dst], axis=1)
+    return build_graph(edges, np.full(len(edges), weight, np.float32),
+                       num_nodes)
+
+
+def barabasi_albert_graph(rng: np.random.Generator, num_nodes: int,
+                          m: int = 2,
+                          weight: float = 1.0) -> EmpiricalGraph:
+    """Barabasi-Albert preferential attachment: hub-dominated degrees.
+
+    Starts from a complete seed graph on m+1 nodes; each arriving node
+    attaches to m distinct existing nodes sampled proportionally to degree
+    (sampling from the repeated-endpoints list, the standard construction).
+    """
+    if not 1 <= m < num_nodes:
+        raise ValueError(f"need 1 <= m < num_nodes, got m={m}, V={num_nodes}")
+    seed_n = m + 1
+    edges = [(i, j) for i in range(seed_n) for j in range(i + 1, seed_n)]
+    # flat list of edge endpoints: sampling uniformly from it is sampling
+    # nodes proportionally to degree
+    endpoints = [v for e in edges for v in e]
+    for v in range(seed_n, num_nodes):
+        targets: set[int] = set()
+        while len(targets) < m:
+            targets.add(int(endpoints[rng.integers(0, len(endpoints))]))
+        for t in targets:
+            edges.append((t, v))
+            endpoints.extend((t, v))
+    edges = np.asarray(edges, dtype=np.int64)
+    return build_graph(edges, np.full(len(edges), weight, np.float32),
+                       num_nodes)
 
 
 @partial(jax.jit, static_argnames=())

@@ -1,9 +1,16 @@
-"""Synthetic networked-regression data (paper §5).
+"""Synthetic networked data: the paper's §5 SBM setup + generic builders.
 
-SBM empirical graph with two clusters |C1| = |C2| = 150, p_in = 1/2; each
-node holds m_i = 5 data points with features x ~ N(0, I_2) and noiseless
-labels y = x^T wbar^(i), wbar = (2,2) in C1 and (-2,2) in C2.  A training
-set M of 30 randomly-selected nodes is labeled.
+The §5 reference instance: SBM empirical graph with two clusters
+|C1| = |C2| = 150, p_in = 1/2; each node holds m_i = 5 data points with
+features x ~ N(0, I_2) and noiseless labels y = x^T wbar^(i),
+wbar = (2,2) in C1 and (-2,2) in C2.  A training set M of 30
+randomly-selected nodes is labeled.
+
+Beyond §5 the module provides graph-agnostic builders used by the
+scenario zoo (``repro.scenarios``): :func:`make_regression_data` and
+:func:`make_classification_data` attach local datasets to *any*
+:class:`EmpiricalGraph` given per-node ground-truth weights, with
+heterogeneous per-node label-noise scales.
 """
 from __future__ import annotations
 
@@ -25,6 +32,90 @@ class NetworkedDataset:
     labeled_nodes: np.ndarray    # (M,) indices of the training set M
 
 
+def _labeled_mask(rng: np.random.Generator, num_nodes: int,
+                  num_labeled: int) -> tuple[np.ndarray, np.ndarray]:
+    labeled = rng.choice(num_nodes, size=num_labeled, replace=False)
+    mask = np.zeros(num_nodes, dtype=np.float32)
+    mask[labeled] = 1.0
+    return labeled, mask
+
+
+def make_regression_data(
+    rng: np.random.Generator,
+    graph: EmpiricalGraph,
+    w_true: np.ndarray,
+    samples_per_node: int = 5,
+    num_labeled: int = 30,
+    noise_scale: float | np.ndarray = 0.0,
+    clusters: np.ndarray | None = None,
+) -> NetworkedDataset:
+    """Local linear-regression datasets on an arbitrary empirical graph.
+
+    y^(i) = x^T wbar^(i) + noise_scale_i * eps with x ~ N(0, I_n).
+    ``noise_scale`` may be a scalar (homogeneous) or a (V,) array of
+    per-node scales — the heterogeneous-noise knob the small-world
+    scenario uses (every node measures the same model, some through much
+    noisier channels).
+    """
+    V = graph.num_nodes
+    w_true = np.asarray(w_true, dtype=np.float32)
+    n = w_true.shape[1]
+    scale = np.broadcast_to(np.asarray(noise_scale, np.float32), (V,))
+    x = rng.standard_normal((V, samples_per_node, n)).astype(np.float32)
+    y = np.einsum("vmn,vn->vm", x, w_true)
+    if np.any(scale > 0):      # noiseless callers draw nothing from rng here
+        y = y + scale[:, None] * rng.standard_normal(y.shape).astype(
+            np.float32)
+    labeled, mask = _labeled_mask(rng, V, num_labeled)
+    data = NodeData(
+        x=jnp.asarray(x),
+        y=jnp.asarray(y.astype(np.float32)),
+        sample_mask=jnp.ones((V, samples_per_node), jnp.float32),
+        labeled_mask=jnp.asarray(mask),
+    )
+    return NetworkedDataset(
+        graph=graph, data=data, w_true=jnp.asarray(w_true),
+        clusters=(np.zeros(V, np.int64) if clusters is None
+                  else np.asarray(clusters)),
+        labeled_nodes=labeled,
+    )
+
+
+def make_classification_data(
+    rng: np.random.Generator,
+    graph: EmpiricalGraph,
+    w_true: np.ndarray,
+    samples_per_node: int = 8,
+    num_labeled: int = 20,
+    clusters: np.ndarray | None = None,
+) -> NetworkedDataset:
+    """Local logistic-classification datasets on an arbitrary graph.
+
+    Binary labels y ~ Bernoulli(sigmoid(x^T wbar^(i))) for the §4.3
+    logistic loss; the clustered-FL scenario (2105.12769-style) pairs this
+    with an SBM graph.
+    """
+    V = graph.num_nodes
+    w_true = np.asarray(w_true, dtype=np.float32)
+    n = w_true.shape[1]
+    x = rng.standard_normal((V, samples_per_node, n)).astype(np.float32)
+    logits = np.einsum("vmn,vn->vm", x, w_true)
+    y = (rng.random(logits.shape) < 1.0 / (1.0 + np.exp(-logits))).astype(
+        np.float32)
+    labeled, mask = _labeled_mask(rng, V, num_labeled)
+    data = NodeData(
+        x=jnp.asarray(x), y=jnp.asarray(y),
+        sample_mask=jnp.ones((V, samples_per_node), jnp.float32),
+        labeled_mask=jnp.asarray(mask),
+    )
+    return NetworkedDataset(
+        graph=graph, data=data, w_true=jnp.asarray(w_true),
+        clusters=(np.zeros(V, np.int64) if clusters is None
+                  else np.asarray(clusters)),
+        labeled_nodes=labeled,
+    )
+
+
 def make_sbm_regression(
     seed: int = 0,
     cluster_sizes=(150, 150),
@@ -39,7 +130,6 @@ def make_sbm_regression(
     """Generate the paper's §5 setup (defaults exactly match the paper)."""
     rng = np.random.default_rng(seed)
     graph, assign = sbm_graph(rng, cluster_sizes, p_in, p_out)
-    V = graph.num_nodes
 
     if cluster_weights is None:
         base = np.array([[2.0, 2.0], [-2.0, 2.0]])
@@ -47,31 +137,11 @@ def make_sbm_regression(
             base = rng.normal(size=(len(cluster_sizes), num_features)) * 2.0
         cluster_weights = base
     cluster_weights = np.asarray(cluster_weights, dtype=np.float32)
-    w_true = cluster_weights[assign]                       # (V, n)
 
-    x = rng.standard_normal((V, samples_per_node, num_features)).astype(
-        np.float32)
-    y = np.einsum("vmn,vn->vm", x, w_true)
-    if label_noise > 0:
-        y = y + label_noise * rng.standard_normal(y.shape).astype(np.float32)
-
-    labeled = rng.choice(V, size=num_labeled, replace=False)
-    labeled_mask = np.zeros(V, dtype=np.float32)
-    labeled_mask[labeled] = 1.0
-
-    data = NodeData(
-        x=jnp.asarray(x),
-        y=jnp.asarray(y.astype(np.float32)),
-        sample_mask=jnp.ones((V, samples_per_node), jnp.float32),
-        labeled_mask=jnp.asarray(labeled_mask),
-    )
-    return NetworkedDataset(
-        graph=graph,
-        data=data,
-        w_true=jnp.asarray(w_true),
-        clusters=assign,
-        labeled_nodes=labeled,
-    )
+    return make_regression_data(
+        rng, graph, cluster_weights[assign],
+        samples_per_node=samples_per_node, num_labeled=num_labeled,
+        noise_scale=label_noise, clusters=assign)
 
 
 def make_classification_sbm(
@@ -86,23 +156,9 @@ def make_classification_sbm(
     """Binary-label variant for the logistic loss (paper §4.3)."""
     rng = np.random.default_rng(seed)
     graph, assign = sbm_graph(rng, cluster_sizes, p_in, p_out)
-    V = graph.num_nodes
     base = np.array([[3.0, 3.0], [-3.0, 3.0]])
     if num_features != 2 or len(cluster_sizes) > 2:
         base = rng.normal(size=(len(cluster_sizes), num_features)) * 3.0
-    w_true = base[assign].astype(np.float32)
-    x = rng.standard_normal((V, samples_per_node, num_features)).astype(
-        np.float32)
-    logits = np.einsum("vmn,vn->vm", x, w_true)
-    y = (rng.random(logits.shape) < 1.0 / (1.0 + np.exp(-logits))).astype(
-        np.float32)
-    labeled = rng.choice(V, size=num_labeled, replace=False)
-    labeled_mask = np.zeros(V, dtype=np.float32)
-    labeled_mask[labeled] = 1.0
-    data = NodeData(
-        x=jnp.asarray(x), y=jnp.asarray(y),
-        sample_mask=jnp.ones((V, samples_per_node), jnp.float32),
-        labeled_mask=jnp.asarray(labeled_mask))
-    return NetworkedDataset(graph=graph, data=data,
-                            w_true=jnp.asarray(w_true), clusters=assign,
-                            labeled_nodes=labeled)
+    return make_classification_data(
+        rng, graph, base[assign], samples_per_node=samples_per_node,
+        num_labeled=num_labeled, clusters=assign)

@@ -1,0 +1,146 @@
+"""The Scenario abstraction: one registered networked-learning workload.
+
+The paper's Algorithm 1 is defined for *any* empirical graph and
+local-dataset mix, but a reproduction only earns that generality by
+exercising it.  A :class:`Scenario` bundles one point of the workload
+space — graph family x data model x loss/regularizer choice x reference
+metric — behind a uniform ``build(seed) -> ScenarioInstance`` interface,
+so the conformance suite, the golden-value tests, and the experiment
+harness all sweep the same zoo without bespoke setup code.
+
+Scenarios are registered (``@register_scenario``), like losses,
+regularizers, and backends in ``repro.api``: adding a workload is one
+decorated builder function, and every consumer — `tests/test_conformance
+.py`, ``experiments/run.py``, ``examples/scenario_tour.py`` — picks it up
+automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import Problem
+from repro.core.graph import graph_signal_mse
+from repro.data.synthetic import NetworkedDataset
+
+SCENARIOS: dict[str, "Scenario"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioInstance:
+    """One realized scenario: a ready Problem plus its ground truth."""
+
+    scenario: "Scenario"
+    problem: Problem
+    dataset: NetworkedDataset
+
+    @property
+    def name(self) -> str:
+        return self.scenario.name
+
+    @property
+    def w_true(self) -> jnp.ndarray:
+        return self.dataset.w_true
+
+    def evaluate(self, w: jnp.ndarray,
+                 lam: float | None = None) -> dict[str, float]:
+        """Reference metrics at a solution ``w``.
+
+        Always: the primal objective and the eq.-24 weight MSE over the
+        unlabeled (test) nodes.  Classification scenarios add test-node
+        label accuracy; regression scenarios add test-node prediction MSE.
+        ``lam`` overrides the TV strength the objective is evaluated at
+        (lambda sweeps must score each point at its own lambda).
+        """
+        ds = self.dataset
+        problem = self.problem if lam is None else self.problem.with_lam(lam)
+        unlabeled = 1.0 - np.asarray(ds.data.labeled_mask)
+        out = {
+            "objective": float(problem.objective(w)),
+            "weight_mse": float(graph_signal_mse(
+                w, ds.w_true, jnp.asarray(unlabeled))),
+        }
+        x = np.asarray(ds.data.x)
+        y = np.asarray(ds.data.y)
+        pred = np.einsum("vmn,vn->vm", x, np.asarray(w))
+        test = unlabeled > 0
+        if self.scenario.metric == "accuracy":
+            out["accuracy"] = float(
+                np.mean((pred[test] > 0) == (y[test] > 0.5)))
+        else:
+            out["prediction_mse"] = float(np.mean((pred[test] - y[test]) ** 2))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A registered workload template (graph x data x loss x regularizer).
+
+    ``builder(rng, smoke)`` draws the graph and local datasets; ``build``
+    wraps them into a ready :class:`~repro.api.Problem` at the scenario's
+    reference TV strength (or a caller override).  ``lam_path`` is the
+    default sweep grid the experiment harness runs.
+    """
+
+    name: str
+    description: str
+    graph_family: str
+    data_model: str
+    loss: str
+    regularizer: str
+    lam: float
+    lam_path: tuple[float, ...]
+    metric: str                       # "mse" | "accuracy"
+    builder: Callable[[np.random.Generator, bool], NetworkedDataset]
+    loss_kwargs: tuple[tuple[str, float], ...] = ()
+
+    def build(self, seed: int = 0, *, smoke: bool = False,
+              lam: float | None = None) -> ScenarioInstance:
+        """Realize the scenario: same seed -> identical instance."""
+        rng = np.random.default_rng(seed)
+        ds = self.builder(rng, smoke)
+        problem = Problem.create(
+            ds.graph, ds.data, self.lam if lam is None else lam,
+            loss=self.loss, regularizer=self.regularizer,
+            **dict(self.loss_kwargs))
+        return ScenarioInstance(scenario=self, problem=problem, dataset=ds)
+
+
+def register_scenario(name: str, *, description: str, graph_family: str,
+                      data_model: str, loss: str = "squared",
+                      regularizer: str = "tv", lam: float = 1e-3,
+                      lam_path: tuple[float, ...] = (),
+                      metric: str = "mse", loss_kwargs: dict | None = None):
+    """Decorator registering a builder function as a :class:`Scenario`.
+
+    The decorated ``builder(rng, smoke)`` must return a
+    :class:`NetworkedDataset`; the decorator replaces it with the
+    registered Scenario object (so module attributes *are* scenarios).
+    """
+    def deco(builder) -> Scenario:
+        if name in SCENARIOS:
+            raise ValueError(f"scenario {name!r} already registered")
+        scenario = Scenario(
+            name=name, description=description, graph_family=graph_family,
+            data_model=data_model, loss=loss, regularizer=regularizer,
+            lam=lam, lam_path=tuple(lam_path) or (lam,), metric=metric,
+            builder=builder,
+            loss_kwargs=tuple(sorted((loss_kwargs or {}).items())))
+        SCENARIOS[name] = scenario
+        return scenario
+    return deco
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scenario {name!r}; registered: {sorted(SCENARIOS)}")
+
+
+def list_scenarios() -> list[str]:
+    return sorted(SCENARIOS)

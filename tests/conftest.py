@@ -1,0 +1,24 @@
+"""Shared pytest configuration: the golden-value update flag.
+
+``pytest tests/test_golden.py --update-golden`` regenerates the committed
+reference outputs under ``tests/golden/`` instead of comparing against
+them (used after an *intentional* numerics change; the diff then documents
+exactly what moved).
+
+``HAVE_HYPOTHESIS`` is the shared guard for the optional property tests
+(hypothesis ships in the ``[test]`` extra; without it those tests are
+defined as visible skip stubs, never silently dropped).
+"""
+
+try:
+    import hypothesis                                  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite tests/golden/*.json from the current numerics "
+             "instead of asserting against them")

@@ -1,0 +1,62 @@
+"""Golden-value regression tests: committed reference numerics per scenario.
+
+Each scenario's smoke instance is solved with a fixed dense config under a
+fixed seed; the resulting metrics (final objective, weight MSE, TV, the
+scenario's reference metric) are committed in ``tests/golden/<name>.json``.
+Future perf/refactor PRs cannot silently change numerics: an intentional
+change reruns with ``--update-golden`` and the JSON diff documents what
+moved.
+
+Tolerances are loose enough for BLAS/platform variation (rtol 2e-3) but
+far tighter than any algorithmic change would produce.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.api import Solver, SolverConfig
+from repro.scenarios import SCENARIOS, get_scenario
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+# fixed budget well under the CI smoke caps, so the numbers are identical
+# with or without REPRO_SOLVER_MAX_ITERS in play
+GOLD_CONF = SolverConfig(num_iters=300, rho=1.9)
+SEED = 0
+
+
+def compute_metrics(name: str) -> dict[str, float]:
+    inst = get_scenario(name).build(seed=SEED, smoke=True)
+    res = Solver(GOLD_CONF).run(inst.problem)
+    out = inst.evaluate(res.w)
+    out["tv"] = float(inst.problem.graph.total_variation(res.w))
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_golden_values(name, request):
+    path = GOLDEN_DIR / f"{name}.json"
+    got = compute_metrics(name)
+    if request.config.getoption("--update-golden"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=2, sort_keys=True) + "\n")
+        pytest.skip(f"updated {path}")
+    assert path.exists(), (
+        f"no golden file for scenario {name!r}; run "
+        f"pytest tests/test_golden.py --update-golden to create it")
+    want = json.loads(path.read_text())
+    assert set(got) == set(want), (sorted(got), sorted(want))
+    for key, val in want.items():
+        np.testing.assert_allclose(
+            got[key], val, rtol=2e-3, atol=1e-4,
+            err_msg=f"{name}.{key} drifted from tests/golden/{name}.json "
+                    f"(intentional? rerun with --update-golden)")
+
+
+def test_every_golden_file_has_a_scenario():
+    """No stale golden files for scenarios that no longer exist."""
+    if not GOLDEN_DIR.exists():
+        pytest.skip("golden directory not created yet")
+    stale = {p.stem for p in GOLDEN_DIR.glob("*.json")} - set(SCENARIOS)
+    assert not stale, f"stale golden files: {sorted(stale)}"

@@ -9,11 +9,18 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ridge_prox import batched_affine
 from repro.kernels.rwkv6_scan import rwkv6_scan
 from repro.kernels.tv_prox import tv_prox
+
+# hypothesis is optional (shared guard in conftest); the deterministic
+# parity sweeps below run regardless, the property tests only with it
+from conftest import HAVE_HYPOTHESIS
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
 
 
 def rnd(key, shape, dtype=jnp.float32, scale=1.0):
@@ -60,6 +67,88 @@ def test_batched_affine_matches_ref(v, n, dtype):
     want = ref.batched_affine_ref(p, x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ops entry points vs ref — odd shapes, dtypes, non-multiple-of-block sizes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("e,n,block_e", [
+    (1, 1, 64),         # degenerate single edge
+    (65, 3, 64),        # one past a block boundary
+    (127, 2, 32),       # one short of a block boundary
+    (96, 5, 32),        # exact multiple, odd feature count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ops_tv_prox_odd_shapes(e, n, block_e, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(10))
+    u = rnd(k1, (e, n), dtype, scale=2.0)
+    bound = jnp.abs(rnd(k2, (e,), jnp.float32))
+    out = ops.tv_prox(u, bound, block_e=block_e)
+    want = ref.tv_prox_ref(u.astype(jnp.float32), bound)
+    tol = 1e-2 if dtype == jnp.bfloat16 else 1e-6
+    np.testing.assert_allclose(np.asarray(out, np.float32), want,
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("v,n,block_v", [
+    (1, 1, 64),
+    (65, 3, 64),
+    (255, 4, 128),
+    (100, 6, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ops_batched_affine_odd_shapes(v, n, block_v, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    p = rnd(k1, (v, n, n), dtype)
+    x = rnd(k2, (v, n), dtype)
+    out = ops.batched_affine(p, x, block_v=block_v)
+    want = ref.batched_affine_ref(p.astype(jnp.float32),
+                                  x.astype(jnp.float32))
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(e=st.integers(1, 300), n=st.integers(1, 8),
+           block_e=st.sampled_from([8, 32, 64, 256]),
+           use_bf16=st.booleans(), seed=st.integers(0, 2**31 - 1))
+    def test_tv_prox_property_matches_ref(e, n, block_e, use_bf16, seed):
+        """ops.tv_prox == ref for arbitrary (E, n), dtype, block size."""
+        rng = np.random.default_rng(seed)
+        dtype = jnp.bfloat16 if use_bf16 else jnp.float32
+        u = jnp.asarray(rng.standard_normal((e, n)) * 3,
+                        jnp.float32).astype(dtype)
+        bound = jnp.asarray(np.abs(rng.standard_normal(e)), jnp.float32)
+        out = ops.tv_prox(u, bound, block_e=block_e)
+        want = ref.tv_prox_ref(jnp.asarray(u, jnp.float32), bound)
+        tol = 1e-2 if use_bf16 else 1e-6
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want), rtol=tol, atol=tol)
+        assert out.dtype == u.dtype
+
+    @settings(max_examples=30, deadline=None)
+    @given(v=st.integers(1, 300), n=st.integers(1, 8),
+           block_v=st.sampled_from([8, 64, 256]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_batched_affine_property_matches_ref(v, n, block_v, seed):
+        """ops.batched_affine == ref einsum for arbitrary (V, n, n)."""
+        rng = np.random.default_rng(seed)
+        p = jnp.asarray(rng.standard_normal((v, n, n)), jnp.float32)
+        x = jnp.asarray(rng.standard_normal((v, n)), jnp.float32)
+        out = ops.batched_affine(p, x, block_v=block_v)
+        want = ref.batched_affine_ref(p, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_tv_prox_property_matches_ref():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_batched_affine_property_matches_ref():
+        pass
 
 
 # ---------------------------------------------------------------------------

@@ -99,7 +99,7 @@ def test_lasso_loss_variant_high_dim():
     """§4.2: m_i << n regime — lasso prox recovers sparse weights."""
     rng = np.random.default_rng(0)
     V, m, n = 30, 3, 10
-    g = chain_graph(V)
+    g = chain_graph(rng, V)
     w_true = np.zeros((V, n), np.float32)
     w_true[:, 0] = 2.0
     w_true[:, 1] = -1.0

@@ -1,0 +1,99 @@
+"""Scenario-zoo contract tests: registry, determinism, evaluation."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import LogisticLoss, Problem
+from repro.scenarios import (SCENARIOS, get_scenario, list_scenarios,
+                             register_scenario)
+
+EXPECTED = {"sbm_regression", "chain_changepoint", "grid2d", "small_world",
+            "pref_attach", "clustered_logistic"}
+
+
+def test_zoo_registers_the_six_core_scenarios():
+    assert EXPECTED <= set(SCENARIOS)
+    assert list_scenarios() == sorted(SCENARIOS)
+    with pytest.raises(ValueError):
+        get_scenario("nope")
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_build_yields_a_ready_problem(name):
+    inst = get_scenario(name).build(seed=0, smoke=True)
+    p = inst.problem
+    assert isinstance(p, Problem)
+    V, n = p.num_nodes, p.num_features
+    assert np.asarray(inst.w_true).shape == (V, n)
+    assert inst.dataset.clusters.shape == (V,)
+    assert p.graph.num_edges > 0
+    assert float(p.lam) == inst.scenario.lam
+    # labeled set is a strict, non-empty subset of the nodes
+    labeled = np.asarray(p.data.labeled_mask)
+    assert 0 < labeled.sum() < V
+    if name == "clustered_logistic":
+        assert isinstance(p.loss, LogisticLoss)
+        labels = np.asarray(p.data.y)
+        assert set(np.unique(labels)) <= {0.0, 1.0}
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_build_is_deterministic_in_the_seed(name):
+    a = get_scenario(name).build(seed=3, smoke=True)
+    b = get_scenario(name).build(seed=3, smoke=True)
+    c = get_scenario(name).build(seed=4, smoke=True)
+    for x, y in ((a.dataset.data.x, b.dataset.data.x),
+                 (a.dataset.data.y, b.dataset.data.y),
+                 (a.w_true, b.w_true),
+                 (a.problem.graph.src, b.problem.graph.src),
+                 (a.problem.graph.weights, b.problem.graph.weights)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert not np.array_equal(np.asarray(a.dataset.data.x),
+                              np.asarray(c.dataset.data.x))
+
+
+def test_evaluate_reports_the_scenario_metric():
+    reg = get_scenario("sbm_regression").build(seed=0, smoke=True)
+    w0 = np.zeros((reg.problem.num_nodes, reg.problem.num_features),
+                  np.float32)
+    m = reg.evaluate(w0)
+    assert {"objective", "weight_mse", "prediction_mse"} <= set(m)
+    cls = get_scenario("clustered_logistic").build(seed=0, smoke=True)
+    w0 = np.zeros((cls.problem.num_nodes, cls.problem.num_features),
+                  np.float32)
+    m = cls.evaluate(w0)
+    assert "accuracy" in m and 0.0 <= m["accuracy"] <= 1.0
+    # ground truth must beat the zero predictor on accuracy
+    assert cls.evaluate(cls.w_true)["accuracy"] > m["accuracy"]
+
+
+def test_lam_override_and_lam_path():
+    s = get_scenario("grid2d")
+    assert len(s.lam_path) >= 2
+    inst = s.build(seed=0, smoke=True, lam=0.123)
+    assert float(inst.problem.lam) == pytest.approx(0.123)
+
+
+def test_smoke_instances_are_smaller():
+    for name in sorted(EXPECTED):
+        s = get_scenario(name)
+        small = s.build(seed=0, smoke=True)
+        full = s.build(seed=0, smoke=False)
+        assert small.problem.num_nodes < full.problem.num_nodes, name
+
+
+def test_register_scenario_rejects_duplicates_and_cleans_up():
+    @register_scenario("tmp_dup_check", description="x", graph_family="chain",
+                       data_model="x", lam=1e-2)
+    def _tmp(rng, smoke):  # pragma: no cover - never built
+        raise AssertionError
+    try:
+        assert dataclasses.is_dataclass(SCENARIOS["tmp_dup_check"])
+        with pytest.raises(ValueError):
+            @register_scenario("tmp_dup_check", description="y",
+                               graph_family="chain", data_model="y")
+            def _tmp2(rng, smoke):  # pragma: no cover
+                raise AssertionError
+    finally:
+        SCENARIOS.pop("tmp_dup_check")
