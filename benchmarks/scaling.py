@@ -1,33 +1,83 @@
-"""Scalability benchmark: Algorithm 1 cost vs graph size.
+"""Scalability benchmark: Algorithm 1 cost vs graph size, fused vs unfused.
 
 The paper's computational claim (§4): applying D / D^T touches only
 neighbouring nodes and edges, so the per-iteration cost is O(|V| + |E|)
 — "scalable to massive collections of local datasets".  This benchmark
-measures iterations/second of the jitted solver while growing the SBM
-graph by ~2 orders of magnitude and checks the near-linear cost growth.
+measures *per-iteration* throughput of the jitted solver (compile and
+warmup excluded: every configuration is solved once to compile, then the
+second, cache-hot solve is timed) while growing the SBM graph by ~2
+orders of magnitude, and compares four execution paths:
+
+  * ``dense``                    — lax.scan engine, no kernels,
+  * ``pallas_unfused``           — the pallas backend with fusion off
+                                   (on TPU: the unfused tv_prox /
+                                   batched_affine kernels; off-TPU: their
+                                   jnp references),
+  * ``pallas_unfused_interpret`` — the unfused Pallas kernels forced
+                                   through interpret mode.  Off-TPU this
+                                   is the *recorded baseline*: it is what
+                                   the pallas backend executed before the
+                                   fused path + off-TPU fast path landed,
+  * ``pallas_fused``             — the fused primal-dual kernel over the
+                                   edge-blocked layout (kernel on TPU,
+                                   bit-comparable jnp reference off-TPU).
+
+The full run lands in ``BENCH_scaling.json`` at the repo root (plus
+``results/benchmarks/scaling.json``) so subsequent PRs have a perf
+trajectory to regress against; smoke runs write
+``BENCH_scaling_smoke.json`` instead so CI never clobbers the committed
+baseline.  ``fused_vs_unfused`` is the acceptance column (fused
+throughput over the unfused-interpret pallas baseline).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
+from functools import partial
 
 import numpy as np
-
-from repro.core import Problem, Solver, SolverConfig
-from repro.core import losses as L
-from repro.core.graph import sbm_graph
 
 from benchmarks.common import save_result
 
 SIZES = (250, 1000, 4000, 16000)
+SMOKE_SIZES = (250, 1000)
 ITERS = 200
+SMOKE_ITERS = 40
+# interpret-mode emulation is orders of magnitude slower; a handful of
+# iterations is plenty to time one (compile is still excluded)
+ITERS_INTERPRET = 4
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_scaling.json")
+# smoke (CI) runs must not clobber the committed full-run baseline
+BENCH_SMOKE_PATH = os.path.join(REPO_ROOT, "BENCH_scaling_smoke.json")
+
+METHODOLOGY = (
+    "Per-iteration throughput of the cache-hot jitted solve (each config "
+    "is run once to compile+warm, then timed on the second run; metrics "
+    "evaluated once per run via metric_every=num_iters). "
+    "pallas_unfused_interpret runs the unfused tv_prox/batched_affine "
+    "Pallas kernels in interpret mode over fewer iterations "
+    f"({ITERS_INTERPRET}); off-TPU it is the recorded baseline — the "
+    "exact execution the pallas backend used before the fused kernel and "
+    "the off-TPU jnp fast path existed. fused_vs_unfused = pallas_fused "
+    "/ pallas_unfused_interpret; fused_vs_unfused_fastpath = pallas_fused "
+    "/ pallas_unfused (the post-PR unfused path)."
+)
 
 
 def _make(v: int, seed: int):
+    import jax.numpy as jnp
+
+    from repro.core import losses as L
+    from repro.core.graph import sbm_graph
+
     rng = np.random.default_rng(seed)
     # keep expected degree ~20 so |E| grows linearly with |V|
     p_in = min(20.0 / (v / 2), 1.0)
     g, assign = sbm_graph(rng, (v // 2, v // 2), p_in=p_in, p_out=1e-4)
-    import jax.numpy as jnp
     w_true = np.where(assign[:, None] == 0, [2.0, 2.0],
                       [-2.0, 2.0]).astype(np.float32)
     x = rng.standard_normal((v, 5, 2)).astype(np.float32)
@@ -40,40 +90,95 @@ def _make(v: int, seed: int):
     return g, data
 
 
-def run(seed: int = 0, verbose: bool = True) -> dict:
+def _time_iters_per_s(problem, cfg) -> float:
+    from repro.api import Solver
+
+    solver = Solver(cfg)
+    solver.run(problem).w.block_until_ready()       # compile + warmup
+    t0 = time.perf_counter()
+    solver.run(problem).w.block_until_ready()
+    dt = time.perf_counter() - t0
+    return cfg.num_iters / dt
+
+
+def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
+    import jax
+
+    from repro.api import SolverConfig
+    from repro.kernels.ridge_prox import batched_affine as _affine_kernel
+    from repro.kernels.tv_prox import tv_prox as _tv_kernel
+
+    if smoke is None:
+        smoke = bool(os.environ.get("REPRO_SMOKE"))
+    sizes = SMOKE_SIZES if smoke else SIZES
+    iters = SMOKE_ITERS if smoke else ITERS
+
+    # module-level singletons so both timed runs share one jit cache entry
+    interp_hooks = dict(clip_fn=partial(_tv_kernel, interpret=True),
+                        affine_fn=partial(_affine_kernel, interpret=True))
+
     rows = {}
-    for v in SIZES:
+    for v in sizes:
         g, data = _make(v, seed)
+        from repro.api import Problem
         problem = Problem.create(g, data, lam=1e-3)
-        # warmup / compile (separate trace, shared prox-setup constants)
-        Solver(SolverConfig(num_iters=2)).run(problem).w.block_until_ready()
-        t0 = time.time()
-        res = Solver(SolverConfig(num_iters=ITERS)).run(problem)
-        res.w.block_until_ready()
-        dt = time.time() - t0
+
+        def cfg(num_iters, **kw):
+            return SolverConfig(num_iters=num_iters,
+                                metric_every=num_iters, **kw)
+
+        modes = {
+            "dense": _time_iters_per_s(problem, cfg(iters)),
+            "pallas_unfused": _time_iters_per_s(
+                problem, cfg(iters, backend="pallas", fused=False)),
+            "pallas_unfused_interpret": _time_iters_per_s(
+                problem, cfg(ITERS_INTERPRET, backend="pallas",
+                             fused=False, **interp_hooks)),
+            "pallas_fused": _time_iters_per_s(
+                problem, cfg(iters, backend="pallas", fused=True)),
+        }
         rows[str(v)] = {
             "edges": int(g.num_edges),
-            "iters_per_s": ITERS / dt,
-            "edge_iters_per_s": g.num_edges * ITERS / dt,
+            "iters_per_s": modes,
+            "edge_iters_per_s": {k: g.num_edges * r for k, r in
+                                 modes.items()},
+            "fused_vs_unfused": (modes["pallas_fused"]
+                                 / modes["pallas_unfused_interpret"]),
+            "fused_vs_unfused_fastpath": (modes["pallas_fused"]
+                                          / modes["pallas_unfused"]),
         }
+        if verbose:
+            r = rows[str(v)]
+            print(f"|V|={v:>6d} |E|={r['edges']:>8d} "
+                  + " ".join(f"{k}={modes[k]:9.2f}it/s" for k in modes)
+                  + f" fused_vs_unfused={r['fused_vs_unfused']:7.1f}x")
 
-    payload = {"rows": rows, "iters": ITERS}
+    # near-linear gate: fused edge-throughput at the largest size within
+    # 10x of its peak across sizes
+    tps = [r["edge_iters_per_s"]["pallas_fused"] for r in rows.values()]
+    payload = {
+        "rows": rows,
+        "iters": iters,
+        "iters_interpret": ITERS_INTERPRET,
+        "smoke": bool(smoke),
+        "backend": jax.default_backend(),
+        "methodology": METHODOLOGY,
+        "ok": bool(tps[-1] > max(tps) / 10),
+    }
     save_result("scaling", payload)
+    out_path = BENCH_SMOKE_PATH if smoke else BENCH_PATH
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
     if verbose:
-        print("== Scaling: Algorithm 1 cost vs graph size ==")
-        print(f"{'|V|':>8s} {'|E|':>9s} {'it/s':>9s} {'edge-it/s':>12s}")
-        for v, r in rows.items():
-            print(f"{v:>8s} {r['edges']:9d} {r['iters_per_s']:9.1f} "
-                  f"{r['edge_iters_per_s']:12.3g}")
-
-    # near-linear: edge-throughput at the largest size within 10x of peak
-    tps = [r["edge_iters_per_s"] for r in rows.values()]
-    ok = tps[-1] > max(tps) / 10
-    payload["ok"] = bool(ok)
-    if verbose:
-        print(f"near-linear gate: {'PASS' if ok else 'FAIL'}")
+        print(f"near-linear gate: {'PASS' if payload['ok'] else 'FAIL'}")
+        print(f"wrote {out_path}")
     return payload
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="capped sizes/iterations (CI smoke mode)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(seed=args.seed, smoke=args.smoke or None)

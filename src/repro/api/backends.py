@@ -18,6 +18,8 @@ primal-dual iteration (paper eqs. 14-15) and returning one
 """
 from __future__ import annotations
 
+import os
+import weakref
 from functools import partial
 from typing import Callable
 
@@ -28,9 +30,33 @@ from repro.api.losses import Loss, SquaredLoss
 from repro.api.problem import Problem, SolveResult, SolverConfig
 from repro.api.regularizers import Regularizer, TotalVariation
 from repro.core.graph import graph_signal_mse
+from repro.core.losses import NodeData, squared_prox_setup
+from repro.core.partition import gather_padded
 from repro.kernels import ops
 
 BACKENDS: dict[str, Callable] = {}
+
+
+def _jit(fn, *, static_argnames, donate_argnums=()):
+    """jit wrapper requesting buffer donation where the backend supports
+    it (TPU/GPU), so warm-started carries stop copying.  Donation is a
+    no-op (with a warning) on CPU, so it is skipped there.  The backend
+    query happens lazily at the first call, not at import.
+
+    Donation contract: arrays passed in donated positions (``w0``/``u0``)
+    are consumed — callers must not reuse them after the solve.
+    """
+    cache: dict[bool, Callable] = {}
+
+    def wrapper(*args, **kwargs):
+        donate = jax.default_backend() in ("tpu", "gpu")
+        if donate not in cache:
+            cache[donate] = jax.jit(
+                fn, static_argnames=static_argnames,
+                donate_argnums=donate_argnums if donate else ())
+        return cache[donate](*args, **kwargs)
+
+    return wrapper
 
 
 def register_backend(name: str):
@@ -104,15 +130,15 @@ def _diagnostics(problem: Problem, w, u, config: SolverConfig) -> dict:
 # Dense backend (single-program lax.scan) + Pallas kernel wiring
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("loss", "reg", "num_iters", "rho",
-                                   "metric_every", "clip_fn", "affine_fn"))
-def _dense_scan(graph, data, lam, w0, u0, w_true, *, loss: Loss,
-                reg: Regularizer, num_iters: int, rho: float,
-                metric_every: int, clip_fn, affine_fn):
+def _dense_scan_impl(graph, data, lam, w0, u0, w_true, *, loss: Loss,
+                     reg: Regularizer, num_iters: int, rho: float,
+                     metric_every: int, clip_fn, affine_fn):
     """The jitted engine: scan Algorithm 1, recording metrics on a cadence.
 
     ``loss``/``reg`` are static (hashable frozen dataclasses), so repeated
-    solves of equally-templated problems share one trace.
+    solves of equally-templated problems share one trace.  ``w0``/``u0``
+    are donated (where the backend supports it), so warm-started
+    continuation solves re-use the carry buffers instead of copying.
     """
     tau = graph.primal_stepsizes()
     sigma = graph.dual_stepsizes()
@@ -152,6 +178,12 @@ def _dense_scan(graph, data, lam, w0, u0, w_true, *, loss: Loss,
     (w, u), (obj_trace, mse_trace) = jax.lax.scan(
         step, (w0, u0), None, length=length)
     return w, u, obj_trace, mse_trace
+
+
+_dense_scan = _jit(_dense_scan_impl,
+                   static_argnames=("loss", "reg", "num_iters", "rho",
+                                    "metric_every", "clip_fn", "affine_fn"),
+                   donate_argnums=(3, 4))
 
 
 def _solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
@@ -203,16 +235,220 @@ def solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
                         clip_fn=clip_fn, affine_fn=affine_fn)
 
 
+# ---------------------------------------------------------------------------
+# Fused pallas path: edge-blocked layout + fused primal-dual kernel
+# ---------------------------------------------------------------------------
+
+# layouts are planned once per graph object (EmpiricalGraph hashes by
+# identity, so a WeakKeyDictionary gives per-object caching without
+# retaining graphs).  Attaching via graph.with_layout() bypasses this
+# cache entirely.
+_LAYOUT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _graph_layout(graph):
+    if graph.layout is not None:
+        return graph.layout
+    from repro.core.graph import plan_edge_blocks
+    layout = _LAYOUT_CACHE.get(graph)
+    if layout is None:
+        layout = plan_edge_blocks(graph)
+        _LAYOUT_CACHE[graph] = layout
+    return layout
+
+
+def _fused_enabled(config: SolverConfig) -> bool:
+    """Fused is the default on TPU; env/flag opt-out (and opt-in off-TPU)."""
+    if config.fused is not None:
+        return bool(config.fused)
+    env = os.environ.get("REPRO_FUSED")
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false", "no", "off")
+    return jax.default_backend() == "tpu"
+
+
+def _fused_supported(problem: Problem, config: SolverConfig) -> bool:
+    """The fused kernel bakes in the affine prox + TV dual clip."""
+    return (isinstance(problem.loss, SquaredLoss)
+            and isinstance(problem.regularizer, TotalVariation)
+            and config.clip_fn is None and config.affine_fn is None)
+
+
+def _fused_window_cap() -> int:
+    """Max per-grid-step VMEM window; degenerate layouts fall back."""
+    env = os.environ.get("REPRO_FUSED_MAX_WINDOW_BYTES")
+    if env:
+        return int(env)
+    # real VMEM budget on TPU; effectively uncapped for the jnp reference
+    return (12 << 20) if jax.default_backend() == "tpu" else (1 << 62)
+
+
+def _fused_window_fits(problem: Problem) -> bool:
+    """Plan (or fetch) the graph's layout and check the VMEM window cap."""
+    lt = _graph_layout(problem.graph)
+    return lt.window_bytes(problem.num_features) <= _fused_window_cap()
+
+
+def _should_fuse(problem: Problem, config: SolverConfig) -> bool:
+    """The one fused-dispatch gate, shared by solve_pallas and
+    solve_path so the two can never route differently."""
+    return (_fused_enabled(config) and _fused_supported(problem, config)
+            and _fused_window_fits(problem))
+
+
+def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, data_l,
+                     layout_arrays, *, loss: Loss, reg: Regularizer,
+                     layout, num_iters: int, rho: float, metric_every: int,
+                     use_kernel: bool):
+    """Jitted fused engine: scan the fused PD step over the edge-blocked
+    layout, recording metrics (in original node order, exactly the dense
+    engine's formulas) on the cadence.
+
+    ``layout`` is static (block extents); the layout's arrays come in as
+    the traced ``layout_arrays`` tuple so they stay device buffers rather
+    than jaxpr constants.
+    """
+    lt = layout
+    (node_perm, node_inv, inc_edges, inc_signs, src_l, dst_l, weights_l,
+     edge_pos) = layout_arrays
+    bv, eb = lt.block_nodes, lt.block_edges
+    kn, klo, khi, nb = lt.kn, lt.klo, lt.khi, lt.num_blocks
+    ext = (kn - 1) * bv
+
+    # the paper-eq.-13 stepsizes come from the one source of truth
+    # (EmpiricalGraph), gathered into layout order (pad nodes: tau 1)
+    tau_l = gather_padded(graph.primal_stepsizes(), node_perm, fill=1.0)
+    sig_l = jnp.full((lt.edges_pad,), 0.5, jnp.float32)
+    sig_l = sig_l.at[edge_pos].set(graph.dual_stepsizes())
+    p_mat, b_vec = squared_prox_setup(data_l, tau_l)
+
+    def pad_nodes(a):
+        return jnp.pad(a, ((0, ext),) + ((0, 0),) * (a.ndim - 1))
+
+    p_s, b_s = pad_nodes(p_mat), pad_nodes(b_vec)
+    tau_s = pad_nodes(tau_l[:, None])
+    inc_e = pad_nodes(inc_edges)
+    inc_s = pad_nodes(inc_signs)
+    src2, dst2 = src_l[:, None], dst_l[:, None]
+    sig2 = sig_l[:, None]
+    bnd2 = (lam * weights_l)[:, None]
+    unlabeled = 1.0 - data.labeled_mask
+
+    def metrics(w_l):
+        w = jnp.take(w_l, node_inv, axis=0)
+        obj = loss.empirical_error(data, w) + reg.value(graph, w, lam)
+        if w_true is None:
+            mse = jnp.float32(0.0)
+        else:
+            mse = graph_signal_mse(w, w_true, unlabeled)
+        return obj, mse
+
+    # the scan carries the *padded* stores: the halo padding rows are
+    # never written, so writing each step's owned output back with a
+    # dynamic_update_slice (in-place under XLA's loop aliasing) avoids
+    # re-materializing the padded tensors every iteration
+    def run_iters(state, iters):
+        w_store, u_store = state
+        w_new, u_new = ops.pd_step(
+            w_store, u_store, inc_e, inc_s, p_s, b_s, tau_s, src2, dst2,
+            sig2, bnd2, block_nodes=bv, block_edges=eb, kn=kn, klo=klo,
+            khi=khi, rho=rho, iters=iters, use_kernel=use_kernel)
+        return (jax.lax.dynamic_update_slice(w_store, w_new, (0, 0)),
+                jax.lax.dynamic_update_slice(u_store, u_new,
+                                             (klo * eb, 0)))
+
+    if metric_every == 1:
+        def step(state, _):
+            new = run_iters(state, 1)
+            return new, metrics(new[0])
+        length = num_iters
+    elif nb == 1:
+        # multi-iteration fusion: the whole graph fits one VMEM window,
+        # so a metric chunk is a single kernel launch with an in-VMEM loop
+        def step(state, _):
+            new = run_iters(state, metric_every)
+            return new, metrics(new[0])
+        length = num_iters // metric_every
+    else:
+        def step(state, _):
+            new = jax.lax.fori_loop(0, metric_every,
+                                    lambda _, s: run_iters(s, 1), state)
+            return new, metrics(new[0])
+        length = num_iters // metric_every
+
+    w_store0 = jnp.pad(w0_l, ((0, ext), (0, 0)))
+    u_store0 = jnp.pad(u0_l, ((klo * eb, khi * eb), (0, 0)))
+    (w_store, u_store), (obj_trace, mse_trace) = jax.lax.scan(
+        step, (w_store0, u_store0), None, length=length)
+    w_l = jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad)
+    u_l = jax.lax.slice_in_dim(u_store, klo * eb, klo * eb + lt.edges_pad)
+    return w_l, u_l, obj_trace, mse_trace
+
+
+_fused_scan = _jit(_fused_scan_impl,
+                   static_argnames=("loss", "reg", "layout", "num_iters",
+                                    "rho", "metric_every", "use_kernel"),
+                   donate_argnums=(2, 3))
+
+
+def _solve_fused(problem: Problem, config: SolverConfig, *, w0=None,
+                 u0=None, w_true=None) -> SolveResult:
+    """Solve via the fused PD kernel on the edge-blocked graph layout."""
+    if config.num_iters % config.metric_every:
+        raise ValueError(
+            f"metric_every={config.metric_every} must divide "
+            f"num_iters={config.num_iters}")
+    lt = _graph_layout(problem.graph)
+    V, n = problem.num_nodes, problem.num_features
+    data = problem.data
+
+    def gather_nodes(a):
+        return gather_padded(a, lt.node_perm)
+
+    data_l = NodeData(x=gather_nodes(data.x), y=gather_nodes(data.y),
+                      sample_mask=gather_nodes(data.sample_mask),
+                      labeled_mask=gather_nodes(data.labeled_mask))
+    if w0 is None:
+        w0_l = jnp.zeros((lt.nodes_pad, n), jnp.float32)
+    else:
+        w0_l = gather_nodes(jnp.asarray(w0, jnp.float32))
+    u0_l = jnp.zeros((lt.edges_pad, n), jnp.float32)
+    if u0 is not None:
+        u0_l = u0_l.at[lt.edge_pos].set(
+            jnp.asarray(u0, jnp.float32) * lt.edge_flip[:, None])
+
+    w_l, u_l, obj, mse = _fused_scan(
+        problem.graph, data, w0_l, u0_l, problem.lam, w_true, data_l,
+        (lt.node_perm, lt.node_inv, lt.inc_edges, lt.inc_signs, lt.src,
+         lt.dst, lt.weights, lt.edge_pos),
+        loss=problem.loss, reg=problem.regularizer, layout=lt,
+        num_iters=config.num_iters, rho=config.rho,
+        metric_every=config.metric_every,
+        use_kernel=ops._use_kernel_default())
+    w = jnp.take(w_l, lt.node_inv, axis=0)
+    u = jnp.take(u_l, lt.edge_pos, axis=0) * lt.edge_flip[:, None]
+    return SolveResult(w=w, u=u, objective=obj,
+                       mse=None if w_true is None else mse,
+                       lam=problem.lam,
+                       diagnostics=_diagnostics(problem, w, u, config))
+
+
 @register_backend("pallas")
 def solve_pallas(problem: Problem, config: SolverConfig, *, w0=None,
                  u0=None, w_true=None) -> SolveResult:
-    """Dense path with the TPU kernels auto-wired (interpret mode off-TPU).
+    """TPU-kernel backend.
 
-    The dual clip routes through ``kernels.ops.tv_prox`` (only meaningful
-    for the TV regularizer) and affine-prox losses through
-    ``kernels.ops.batched_affine``; ``config.clip_fn``/``config.affine_fn``
-    override either.
+    Default on TPU (opt-out via ``fused=False`` / ``REPRO_FUSED=0``): the
+    *fused* primal-dual kernel — one VMEM-resident pass per iteration over
+    the edge-blocked graph layout (``kernels/pd_step.py``).  Otherwise the
+    dense path with the unfused TPU kernels auto-wired: the dual clip
+    through ``kernels.ops.tv_prox`` (TV regularizer only) and affine-prox
+    losses through ``kernels.ops.batched_affine``;
+    ``config.clip_fn``/``config.affine_fn`` override either (and disable
+    fusion).
     """
+    if _should_fuse(problem, config):
+        return _solve_fused(problem, config, w0=w0, u0=u0, w_true=w_true)
     clip_fn, affine_fn = resolve_kernel_hooks(problem, config, True)
     return _solve_dense(problem, config, w0=w0, u0=u0, w_true=w_true,
                         clip_fn=clip_fn, affine_fn=affine_fn)
@@ -232,11 +468,11 @@ def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
     """
     # local imports: core.distributed is a peer of the api package and
     # delegates its own front-end back here (lazy on both sides).
-    import numpy as np
     from repro.core.distributed import shard_problem, solve_nlasso_sharded
-    from repro.core.partition import (permute_edge_array, permute_node_array,
-                                      unpermute_edge_array,
-                                      unpermute_node_array)
+    from repro.core.partition import (permute_edge_array_device,
+                                      permute_node_array_device,
+                                      unpermute_edge_array_device,
+                                      unpermute_node_array_device)
     from repro.launch.mesh import make_host_mesh
 
     if not isinstance(problem.loss, SquaredLoss):
@@ -252,18 +488,18 @@ def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
                   else mesh.shape[config.mesh_axis])
     sp = shard_problem(problem.graph, problem.data, num_shards,
                        partitioner=config.partitioner)
+    # device-side layout permutes (jnp gathers): warm-started continuation
+    # sweeps keep the carry on device instead of bouncing through numpy
     if w0 is not None:
-        w0 = jnp.asarray(permute_node_array(sp.plan, np.asarray(w0)))
+        w0 = permute_node_array_device(sp.plan, w0)
     if u0 is not None:
-        u0 = jnp.asarray(permute_edge_array(sp.plan, np.asarray(u0)))
+        u0 = permute_edge_array_device(sp.plan, u0)
     lam = float(problem.lam)
     w_pad, u_pad = solve_nlasso_sharded(
         sp, mesh, lam, config.num_iters, axis=config.mesh_axis,
         rho=config.rho, comm=config.comm, w0=w0, u0=u0, return_u=True)
-    w = jnp.asarray(unpermute_node_array(sp.plan, np.asarray(w_pad),
-                                         problem.graph.num_nodes))
-    u = jnp.asarray(unpermute_edge_array(sp.plan, np.asarray(u_pad),
-                                         problem.graph.num_edges))
+    w = unpermute_node_array_device(sp.plan, w_pad, problem.graph.num_nodes)
+    u = unpermute_edge_array_device(sp.plan, u_pad, problem.graph.num_edges)
     obj = problem.objective(w)[None]
     if w_true is None:
         mse = None

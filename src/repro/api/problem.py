@@ -104,6 +104,15 @@ class SolverConfig:
       backend:     "dense" (single-program lax.scan), "sharded" (shard_map
                    message passing), or "pallas" (dense with the TPU
                    kernels auto-wired).
+      fused:       pallas backend only — run the fused primal-dual Pallas
+                   kernel over the edge-blocked graph layout instead of
+                   the four unfused HBM round-trips per iteration.  None
+                   (default) resolves to True on TPU, False elsewhere;
+                   ``REPRO_FUSED=1`` / ``REPRO_FUSED=0`` (env) overrides
+                   the default either way.  Falls back to the unfused
+                   path for losses/regularizers without a fused form
+                   (anything but squared + TV) or when custom kernel
+                   hooks are set.
       mesh / mesh_axis / num_shards / partitioner / comm: sharded-backend
                    layout knobs (mesh defaults to a (1, 1) host mesh).
       clip_fn / affine_fn: custom kernel hooks for the dual clip and the
@@ -123,6 +132,7 @@ class SolverConfig:
     final_iters: int = 1000
     # backend dispatch
     backend: str = "dense"
+    fused: bool | None = None
     mesh: Any = dataclasses.field(default=None, compare=False, repr=False)
     mesh_axis: str = "data"
     num_shards: int | None = None

@@ -22,7 +22,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.api.backends import (_solve_dense, certificate, get_backend,
+from repro.api.backends import (_should_fuse, _solve_dense, _solve_fused,
+                                certificate, get_backend,
                                 resolve_kernel_hooks)
 from repro.api.problem import Problem, SolveResult, SolverConfig
 
@@ -63,7 +64,12 @@ class Solver:
 
     def run(self, problem: Problem, *, w0=None, u0=None,
             w_true=None) -> SolveResult:
-        """Solve ``problem`` per the config; returns a SolveResult pytree."""
+        """Solve ``problem`` per the config; returns a SolveResult pytree.
+
+        On backends with buffer donation (TPU/GPU), warm-start arrays
+        ``w0``/``u0`` are *donated* to the solve — do not reuse them
+        afterwards (pass ``jnp.copy(...)`` to keep a live copy).
+        """
         cfg = self.config
         backend = get_backend(cfg.backend)
         if not cfg.continuation:
@@ -116,6 +122,19 @@ def solve_path(problem: Problem, lams, config: SolverConfig | None = None,
     final_cfg = cfg.replace(
         continuation=False,
         num_iters=_capped(cfg.final_iters, cfg.metric_every))
+
+    if cfg.backend == "pallas" and _should_fuse(problem, cfg):
+        # fused engine per path point — the lambda sweeps of the
+        # experiment harness ride the fused kernel, not the four
+        # unfused HBM round-trips
+        def solve_one(lam):
+            p = problem.with_lam(lam)
+            u0 = p.regularizer.project_dual(warm.u, p.graph, lam)
+            return _solve_fused(p, final_cfg, w0=warm.w, u0=u0,
+                                w_true=w_true)
+
+        return jax.vmap(solve_one)(lams)
+
     clip_fn, affine_fn = resolve_kernel_hooks(problem, cfg,
                                               cfg.backend == "pallas")
 

@@ -27,8 +27,85 @@ import jax.numpy as jnp
 import numpy as np
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class EdgeBlockLayout:
+    """Edge-blocked graph layout for the fused primal-dual kernel.
+
+    Precomputed on the host (``plan_edge_blocks``) and carried as *static*
+    aux data on :class:`EmpiricalGraph` (``eq=False`` keeps the dataclass
+    identity-hashable, so it rides through ``jax.jit`` as a static arg).
+
+    Nodes are RCM-reordered and grouped into ``num_blocks`` blocks of
+    ``block_nodes``; edges are relabeled, canonicalized (src < dst in the
+    *new* numbering — ``edge_flip`` records orientation changes so dual
+    variables transform correctly), sorted by src, and assigned to the
+    block owning their src endpoint.  Each block then owns a contiguous,
+    padded range of ``block_edges`` dual rows, and the layout guarantees:
+
+      * every dst ("halo") endpoint of an edge owned by block b lies in
+        the node window  [b*BV, b*BV + kn*BV),
+      * every edge incident to an owned or halo node of block b lies in
+        the edge window  [b*EB, b*EB + (klo+1+khi)*EB)  of the *shifted*
+        edge storage (owned position + klo*EB),
+
+    so the fused kernel's grid step b can keep the whole window VMEM
+    resident and compute primal + dual updates with plain relative
+    indexing (window starts are exactly b*BV / b*EB — no scalar prefetch).
+
+    Attributes (arrays are jnp; layout-order unless noted):
+      block_nodes/num_blocks/block_edges: BV, nb, EB above.
+      kn, klo, khi:  halo window extents, in blocks.
+      node_perm:     (nb*BV,) layout pos -> original node id (-1 padding).
+      node_inv:      (V,) original node id -> layout pos.
+      src, dst:      (nb*EB,) int32 endpoints in layout node ids (0 pads).
+      weights:       (nb*EB,) float32 A_e (0.0 for padding slots).
+      inc_edges:     (nb*BV, max_deg) int32 *storage* edge ids
+                     (= owned position + klo*EB; 0-filled padding).
+      inc_signs:     (nb*BV, max_deg) float32 +1/-1/0 as EmpiricalGraph.
+      edge_pos:      (E,) original edge id -> owned layout position.
+      edge_flip:     (E,) +1/-1; u_layout = edge_flip * u_original.
+    """
+
+    block_nodes: int
+    num_blocks: int
+    block_edges: int
+    kn: int
+    klo: int
+    khi: int
+    max_degree: int
+    num_nodes: int
+    num_edges: int
+    node_perm: jnp.ndarray
+    node_inv: jnp.ndarray
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    weights: jnp.ndarray
+    inc_edges: jnp.ndarray
+    inc_signs: jnp.ndarray
+    edge_pos: jnp.ndarray
+    edge_flip: jnp.ndarray
+
+    @property
+    def nodes_pad(self) -> int:
+        return self.num_blocks * self.block_nodes
+
+    @property
+    def edges_pad(self) -> int:
+        return self.num_blocks * self.block_edges
+
+    def window_bytes(self, num_features: int) -> int:
+        """fp32 VMEM footprint of one grid step's resident window."""
+        n = num_features
+        nw = self.kn * self.block_nodes
+        ew = (self.klo + 1 + self.khi) * self.block_edges
+        per_node = n + n * n + n + 1 + 2 * self.max_degree    # w, P, b, tau, inc
+        per_edge = n                                           # u window
+        owned = self.block_edges * (n + 4)                     # u+, src/dst/sig/bnd
+        return 4 * (nw * per_node + ew * per_edge + owned)
+
+
 @jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class EmpiricalGraph:
     """Undirected empirical graph with dense padded incidence structure.
 
@@ -40,6 +117,9 @@ class EmpiricalGraph:
       inc_signs:  (V, max_deg) float32, +1 if node is the src (j > i side),
                   -1 if dst, 0 for padding.  Matches D_{e,i} blocks.
       num_nodes:  static int.
+      layout:     optional :class:`EdgeBlockLayout` (static aux; attach
+                  with :meth:`with_layout` to pre-plan the fused kernel's
+                  edge-blocked layout once per graph).
     """
 
     src: jnp.ndarray
@@ -48,17 +128,25 @@ class EmpiricalGraph:
     inc_edges: jnp.ndarray
     inc_signs: jnp.ndarray
     num_nodes: int
+    layout: EdgeBlockLayout | None = None
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
         children = (self.src, self.dst, self.weights, self.inc_edges,
                     self.inc_signs)
-        return children, self.num_nodes
+        return children, (self.num_nodes, self.layout)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         src, dst, weights, inc_edges, inc_signs = children
-        return cls(src, dst, weights, inc_edges, inc_signs, aux)
+        num_nodes, layout = aux if isinstance(aux, tuple) else (aux, None)
+        return cls(src, dst, weights, inc_edges, inc_signs, num_nodes,
+                   layout)
+
+    def with_layout(self, block_nodes: int | None = None) -> "EmpiricalGraph":
+        """Attach a precomputed edge-blocked layout (host-side pass)."""
+        return dataclasses.replace(
+            self, layout=plan_edge_blocks(self, block_nodes=block_nodes))
 
     # -- basic properties ---------------------------------------------------
     @property
@@ -163,6 +251,141 @@ def build_graph(edges: np.ndarray, weights: np.ndarray,
         inc_edges=jnp.asarray(inc_edges),
         inc_signs=jnp.asarray(inc_signs),
         num_nodes=int(num_nodes),
+    )
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-max(x, 1) // mult) * mult
+
+
+def plan_edge_blocks(graph: EmpiricalGraph,
+                     block_nodes: int | None = None) -> EdgeBlockLayout:
+    """Host-side edge-blocked layout pass (see :class:`EdgeBlockLayout`).
+
+    RCM node reordering + per-block contiguous edge ranges with halo
+    padding; the result is static aux the fused primal-dual kernel keys
+    its BlockSpec index maps on.
+    """
+    from repro.core.partition import rcm_order   # local: avoid import cycle
+
+    V, E = graph.num_nodes, graph.num_edges
+    src = np.asarray(graph.src, np.int64)
+    dst = np.asarray(graph.dst, np.int64)
+    wts = np.asarray(graph.weights, np.float32)
+
+    block_nodes_auto = block_nodes is None
+    if block_nodes is None:
+        # whole graph in one block while it comfortably fits a VMEM window
+        block_nodes = _round_up(V, 8) if V <= 512 else 256
+    BV = int(block_nodes)
+    nb = -(-max(V, 1) // BV)
+    V_pad = nb * BV
+
+    # 1. RCM relabel (bandwidth-minimizing => small halo windows)
+    order = (rcm_order(src, dst, V) if E else np.arange(V, dtype=np.int64))
+    inv = np.empty(V, dtype=np.int64)
+    inv[order] = np.arange(V)
+    node_perm = np.full(V_pad, -1, dtype=np.int64)
+    node_perm[:V] = order
+
+    # 2. relabel + canonicalize edges in the new numbering; a flipped
+    #    orientation (src > dst after relabel) negates the dual variable
+    s2, d2 = inv[src], inv[dst]
+    flip = s2 > d2
+    lo = np.minimum(s2, d2)
+    hi = np.maximum(s2, d2)
+    eorder = np.lexsort((hi, lo))          # sorted rank -> original edge id
+    lo, hi = lo[eorder], hi[eorder]
+    w2, flip2 = wts[eorder], flip[eorder]
+
+    # 3. owner block = block of the (smaller) src endpoint; lo is sorted,
+    #    so each block's owned edges are already contiguous — pad to EB
+    owner = lo // BV if E else np.zeros(0, np.int64)
+    counts = np.bincount(owner, minlength=nb)
+    EB = _round_up(int(counts.max()) if E else 1, 8)
+    E_pad = nb * EB
+    starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    pos = (owner * EB + (np.arange(E) - starts[owner])) if E else \
+        np.zeros(0, np.int64)
+
+    src_l = np.zeros(E_pad, dtype=np.int64)
+    dst_l = np.zeros(E_pad, dtype=np.int64)
+    w_l = np.zeros(E_pad, dtype=np.float32)
+    src_l[pos], dst_l[pos], w_l[pos] = lo, hi, w2
+    edge_pos = np.empty(E, dtype=np.int64)
+    edge_pos[eorder] = pos
+    edge_flip = np.where(flip, -1.0, 1.0).astype(np.float32)
+
+    # 4. incidence tables over the padded layout nodes, in *owned* edge
+    #    positions for now (shifted to storage ids once klo is known).
+    #    Vectorized scatter: interleave (src, dst) endpoints so each
+    #    node's slots keep edge order, stable-sort by node, and the slot
+    #    column is the rank within the node's group.
+    max_deg = max(graph.max_degree, 1)
+    inc_e = np.zeros((V_pad, max_deg), dtype=np.int64)
+    inc_s = np.zeros((V_pad, max_deg), dtype=np.float32)
+    if E:
+        endpoints = np.empty(2 * E, dtype=np.int64)
+        endpoints[0::2], endpoints[1::2] = lo, hi
+        epos = np.repeat(pos, 2)
+        esign = np.tile(np.asarray([1.0, -1.0], np.float32), E)
+        order2 = np.argsort(endpoints, kind="stable")
+        nodes_sorted = endpoints[order2]
+        deg_counts = np.bincount(endpoints, minlength=V_pad)
+        group_start = np.concatenate([[0], np.cumsum(deg_counts)])[:-1]
+        slot = np.arange(2 * E) - group_start[nodes_sorted]
+        inc_e[nodes_sorted, slot] = epos[order2]
+        inc_s[nodes_sorted, slot] = esign[order2]
+    fill = np.count_nonzero(inc_s, axis=1)
+
+    # 5. halo extents.  Per block b the kernel needs (a) w rows for owned
+    #    nodes and dst endpoints of owned edges, (b) u rows for every edge
+    #    incident to those nodes.
+    has_inc = fill > 0
+    node_emin = np.where(has_inc, np.where(inc_s != 0, inc_e,
+                                           np.iinfo(np.int64).max).min(1), 0)
+    node_emax = np.where(has_inc, np.where(inc_s != 0, inc_e, -1).max(1), 0)
+    kn = 1
+    klo = khi = 0
+    for b in range(nb):
+        own = slice(b * EB, b * EB + int(counts[b]))
+        needed = np.arange(b * BV, min((b + 1) * BV, V_pad))
+        if counts[b]:
+            needed = np.unique(np.concatenate([needed, dst_l[own]]))
+        needed = needed[has_inc[needed]]
+        if len(needed):
+            kn = max(kn, -(-(int(needed.max()) + 1 - b * BV) // BV))
+            emin = int(node_emin[needed].min())
+            emax = int(node_emax[needed].max())
+            klo = max(klo, -(-(b * EB - emin) // EB))
+            khi = max(khi, -(-(emax + 1 - (b + 1) * EB) // EB))
+    klo, khi = max(klo, 0), max(khi, 0)
+
+    # layout-quality guard (auto block size only): when the graph defeats
+    # RCM banding (e.g. random cross-cluster edges), halo windows approach
+    # the whole graph and the per-block redundancy nb * window / total
+    # explodes.  A single whole-graph block is then strictly better: no
+    # redundant halo work, and it unlocks the multi-iteration VMEM fusion.
+    if (block_nodes_auto and nb > 1
+            and (nb * kn * BV > 3 * V_pad
+                 or nb * (klo + 1 + khi) * EB > 3 * E_pad)):
+        return plan_edge_blocks(graph, block_nodes=_round_up(V, 8))
+
+    inc_e = inc_e + klo * EB               # owned position -> storage id
+
+    return EdgeBlockLayout(
+        block_nodes=BV, num_blocks=nb, block_edges=EB, kn=int(kn),
+        klo=int(klo), khi=int(khi), max_degree=max_deg, num_nodes=V,
+        num_edges=E,
+        node_perm=jnp.asarray(node_perm, jnp.int32),
+        node_inv=jnp.asarray(inv, jnp.int32),
+        src=jnp.asarray(src_l, jnp.int32),
+        dst=jnp.asarray(dst_l, jnp.int32),
+        weights=jnp.asarray(w_l),
+        inc_edges=jnp.asarray(inc_e, jnp.int32),
+        inc_signs=jnp.asarray(inc_s),
+        edge_pos=jnp.asarray(edge_pos, jnp.int32),
+        edge_flip=jnp.asarray(edge_flip),
     )
 
 

@@ -103,6 +103,10 @@ def solve_nlasso(graph: EmpiricalGraph, data: L.NodeData, prox: Callable,
 
     Note the objective trace prices the local loss with the *base* loss
     (alpha = 0 for "lasso"), matching the historical behaviour.
+
+    On backends with buffer donation (TPU/GPU) the warm-start arrays
+    ``w0``/``u0`` are donated to the solve — do not reuse them afterwards
+    (pass ``jnp.copy(...)`` to keep a live copy).
     """
     warnings.warn(
         "solve_nlasso is deprecated; use repro.api.Solver.run "

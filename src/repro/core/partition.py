@@ -31,6 +31,7 @@ class PartitionPlan:
     node_perm: np.ndarray         # (V_pad,) new position -> old node id (-1 pad)
     node_inv: np.ndarray          # (V,) old node id -> new position
     edge_perm: np.ndarray         # (E_pad,) new position -> old edge id (-1 pad)
+    edge_inv: np.ndarray          # (E,) old edge id -> new position
     src_new: np.ndarray           # (E_pad,) src in new node numbering
     dst_new: np.ndarray           # (E_pad,) dst in new node numbering
     weights: np.ndarray           # (E_pad,) 0.0 for padding
@@ -92,6 +93,56 @@ def cluster_partition(graph: EmpiricalGraph, num_shards: int,
     return assign
 
 
+def rcm_order(src: np.ndarray, dst: np.ndarray, num_nodes: int,
+              reverse: bool = True) -> np.ndarray:
+    """(Reverse) Cuthill-McKee node ordering: new position -> old node id.
+
+    BFS from a minimum-degree node per component, visiting neighbours in
+    increasing-degree order; the reversal minimizes profile/bandwidth of
+    the reordered adjacency.  A banded ordering is what makes the
+    edge-blocked layout's halo windows small (graph.plan_edge_blocks):
+    after relabeling, every edge connects nearby node ids, so the edges
+    incident to a contiguous node block occupy a short contiguous range.
+    """
+    V = num_nodes
+    E = len(src)
+    deg = np.zeros(V, dtype=np.int64)
+    np.add.at(deg, src, 1)
+    np.add.at(deg, dst, 1)
+    # CSR adjacency with neighbour lists sorted by (degree, id): one
+    # global lexsort instead of per-node python list sorts
+    ends = np.concatenate([src, dst])
+    nbrs = np.concatenate([dst, src])
+    csr_order = np.lexsort((nbrs, deg[nbrs], ends))
+    nbrs = nbrs[csr_order]
+    indptr = np.concatenate([[0], np.cumsum(np.bincount(
+        ends, minlength=V))]) if E else np.zeros(V + 1, np.int64)
+
+    visited = np.zeros(V, dtype=bool)
+    order = np.empty(V, dtype=np.int64)
+    pos = 0
+    # component seeds in min-degree order (isolated nodes come first,
+    # which conveniently packs them into the same blocks)
+    seeds = np.argsort(deg, kind="stable")
+    from collections import deque
+    queue: deque[int] = deque()
+    for seed in seeds:
+        if visited[seed]:
+            continue
+        visited[seed] = True
+        queue.append(int(seed))
+        while queue:
+            v = queue.popleft()
+            order[pos] = v
+            pos += 1
+            ns = nbrs[indptr[v]:indptr[v + 1]]
+            ns = ns[~visited[ns]]
+            visited[ns] = True
+            queue.extend(ns.tolist())
+    assert pos == V
+    return order[::-1].copy() if reverse else order
+
+
 def plan_partition(graph: EmpiricalGraph, assign: np.ndarray,
                    num_shards: int) -> PartitionPlan:
     """Build permutation + padding so each shard is a contiguous slice."""
@@ -119,10 +170,12 @@ def plan_partition(graph: EmpiricalGraph, assign: np.ndarray,
     e_counts = np.bincount(e_shard, minlength=num_shards)
     ep = max(int(e_counts.max()) if E else 1, 1)
     edge_perm = np.full(num_shards * ep, -1, dtype=np.int64)
+    edge_inv = np.empty(E, dtype=np.int64)
     pos = 0
     for s in range(num_shards):
         ids = e_order[pos:pos + e_counts[s]]
         edge_perm[s * ep:s * ep + len(ids)] = ids
+        edge_inv[ids] = s * ep + np.arange(len(ids))
         pos += e_counts[s]
 
     valid = edge_perm >= 0
@@ -139,7 +192,7 @@ def plan_partition(graph: EmpiricalGraph, assign: np.ndarray,
     return PartitionPlan(
         num_shards=num_shards, nodes_per_shard=vp, edges_per_shard=ep,
         node_perm=node_perm, node_inv=node_inv, edge_perm=edge_perm,
-        src_new=src_new, dst_new=dst_new, weights=w_new,
+        edge_inv=edge_inv, src_new=src_new, dst_new=dst_new, weights=w_new,
         cut_edges=cut, boundary_nodes=len(bnodes))
 
 
@@ -183,3 +236,49 @@ def unpermute_edge_array(plan: PartitionPlan, arr: np.ndarray,
     valid = plan.edge_perm >= 0
     out[plan.edge_perm[valid]] = arr[valid]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Device-side (jnp) permutes — same layouts as the numpy helpers above, but
+# expressed as gathers so warm-started/continuation solves never round-trip
+# the solver state through the host.
+# ---------------------------------------------------------------------------
+
+def gather_padded(arr, perm, fill=0.0):
+    """Gather rows of ``arr`` by a -1-padded permutation, on device.
+
+    ``perm`` maps output row -> input row, with -1 marking padding rows
+    that receive ``fill``.  The single implementation behind every padded
+    device-side permute (shard layouts, edge-block layouts).
+    """
+    import jax.numpy as jnp
+    arr = jnp.asarray(arr)
+    perm = jnp.asarray(perm, jnp.int32)
+    out = jnp.take(arr, jnp.clip(perm, 0, max(arr.shape[0] - 1, 0)),
+                   axis=0)
+    valid = (perm >= 0).reshape((-1,) + (1,) * (arr.ndim - 1))
+    return jnp.where(valid, out, jnp.asarray(fill, arr.dtype))
+
+
+def permute_node_array_device(plan: PartitionPlan, arr, fill=0.0):
+    """jnp twin of :func:`permute_node_array`: (V, ...) -> (S * vp, ...)."""
+    return gather_padded(arr, plan.node_perm, fill)
+
+
+def unpermute_node_array_device(plan: PartitionPlan, arr, num_nodes: int):
+    """jnp twin of :func:`unpermute_node_array`: pure gather via node_inv."""
+    import jax.numpy as jnp
+    return jnp.take(jnp.asarray(arr),
+                    jnp.asarray(plan.node_inv, jnp.int32), axis=0)
+
+
+def permute_edge_array_device(plan: PartitionPlan, arr, fill=0.0):
+    """jnp twin of :func:`permute_edge_array`: (E, ...) -> (S * ep, ...)."""
+    return gather_padded(arr, plan.edge_perm, fill)
+
+
+def unpermute_edge_array_device(plan: PartitionPlan, arr, num_edges: int):
+    """jnp twin of :func:`unpermute_edge_array`: pure gather via edge_inv."""
+    import jax.numpy as jnp
+    return jnp.take(jnp.asarray(arr),
+                    jnp.asarray(plan.edge_inv, jnp.int32), axis=0)

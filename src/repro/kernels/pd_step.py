@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: fused primal-dual step (Algorithm 1, eqs. 14-15).
+
+The unfused ``pallas`` backend realizes one primal-dual iteration as four
+separate HBM round-trips (dense D^T u gather, affine prox, D apply, dual
+clip).  This kernel fuses the whole step: the grid runs over *node
+blocks* of an edge-blocked graph layout (``core.graph.EdgeBlockLayout``),
+and each grid step keeps its node window ``w``, the incident dual rows
+``u``, the prox parameters (P, b, tau) and the dual step/clip parameters
+VMEM-resident while it computes
+
+    primal gather-sum D^T u  ->  affine/ridge prox (eq. 21)
+    ->  D (2 w+ - w)         ->  dual box clip (step 10)
+
+emitting ``w+`` and ``u+`` with one HBM read and one write per tensor
+(halo rows are re-read by neighbouring blocks; the four intermediate
+edge/node signals never touch HBM).
+
+Layout contract (all index maps are plain ``i + j`` offsets because the
+layout pass aligns every block's halo window to exactly ``i * BV`` /
+``i * EB`` in the padded storage — no scalar prefetch needed):
+
+  * node storage rows:  ``nb*BV`` owned + ``(kn-1)*BV`` suffix padding,
+  * edge storage rows:  ``klo*EB`` prefix + ``nb*EB`` owned + ``khi*EB``
+    suffix padding (incidence tables hold *storage* ids),
+  * per grid step ``i``: node window = ``kn`` consecutive BV-blocks from
+    ``i``, edge window = ``klo+1+khi`` consecutive EB-blocks from ``i``.
+
+When the whole graph fits one block (``nb == 1``), ``iters > 1`` runs a
+``fori_loop`` *inside* the kernel — multi-iteration fusion with the
+``(w, u)`` carry never leaving VMEM.
+
+The in-kernel math is ``kernels.ref.pd_window_step``, shared with the jnp
+oracle ``kernels.ref.fused_pd_step_ref`` so the two paths are
+bit-comparable under the conformance suite.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
+
+
+def _make_kernel(bv: int, eb: int, kn: int, ktot: int, klo: int,
+                 rho: float, iters: int):
+    """Build the grid-step kernel for fixed layout extents."""
+
+    def cat(refs):
+        if len(refs) == 1:
+            return refs[0][...]
+        return jnp.concatenate([r[...] for r in refs], axis=0)
+
+    def kernel(*refs):
+        pos = 0
+        w_refs = refs[pos:pos + kn]; pos += kn
+        u_refs = refs[pos:pos + ktot]; pos += ktot
+        ie_refs = refs[pos:pos + kn]; pos += kn
+        is_refs = refs[pos:pos + kn]; pos += kn
+        p_refs = refs[pos:pos + kn]; pos += kn
+        b_refs = refs[pos:pos + kn]; pos += kn
+        tau_refs = refs[pos:pos + kn]; pos += kn
+        src_ref, dst_ref, sig_ref, bnd_ref = refs[pos:pos + 4]; pos += 4
+        w_out_ref, u_out_ref = refs[pos:pos + 2]
+
+        i = pl.program_id(0)
+        w_win = cat(w_refs)                      # (NW, n)
+        u_win = cat(u_refs)                      # (EW, n)
+        nw, ew = w_win.shape[0], u_win.shape[0]
+        # storage ids -> window-local (clipped; sign 0 kills stray slots)
+        el = jnp.clip(cat(ie_refs) - i * eb, 0, ew - 1)
+        isg = cat(is_refs)
+        p_win, b_win, tau_win = cat(p_refs), cat(b_refs), cat(tau_refs)
+        sl = jnp.clip(src_ref[...][:, 0] - i * bv, 0, nw - 1)
+        dl = jnp.clip(dst_ref[...][:, 0] - i * bv, 0, nw - 1)
+        sg, bd = sig_ref[...], bnd_ref[...]
+
+        def one(w, u):
+            return _ref.pd_window_step(w, u, el, isg, p_win, b_win,
+                                       tau_win, sl, dl, sg, bd, klo=klo,
+                                       block_edges=eb, rho=rho)
+
+        if iters == 1:
+            w_o, u_o = one(w_win, u_win)
+            w_out_ref[...] = w_o[:bv]
+            u_out_ref[...] = u_o
+        else:
+            # single-block multi-iteration fusion: carry stays in VMEM
+            w_o, u_o = jax.lax.fori_loop(
+                0, iters, lambda _, c: one(*c), (w_win, u_win))
+            w_out_ref[...] = w_o
+            u_out_ref[...] = u_o
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_nodes", "block_edges", "kn", "klo", "khi", "rho", "iters",
+    "interpret"))
+def fused_pd_step(w_store: jnp.ndarray, u_store: jnp.ndarray,
+                  inc_edges: jnp.ndarray, inc_signs: jnp.ndarray,
+                  p: jnp.ndarray, b: jnp.ndarray, tau: jnp.ndarray,
+                  src: jnp.ndarray, dst: jnp.ndarray, sigma: jnp.ndarray,
+                  bound: jnp.ndarray, *, block_nodes: int, block_edges: int,
+                  kn: int, klo: int, khi: int, rho: float = 1.0,
+                  iters: int = 1, interpret: bool = False):
+    """Fused PD step over the edge-blocked layout (storage shapes as
+    ``kernels.ref.fused_pd_step_ref``).  Returns (w_new (nb*BV, n),
+    u_new (nb*EB, n))."""
+    bv, eb = block_nodes, block_edges
+    ktot = klo + 1 + khi
+    nb = src.shape[0] // eb
+    if iters != 1 and nb != 1:
+        raise ValueError("multi-iteration fusion requires a single block")
+    n = w_store.shape[1]
+    max_deg = inc_edges.shape[1]
+
+    def nmap(j):
+        return lambda i, j=j: (i + j, 0)
+
+    def nmap3(j):
+        return lambda i, j=j: (i + j, 0, 0)
+
+    in_specs = (
+        [pl.BlockSpec((bv, n), nmap(j)) for j in range(kn)]          # w views
+        + [pl.BlockSpec((eb, n), nmap(j)) for j in range(ktot)]      # u views
+        + [pl.BlockSpec((bv, max_deg), nmap(j)) for j in range(kn)]  # inc ids
+        + [pl.BlockSpec((bv, max_deg), nmap(j)) for j in range(kn)]  # inc sign
+        + [pl.BlockSpec((bv, n, n), nmap3(j)) for j in range(kn)]    # P
+        + [pl.BlockSpec((bv, n), nmap(j)) for j in range(kn)]        # b
+        + [pl.BlockSpec((bv, 1), nmap(j)) for j in range(kn)]        # tau
+        + [pl.BlockSpec((eb, 1), nmap(0))] * 4                       # src/dst/sig/bnd
+    )
+    out_specs = [pl.BlockSpec((bv, n), nmap(0)),
+                 pl.BlockSpec((eb, n), nmap(0))]
+    out_shape = [jax.ShapeDtypeStruct((nb * bv, n), w_store.dtype),
+                 jax.ShapeDtypeStruct((nb * eb, n), u_store.dtype)]
+
+    operands = (
+        [w_store] * kn + [u_store] * ktot + [inc_edges] * kn
+        + [inc_signs] * kn + [p] * kn + [b] * kn + [tau] * kn
+        + [src, dst, sigma, bound]
+    )
+    w_new, u_new = pl.pallas_call(
+        _make_kernel(bv, eb, kn, ktot, klo, rho, iters),
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+    return w_new, u_new

@@ -26,6 +26,115 @@ def batched_affine_ref(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("vnk,vk->vn", p, v)
 
 
+def pd_window_step(w_win: jnp.ndarray, u_win: jnp.ndarray,
+                   inc_local: jnp.ndarray, inc_signs: jnp.ndarray,
+                   p_win: jnp.ndarray, b_win: jnp.ndarray,
+                   tau_win: jnp.ndarray, src_local: jnp.ndarray,
+                   dst_local: jnp.ndarray, sigma: jnp.ndarray,
+                   bound: jnp.ndarray, *, klo: int, block_edges: int,
+                   rho: float = 1.0):
+    """One fused primal-dual step on a single VMEM-resident window.
+
+    The single source of truth for the fused kernel's math — the Pallas
+    kernel (kernels/pd_step.py) runs exactly this function on its loaded
+    window, so interpret-mode kernel output is bit-comparable to the jnp
+    reference (:func:`fused_pd_step_ref`).
+
+    Window shapes (see ``core.graph.EdgeBlockLayout``): ``w_win`` (NW, n),
+    ``u_win`` (EW, n), ``inc_local`` / ``inc_signs`` (NW, max_deg) with
+    edge ids already relative to the window (pre-clipped), ``p_win``
+    (NW, n, n), ``b_win`` (NW, n), ``tau_win`` (NW, 1), and per *owned*
+    edge ``src_local`` / ``dst_local`` (EB,), ``sigma`` / ``bound``
+    (EB, 1).  Returns (w_relaxed_window (NW, n), u_new_owned (EB, n)):
+    primal gather-sum D^T u -> affine ridge prox -> D(2 w+ - w) -> dual
+    box clip, with Krasnosel'skii-Mann relaxation folded in when
+    ``rho != 1``.
+    """
+    n = u_win.shape[1]
+    # primal: dtu = D^T u via the padded incident-edge gather-sum
+    gathered = u_win[inc_local.reshape(-1)].reshape(
+        inc_local.shape + (n,))                          # (NW, max_deg, n)
+    dtu = jnp.einsum("vd,vdn->vn", inc_signs, gathered)
+    # affine (ridge) prox: w+ = P (v + b), eq. 21
+    v_in = w_win - tau_win * dtu
+    w_plus = jnp.einsum("vnk,vk->vn", p_win, v_in + b_win)
+    # dual: u+ = clip(u + sigma D(2 w+ - w))
+    y = 2.0 * w_plus - w_win
+    dw = y[src_local] - y[dst_local]                     # (EB, n)
+    eb = block_edges
+    u_own = jax.lax.slice_in_dim(u_win, klo * eb, (klo + 1) * eb)
+    u_plus = jnp.clip(u_own + sigma * dw, -bound, bound)
+    if rho == 1.0:
+        return w_plus, u_plus
+    w_out = w_win + rho * (w_plus - w_win)
+    u_out = jnp.clip(u_own + rho * (u_plus - u_own), -bound, bound)
+    return w_out, u_out
+
+
+def fused_pd_step_ref(w_store: jnp.ndarray, u_store: jnp.ndarray,
+                      inc_edges: jnp.ndarray, inc_signs: jnp.ndarray,
+                      p: jnp.ndarray, b: jnp.ndarray, tau: jnp.ndarray,
+                      src: jnp.ndarray, dst: jnp.ndarray,
+                      sigma: jnp.ndarray, bound: jnp.ndarray, *,
+                      block_nodes: int, block_edges: int, kn: int,
+                      klo: int, khi: int, rho: float = 1.0,
+                      iters: int = 1):
+    """jnp oracle for the fused PD kernel: vmap of the window step.
+
+    Storage shapes (layout order, see ``EdgeBlockLayout``):
+      w_store (nb*BV + (kn-1)*BV, n), u_store ((nb+klo+khi)*EB, n),
+      inc_edges/inc_signs/p/b/tau padded to the same node-store rows,
+      src/dst/sigma/bound (nb*EB, 1).
+    Returns (w_new (nb*BV, n), u_new (nb*EB, n)).  ``iters > 1`` (the
+    whole-graph-in-VMEM multi-iteration fusion) requires nb == 1.
+    """
+    bv, eb = block_nodes, block_edges
+    nb = src.shape[0] // eb
+    if iters != 1 and nb != 1:
+        raise ValueError("multi-iteration fusion requires a single block")
+    n = w_store.shape[1]
+    nw, ew = kn * bv, (klo + 1 + khi) * eb
+    max_deg = inc_edges.shape[1]
+
+    def block(i):
+        n0, e0 = i * bv, i * eb
+        w_win = jax.lax.dynamic_slice(w_store, (n0, 0), (nw, n))
+        u_win = jax.lax.dynamic_slice(u_store, (e0, 0), (ew, n))
+        ie = jax.lax.dynamic_slice(inc_edges, (n0, 0), (nw, max_deg))
+        isg = jax.lax.dynamic_slice(inc_signs, (n0, 0), (nw, max_deg))
+        p_win = jax.lax.dynamic_slice(p, (n0, 0, 0), (nw, n, n))
+        b_win = jax.lax.dynamic_slice(b, (n0, 0), (nw, n))
+        tau_win = jax.lax.dynamic_slice(tau, (n0, 0), (nw, 1))
+        sv = jax.lax.dynamic_slice(src, (e0, 0), (eb, 1))[:, 0]
+        dv = jax.lax.dynamic_slice(dst, (e0, 0), (eb, 1))[:, 0]
+        sg = jax.lax.dynamic_slice(sigma, (e0, 0), (eb, 1))
+        bd = jax.lax.dynamic_slice(bound, (e0, 0), (eb, 1))
+        el = jnp.clip(ie - e0, 0, ew - 1)
+        sl = jnp.clip(sv - n0, 0, nw - 1)
+        dl = jnp.clip(dv - n0, 0, nw - 1)
+
+        def one(w_win_, u_win_):
+            return pd_window_step(w_win_, u_win_, el, isg, p_win, b_win,
+                                  tau_win, sl, dl, sg, bd, klo=klo,
+                                  block_edges=eb, rho=rho)
+
+        if iters == 1:
+            w_o, u_o = one(w_win, u_win)
+        else:
+            # nb == 1: the window is the whole graph, so the relaxed
+            # window output feeds straight back in (VMEM-resident loop)
+            w_o, u_o = jax.lax.fori_loop(
+                0, iters, lambda _, c: one(*c), (w_win, u_win))
+        return w_o[:bv], u_o
+
+    if nb == 1:
+        # single whole-graph block: skip the vmap wrapper (a size-1 batch
+        # axis defeats XLA gather fusion) — the slices fold away at i=0
+        return block(0)
+    w_new, u_new = jax.vmap(block)(jnp.arange(nb))
+    return w_new.reshape(nb * bv, n), u_new.reshape(nb * eb, n)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   causal: bool = True, sm_scale: float | None = None,
                   window: int | None = None) -> jnp.ndarray:

@@ -8,6 +8,10 @@ identical SolverConfig and asserts:
   * dense is bit-deterministic (same problem twice -> identical w),
   * pallas matches dense on the final weights (<= 1e-4) and on the full
     objective trace,
+  * pallas_fused (the fused primal-dual kernel over the edge-blocked
+    layout; falls back to unfused for losses/regularizers without a
+    fused form) matches dense on the final weights (<= 1e-4) and on the
+    full objective trace,
   * sharded matches dense on the final weights (<= 1e-4) and the final
     objective (its trace has length 1 by design).
 
@@ -38,10 +42,18 @@ def dense_reference(name: str):
 
 
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
-@pytest.mark.parametrize("backend", ["dense", "pallas", "sharded"])
+@pytest.mark.parametrize("backend",
+                         ["dense", "pallas", "pallas_fused", "sharded"])
 def test_backend_conforms(name, backend):
     inst, ref = dense_reference(name)
-    cfg = CONF.replace(backend=backend)
+    if backend == "pallas_fused":
+        cfg = CONF.replace(backend="pallas", fused=True)
+    elif backend == "pallas":
+        # pin the unfused path: on TPU fused=None would resolve to fused,
+        # silently dropping conformance coverage of the unfused kernels
+        cfg = CONF.replace(backend="pallas", fused=False)
+    else:
+        cfg = CONF.replace(backend=backend)
     if backend == "sharded":
         cfg = cfg.replace(mesh=make_host_mesh(1, 1))
     try:
@@ -62,6 +74,10 @@ def test_backend_conforms(name, backend):
         # sharded evaluates metrics once at the final iterate
         assert obj.shape == (1,)
         np.testing.assert_allclose(obj[-1], ref_obj[-1], rtol=1e-4)
+    elif backend == "pallas_fused":
+        # same iteration, different summation order (edge-blocked layout)
+        assert obj.shape == ref_obj.shape
+        np.testing.assert_allclose(obj, ref_obj, rtol=1e-4, atol=1e-6)
     else:
         assert obj.shape == ref_obj.shape
         np.testing.assert_allclose(obj, ref_obj, rtol=1e-5, atol=1e-6)

@@ -70,6 +70,65 @@ def test_batched_affine_matches_ref(v, n, dtype):
 
 
 # ---------------------------------------------------------------------------
+# fused primal-dual step (interpret kernel vs jnp oracle, shared layout)
+# ---------------------------------------------------------------------------
+def _fused_step_args(v, n, bv, seed=0, rho=1.9):
+    from repro.core.graph import plan_edge_blocks, sbm_graph
+    rng = np.random.default_rng(seed)
+    g, _ = sbm_graph(rng, (v // 2, v - v // 2), p_in=0.3, p_out=0.03)
+    lt = plan_edge_blocks(g, block_nodes=bv)
+    kk = jax.random.split(jax.random.PRNGKey(seed), 4)
+    ext = (lt.kn - 1) * lt.block_nodes
+    pad = lambda a: jnp.pad(a, ((0, ext),) + ((0, 0),) * (a.ndim - 1))
+    deg = jnp.sum(lt.inc_signs != 0.0, axis=1).astype(jnp.float32)
+    tau = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 1.0)
+    args = (
+        pad(rnd(kk[0], (lt.nodes_pad, n))),
+        jnp.pad(rnd(kk[1], (lt.edges_pad, n), scale=0.1),
+                ((lt.klo * lt.block_edges, lt.khi * lt.block_edges),
+                 (0, 0))),
+        pad(lt.inc_edges), pad(lt.inc_signs),
+        pad(rnd(kk[2], (lt.nodes_pad, n, n), scale=0.1)
+            + jnp.eye(n)[None]),
+        pad(rnd(kk[3], (lt.nodes_pad, n), scale=0.1)),
+        pad(tau[:, None]), lt.src[:, None], lt.dst[:, None],
+        jnp.full((lt.edges_pad, 1), 0.5),
+        (1e-2 * lt.weights)[:, None],
+    )
+    kw = dict(block_nodes=lt.block_nodes, block_edges=lt.block_edges,
+              kn=lt.kn, klo=lt.klo, khi=lt.khi, rho=rho)
+    return args, kw
+
+
+@pytest.mark.parametrize("v,n,bv", [(61, 2, 16), (103, 3, 32), (40, 4, 64)])
+@pytest.mark.parametrize("rho", [1.0, 1.9])
+def test_fused_pd_step_interpret_matches_ref(v, n, bv, rho):
+    from repro.kernels.pd_step import fused_pd_step
+    args, kw = _fused_step_args(v, n, bv, seed=v, rho=rho)
+    w_k, u_k = fused_pd_step(*args, **kw, interpret=True)
+    w_r, u_r = ref.fused_pd_step_ref(*args, **kw)
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fused_pd_step_multi_iteration_equals_repeated_single():
+    """Single-block multi-iteration fusion == iterating the single step."""
+    from repro.kernels.pd_step import fused_pd_step
+    args, kw = _fused_step_args(48, 2, None, seed=4)   # one block
+    assert kw["kn"] == 1 and kw["klo"] == 0 and kw["khi"] == 0
+    w_m, u_m = fused_pd_step(*args, **kw, iters=5, interpret=True)
+    w, u = args[0], args[1]
+    for _ in range(5):
+        w, u = fused_pd_step(w, u, *args[2:], **kw, interpret=True)
+    np.testing.assert_allclose(np.asarray(w_m), np.asarray(w),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(u_m), np.asarray(u),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # ops entry points vs ref — odd shapes, dtypes, non-multiple-of-block sizes
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("e,n,block_e", [
