@@ -8,15 +8,13 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (fig2_convergence, fig3_pout, roofline_report,
-                        scaling, table1)
+from benchmarks import fig2_convergence, fig3_pout, scaling, table1
 
 ALL = {
     "table1": table1.run,
     "fig2": fig2_convergence.run,
     "fig3": fig3_pout.run,
     "scaling": scaling.run,
-    "roofline": roofline_report.run,
 }
 
 

@@ -22,7 +22,7 @@ import numpy as np                                             # noqa: E402
 from repro.core import Problem, Solver, SolverConfig           # noqa: E402
 from repro.core.distributed import shard_problem               # noqa: E402
 from repro.data.synthetic import make_sbm_regression           # noqa: E402
-from repro.launch.mesh import make_host_mesh                   # noqa: E402
+from repro.core.mesh import make_host_mesh                   # noqa: E402
 
 ds = make_sbm_regression(seed=0, cluster_sizes=(150, 150), p_in=0.5,
                          p_out=1e-3, num_labeled=30)

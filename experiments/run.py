@@ -1,18 +1,28 @@
 """Experiment harness: sweep scenarios x backends x lambda, emit a report.
 
-Runs every registered scenario (or a ``--scenarios`` subset) through the
-requested backends over the scenario's default lambda path (or ``--lams``),
-and writes a JSON + CSV report of reference metrics — the baseline every
-perf/scale PR is measured against.
+Two modes:
 
-Dense/pallas sweeps reuse :func:`repro.api.solve_path` (one shared warm
-solve, vmapped finals); the sharded backend solves each lambda separately
-through the continuation schedule.  Backends that cannot run a scenario
-(e.g. sharded x logistic loss) are recorded as skips, not errors.
+``--mode sweep`` (default) runs every registered scenario (or a
+``--scenarios`` subset) through the requested backends over the
+scenario's default lambda path (or ``--lams``), and writes a JSON + CSV
+report of reference metrics — the baseline every perf/scale PR is
+measured against.  Dense/pallas sweeps reuse :func:`repro.api.solve_path`
+(one shared warm solve, vmapped finals); the sharded backend solves each
+lambda separately through the continuation schedule.  Backends that
+cannot run a scenario (e.g. sharded x logistic loss) are recorded as
+skips, not errors.
+
+``--mode federated`` runs the federated message-passing runtime over a
+grid of participation x compression configurations per scenario and
+writes a *communication-vs-accuracy* report: final reference metrics,
+the ledger totals, and a downsampled (cumulative bytes, objective) curve
+per configuration — ``federated_report.json`` / ``federated_report.csv``.
 
     python experiments/run.py --smoke                  # CI-sized sweep
     python experiments/run.py --scenarios grid2d,small_world \
         --backends dense,pallas --out results/experiments
+    python experiments/run.py --mode federated --smoke \
+        --participation full,bernoulli:0.5 --compression none,int8
 
 ``REPRO_SOLVER_MAX_ITERS`` caps every solve phase (the CI smoke knob).
 """
@@ -31,7 +41,7 @@ import numpy as np                                             # noqa: E402
 
 from repro.api import (Solver, SolverConfig, get_backend,      # noqa: E402
                        solve_path)
-from repro.launch.mesh import make_host_mesh                   # noqa: E402
+from repro.core.mesh import make_host_mesh                   # noqa: E402
 from repro.scenarios import SCENARIOS, get_scenario            # noqa: E402
 
 METRIC_KEYS = ("objective", "weight_mse", "prediction_mse", "accuracy")
@@ -89,8 +99,137 @@ def run_scenario(name: str, backends: list[str], *, seed: int, smoke: bool,
     return rows, skips
 
 
+# ---------------------------------------------------------------------------
+# Federated mode: communication-vs-accuracy over runtime configurations
+# ---------------------------------------------------------------------------
+
+FED_CSV_FIELDS = ("scenario", "participation", "compression", "local_steps",
+                  "rounds", "lam", *METRIC_KEYS, "dual_infeasibility",
+                  "total_bytes", "up_bytes", "down_bytes", "bytes_per_round",
+                  "seconds", "status")
+
+
+def _parse_policy(token: str, kind: str):
+    """CLI policy token: ``name`` or ``name:value`` (the policy's primary
+    knob — bernoulli/dropout sampling rate p, straggler p_slow, topk
+    fraction)."""
+    from repro.federated import get_compression, get_participation
+
+    name, _, value = token.partition(":")
+    kwargs = {}
+    if value:
+        knob = {"bernoulli": "p", "dropout": "rate", "straggler": "p_slow",
+                "topk": "fraction"}.get(name)
+        if knob is None:
+            raise ValueError(
+                f"policy {name!r} takes no ':value' parameter")
+        kwargs[knob] = float(value)
+    getter = (get_participation if kind == "participation"
+              else get_compression)
+    return token, getter(name, **kwargs)
+
+
+def _downsample(xs, ys, max_points: int = 50):
+    idx = np.unique(np.linspace(0, len(xs) - 1, max_points).astype(int))
+    return [float(xs[i]) for i in idx], [float(ys[i]) for i in idx]
+
+
+def run_federated_scenario(name: str, participations, compressions, *,
+                           seed: int, smoke: bool, rounds: int,
+                           local_steps: int):
+    """(participation x compression) communication-vs-accuracy rows."""
+    from repro.federated import (FederatedConfig, get_local_update,
+                                 run_federated)
+
+    scenario = get_scenario(name)
+    inst = scenario.build(seed=seed, smoke=smoke)
+    local = ("single" if local_steps <= 1
+             else get_local_update("prox", num_steps=local_steps))
+    rows = []
+    for part_name, part in participations:
+        for comp_name, comp in compressions:
+            cfg = FederatedConfig(
+                num_rounds=rounds, rho=1.9, participation=part,
+                compression=comp, local_update=local, seed=seed)
+            t0 = time.perf_counter()
+            res = run_federated(inst.problem, cfg)
+            seconds = time.perf_counter() - t0
+            metrics = inst.evaluate(res.w)
+            summary = res.ledger.summary()
+            cum_bytes, obj = _downsample(res.ledger.cumulative_bytes(),
+                                         np.asarray(res.objective))
+            row = {"scenario": name, "participation": part_name,
+                   "compression": comp_name, "local_steps": local_steps,
+                   "rounds": int(summary["rounds"]),
+                   "lam": float(scenario.lam),
+                   "dual_infeasibility":
+                       float(res.diagnostics["dual_infeasibility"]),
+                   "total_bytes": summary["total_bytes"],
+                   "up_bytes": summary["up_bytes"],
+                   "down_bytes": summary["down_bytes"],
+                   "bytes_per_round": summary["bytes_per_round"],
+                   "seconds": seconds, "status": "ok",
+                   "curve": {"cumulative_bytes": cum_bytes,
+                             "objective": obj}}
+            for k in METRIC_KEYS:
+                row[k] = metrics.get(k)
+            rows.append(row)
+    return rows
+
+
+def run_federated_mode(args) -> int:
+    names = (args.scenarios.split(",") if args.scenarios
+             else sorted(SCENARIOS))
+    for name in names:
+        get_scenario(name)
+    participations = [_parse_policy(t, "participation")
+                      for t in args.participation.split(",")]
+    compressions = [_parse_policy(t, "compression")
+                    for t in args.compression.split(",")]
+    rounds = args.rounds if args.rounds else (500 if args.smoke else 2000)
+
+    all_rows = []
+    for name in names:
+        t0 = time.perf_counter()
+        rows = run_federated_scenario(
+            name, participations, compressions, seed=args.seed,
+            smoke=args.smoke, rounds=rounds, local_steps=args.local_steps)
+        all_rows.extend(rows)
+        print(f"[{name}] {len(rows)} federated configs "
+              f"({time.perf_counter() - t0:.1f}s)")
+
+    report = {
+        "mode": "federated",
+        "config": {"seed": args.seed, "smoke": args.smoke,
+                   "scenarios": names, "rounds": rounds,
+                   "local_steps": args.local_steps,
+                   "participation": [n for n, _ in participations],
+                   "compression": [n for n, _ in compressions],
+                   "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                   "max_iters_env":
+                       os.environ.get("REPRO_SOLVER_MAX_ITERS")},
+        "rows": all_rows,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    json_path = os.path.join(args.out, "federated_report.json")
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2)
+    csv_path = os.path.join(args.out, "federated_report.csv")
+    with open(csv_path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=FED_CSV_FIELDS,
+                                extrasaction="ignore")
+        writer.writeheader()
+        writer.writerows(all_rows)
+    print(f"federated report: {json_path} ({len(all_rows)} rows over "
+          f"{len(names)} scenarios x {len(participations)} participation "
+          f"x {len(compressions)} compression); csv: {csv_path}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", choices=("sweep", "federated"),
+                    default="sweep")
     ap.add_argument("--scenarios", default=None,
                     help="comma-separated subset (default: all registered)")
     ap.add_argument("--backends", default="dense,pallas,sharded")
@@ -100,7 +239,22 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized instances and short iteration budgets")
     ap.add_argument("--out", default=os.path.join("results", "experiments"))
+    # federated-mode knobs
+    ap.add_argument("--participation", default="full,bernoulli:0.5",
+                    help="federated mode: comma list of participation "
+                         "policies (name or name:value)")
+    ap.add_argument("--compression", default="none,int8",
+                    help="federated mode: comma list of compression "
+                         "policies (name or name:value)")
+    ap.add_argument("--local-steps", type=int, default=1, dest="local_steps",
+                    help="federated mode: local prox steps per round")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="federated mode: rounds per run "
+                         "(default 2000, smoke 500)")
     args = ap.parse_args(argv)
+
+    if args.mode == "federated":
+        return run_federated_mode(args)
 
     names = (args.scenarios.split(",") if args.scenarios
              else sorted(SCENARIOS))

@@ -1,17 +1,21 @@
 """Execution backends for the unified solver + the shared PD iteration.
 
-Three registered backends, all running the same diagonally-preconditioned
+Four registered backends, all running the same diagonally-preconditioned
 primal-dual iteration (paper eqs. 14-15) and returning one
 :class:`~repro.api.problem.SolveResult`:
 
-  * ``dense``   — single-program ``lax.scan`` (jit-compatible,
-                  differentiable, the CPU/GPU/TPU default),
-  * ``pallas``  — the dense path with the TPU kernels auto-wired
-                  (``kernels.ops.tv_prox`` for the dual clip,
-                  ``kernels.ops.batched_affine`` for the ridge prox),
-  * ``sharded`` — the ``shard_map`` message-passing realization in
-                  ``core.distributed`` (graph partitioned over a device
-                  mesh, halo-exchange collectives per iteration).
+  * ``dense``     — single-program ``lax.scan`` (jit-compatible,
+                    differentiable, the CPU/GPU/TPU default),
+  * ``pallas``    — the dense path with the TPU kernels auto-wired
+                    (``kernels.ops.tv_prox`` for the dual clip,
+                    ``kernels.ops.batched_affine`` for the ridge prox),
+  * ``sharded``   — the ``shard_map`` message-passing realization in
+                    ``core.distributed`` (graph partitioned over a device
+                    mesh, halo-exchange collectives per iteration),
+  * ``federated`` — the round-based federated runtime in
+                    ``repro.federated`` (per-node clients exchanging
+                    edge messages; partial participation, local updates,
+                    compression, and a communication-cost ledger).
 
 ``register_backend`` makes new execution strategies reachable from
 ``Solver.run`` without touching call sites.
@@ -130,6 +134,27 @@ def _diagnostics(problem: Problem, w, u, config: SolverConfig) -> dict:
 # Dense backend (single-program lax.scan) + Pallas kernel wiring
 # ---------------------------------------------------------------------------
 
+def make_metrics_fn(loss: Loss, reg: Regularizer, graph, data, lam, w_true):
+    """``metrics(w) -> (objective, mse)`` — the one trace formula.
+
+    Shared by the dense/pallas scan engines and the federated runtime so
+    their objective/MSE traces are the same expression (the conformance
+    suite compares them bitwise).  MSE is the paper's eq. (24) over the
+    unlabeled (test) nodes, 0 when no ground truth is supplied.
+    """
+    unlabeled = 1.0 - data.labeled_mask
+
+    def metrics(w):
+        obj = loss.empirical_error(data, w) + reg.value(graph, w, lam)
+        if w_true is None:
+            mse = jnp.float32(0.0)
+        else:
+            mse = graph_signal_mse(w, w_true, unlabeled)
+        return obj, mse
+
+    return metrics
+
+
 def _dense_scan_impl(graph, data, lam, w0, u0, w_true, *, loss: Loss,
                      reg: Regularizer, num_iters: int, rho: float,
                      metric_every: int, clip_fn, affine_fn):
@@ -143,16 +168,7 @@ def _dense_scan_impl(graph, data, lam, w0, u0, w_true, *, loss: Loss,
     tau = graph.primal_stepsizes()
     sigma = graph.dual_stepsizes()
     prox = loss.make_prox(data, tau, affine_fn=affine_fn)
-    unlabeled = 1.0 - data.labeled_mask
-
-    def metrics(w):
-        obj = loss.empirical_error(data, w) + reg.value(graph, w, lam)
-        if w_true is None:
-            mse = jnp.float32(0.0)
-        else:
-            # paper eq. (24): MSE over the unlabeled (test) nodes
-            mse = graph_signal_mse(w, w_true, unlabeled)
-        return obj, mse
+    metrics = make_metrics_fn(loss, reg, graph, data, lam, w_true)
 
     def one_iter(state):
         w, u = state
@@ -455,6 +471,40 @@ def solve_pallas(problem: Problem, config: SolverConfig, *, w0=None,
 
 
 # ---------------------------------------------------------------------------
+# Federated backend (round-based message-passing runtime, repro.federated)
+# ---------------------------------------------------------------------------
+
+@register_backend("federated")
+def solve_federated(problem: Problem, config: SolverConfig, *, w0=None,
+                    u0=None, w_true=None) -> SolveResult:
+    """Run the federated message-passing runtime as a solver backend.
+
+    ``config.federated`` (a ``repro.federated.FederatedConfig``) carries
+    the runtime policies — participation, local updates, compression,
+    checkpointing; this solver config's ``num_iters`` (as rounds),
+    ``rho``, ``metric_every``, and ``compute_diagnostics`` override the
+    loop shape so backends stay comparable under one SolverConfig.  The
+    default (``federated=None``) is synchronous full participation —
+    the dense oracle mode the conformance suite locks down.
+    """
+    # local import: repro.federated layers on this module (lazy both ways)
+    import dataclasses as _dc
+
+    from repro.federated import FederatedConfig, run_federated
+
+    fed = (config.federated if config.federated is not None
+           else FederatedConfig())
+    if not isinstance(fed, FederatedConfig):
+        raise TypeError("SolverConfig.federated must be a "
+                        f"repro.federated.FederatedConfig, got {fed!r}")
+    fed = _dc.replace(fed, num_rounds=config.num_iters, rho=config.rho,
+                      metric_every=config.metric_every,
+                      compute_diagnostics=config.compute_diagnostics)
+    return run_federated(problem, fed, w0=w0, u0=u0,
+                         w_true=w_true).to_solve_result()
+
+
+# ---------------------------------------------------------------------------
 # Sharded backend (shard_map message passing, core/distributed.py)
 # ---------------------------------------------------------------------------
 
@@ -473,7 +523,7 @@ def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
                                       permute_node_array_device,
                                       unpermute_edge_array_device,
                                       unpermute_node_array_device)
-    from repro.launch.mesh import make_host_mesh
+    from repro.core.mesh import make_host_mesh
 
     if not isinstance(problem.loss, SquaredLoss):
         raise NotImplementedError(

@@ -115,6 +115,13 @@ class SolverConfig:
                    hooks are set.
       mesh / mesh_axis / num_shards / partitioner / comm: sharded-backend
                    layout knobs (mesh defaults to a (1, 1) host mesh).
+      federated:   federated-backend runtime knobs: a
+                   ``repro.federated.FederatedConfig`` whose participation
+                   / local-update / compression / checkpoint policies are
+                   used as-is while this config's num_iters, rho,
+                   metric_every, and compute_diagnostics override the
+                   loop shape.  None runs the synchronous
+                   full-participation defaults (the dense oracle mode).
       clip_fn / affine_fn: custom kernel hooks for the dual clip and the
                    affine primal update (dense/pallas backends; the pallas
                    backend fills unset hooks with the stock TPU kernels).
@@ -138,6 +145,7 @@ class SolverConfig:
     num_shards: int | None = None
     partitioner: str = "cluster"
     comm: str = "dense"
+    federated: Any = None
     # custom kernel hooks
     clip_fn: Any = dataclasses.field(default=None, compare=False,
                                      repr=False)

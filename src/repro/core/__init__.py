@@ -9,9 +9,11 @@ Lasso objective (eq. 4), and Algorithm 1 — behind one declarative API:
     result = Solver(SolverConfig(num_iters=1000, rho=1.9)).run(problem)
 
 Losses (§4.1-4.3), regularizers (TV / GTVMin), and execution backends
-(dense / sharded / pallas) are pluggable registries; the legacy
-convenience front-ends remain available as thin adapters in
-``repro.core.nlasso``.
+(dense / sharded / pallas / federated) are pluggable registries; the
+legacy convenience front-ends remain available as thin adapters in
+``repro.core.nlasso``.  The package surface is the paper reproduction
+only — graph, losses, solver API, scenarios, the federated runtime, and
+the kernels behind them.
 
 Implementation note: the ``repro.api`` package itself imports the leaf
 modules here (graph, losses), so everything that would close that cycle is

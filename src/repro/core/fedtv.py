@@ -1,7 +1,8 @@
-"""FedTV: networked-federated personalization of big-model training.
+"""FedTV: networked-federated personalization of model training.
 
 This is the integration of the paper's technique (nLasso TV-coupling,
-Algorithm 1) with the assigned model zoo (DESIGN.md §4).  Semantics:
+Algorithm 1) with gradient-based training of an arbitrary backbone model.
+Semantics:
 
   * the global batch is partitioned into C *clients* (mapped onto the
     "data" mesh axis at runtime — each client's examples live on one
@@ -22,7 +23,7 @@ The client graph is tiny (C ~ 16-32 nodes), so the nLasso state adds only
 (C + E) * d_model floats; the TV update is O(E d) — negligible next to the
 backbone step, but it changes *what* is learned: clients in the same
 cluster share statistical strength, heterogeneous clients keep their own
-gains.  examples/fedtv_personalization.py demonstrates the effect.
+gains.
 """
 from __future__ import annotations
 

@@ -1,0 +1,13 @@
+"""Device-mesh construction for the sharded backend.
+
+Defined as functions so importing this module never touches jax device
+state (tests set JAX_PLATFORMS / XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from repro import compat
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small (data, model) mesh over whatever local devices exist."""
+    return compat.make_mesh((data, model), ("data", "model"))

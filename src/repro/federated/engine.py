@@ -1,0 +1,491 @@
+"""Round-based federated message-passing runtime for Algorithm 1.
+
+The paper's central claim is that the primal-dual method *is* a federated
+learning algorithm via a message-passing implementation: each node i keeps
+its local model w^(i) and primal step size tau_i; each edge e = {i, j}
+keeps a dual variable u^(e).  This module executes that protocol as an
+explicit round loop over per-node clients instead of a centralized array
+program.
+
+Protocol per round (edge e = {i, j} with i = src owning the dual):
+
+  1. every *active* client computes its primal update from the duals it
+     holds — owned edges read u^(e) locally, non-owned edges read the
+     mirror last broadcast by the owner (stale if the owner has been
+     inactive) — applying the configured local-update policy (one exact
+     prox = Algorithm 1 eq. 17, or several FedProx-style local steps);
+  2. it forms the primal message z^(i) = 2 w^(i)+ - w^(i) (the eq. 15
+     operand) and sends it, through the configured compression policy,
+     to the owner of every edge where it is the dst endpoint; mailboxes
+     persist, so a message sent to a currently-inactive owner is consumed
+     when the owner next wakes;
+  3. every active *owner* refreshes its duals (Algorithm 1 step 10: the
+     regularizer's resolvent of u + sigma (z_src - z_dst), using its own
+     exact z and the mailbox copy of the neighbour's) and broadcasts the
+     new u^(e) back to the dst endpoint (float32);
+  4. inactive clients freeze: their w, their outgoing messages, and the
+     duals they own are all left as-is — neighbours keep consuming stale
+     state (the partial-participation semantics of asynchronous
+     primal-dual methods).
+
+With full participation, one local prox step, and no compression, every
+``where(active, new, old)`` collapses and the round is *operation-for-
+operation* the dense backend's iteration — the conformance suite locks
+the two traces together.  The :class:`~repro.federated.ledger.CommLedger`
+meters what crossed the network each round.
+
+Checkpointing: without it the whole horizon is one jitted ``lax.scan``
+(the same program shape as the dense engine — XLA chunk boundaries move
+float results at the last ulp, so matching the dense trace requires
+matching its chunking); with ``checkpoint_every=K`` the engine advances
+in compiled chunks of K rounds and saves ``(state, round, traces,
+ledger)`` at each boundary.  A checkpointed straight run and an
+interrupted-then-resumed run execute the identical chunk sequence, so
+resume is *bitwise* — ``tests/test_federated.py`` proves it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.backends import certificate, make_metrics_fn
+from repro.api.problem import Problem, SolveResult
+from repro.checkpoint import checkpoint as ckpt
+from repro.federated.ledger import CommLedger
+from repro.federated.policies import (CompressionPolicy, LocalUpdatePolicy,
+                                      ParticipationPolicy, get_compression,
+                                      get_local_update, get_participation)
+
+_META_NAME = "meta.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedConfig:
+    """How to run the federated runtime (everything static / Python-side).
+
+    Core loop:
+      num_rounds:   communication rounds (one Algorithm 1 iteration each
+                    under the ``single`` local-update policy).
+      rho:          Krasnosel'skii-Mann over-relaxation, exactly as the
+                    dense backend applies it (node-local on w, edge-local
+                    on u).
+      metric_every: objective/MSE cadence; must divide num_rounds.  Also
+                    the engine's jitted-segment length (see module doc).
+
+    Runtime policies (registry names or policy instances; see
+    ``repro.federated.policies``):
+      participation: ``full`` | ``bernoulli`` | ``dropout`` |
+                    ``straggler`` | ``fixed``.
+      local_update: ``single`` | ``prox``.
+      compression:  ``none`` | ``int8`` | ``topk``.
+      seed:         drives the participation schedule (and nothing else);
+                    same seed -> identical schedule and ledger.
+
+    Checkpointing (``repro.checkpoint``):
+      checkpoint_dir:   where to save; None disables.
+      checkpoint_every: save cadence in rounds (multiple of metric_every).
+      resume:           load the latest checkpoint from checkpoint_dir
+                        and continue from its round.
+    """
+
+    num_rounds: int = 500
+    rho: float = 1.0
+    metric_every: int = 1
+    participation: Any = "full"
+    local_update: Any = "single"
+    compression: Any = "none"
+    seed: int = 0
+    checkpoint_dir: str | None = None
+    checkpoint_every: int | None = None
+    resume: bool = False
+    compute_diagnostics: bool = True
+
+    def replace(self, **kw) -> "FederatedConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FederatedState:
+    """The distributed system state between rounds.
+
+    Attributes:
+      w:      (V, n) per-client local models.
+      u:      (E, n) edge duals, as held by their owning (src) endpoint.
+      u_recv: (E, n) the dst endpoint's mirror of each dual — the value
+              last broadcast by the owner (stale while the owner sleeps).
+      z_recv: (E, n) the owner's mailbox of the dst endpoint's last
+              (compressed) primal message.
+    """
+
+    w: jnp.ndarray
+    u: jnp.ndarray
+    u_recv: jnp.ndarray
+    z_recv: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.w, self.u, self.u_recv, self.z_recv), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedResult:
+    """What ``run_federated`` returns.
+
+    ``w``/``u``/``objective``/``mse``/``lam``/``diagnostics`` mirror
+    :class:`~repro.api.problem.SolveResult`; on top of those:
+
+      ledger:   the per-round :class:`CommLedger`.
+      schedule: (rounds, V) numpy activity mask actually executed.
+      state:    final :class:`FederatedState` (resume/warm-start).
+    """
+
+    w: jnp.ndarray
+    u: jnp.ndarray
+    objective: jnp.ndarray
+    mse: jnp.ndarray | None
+    lam: Any
+    diagnostics: dict
+    ledger: CommLedger
+    schedule: np.ndarray
+    state: FederatedState
+
+    @property
+    def final_objective(self):
+        return self.objective[-1]
+
+    def to_solve_result(self) -> SolveResult:
+        """Backend-compatible view; ledger totals fold into diagnostics."""
+        diag = dict(self.diagnostics)
+        diag["comm"] = self.ledger.summary()
+        return SolveResult(w=self.w, u=self.u, objective=self.objective,
+                           mse=self.mse, lam=self.lam, diagnostics=diag)
+
+
+# ---------------------------------------------------------------------------
+# The jitted segment: metric_every message-passing rounds
+# ---------------------------------------------------------------------------
+
+def _chunk_impl(graph, data, lam, w, u, u_recv, z_recv, sched, w_true, *,
+                loss, reg, local_update: LocalUpdatePolicy,
+                compression: CompressionPolicy, rho: float,
+                metric_every: int):
+    """Scan a whole chunk of rounds, metrics on the cadence.
+
+    The per-round body deliberately re-uses the dense backend's exact
+    expressions (same prox, same einsum contraction for D^T u, same
+    ``z[src] - z[dst]`` for D, same resolvent and relaxation formulas)
+    and the chunk is one ``lax.scan`` like the dense engine's, so the
+    full-participation/no-compression mode is operation-for-operation
+    the dense iteration — the conformance suite pins the two traces
+    together.  ``sched`` is the (rounds, V) activity mask for the chunk;
+    ys are the metric trace plus the per-round communication meter.
+    """
+    tau = graph.primal_stepsizes()
+    sigma = graph.dual_stepsizes()
+    prox = loss.make_prox(data, tau)
+    n = w.shape[1]
+    up_cost = jnp.float32(compression.message_bytes(n))
+    down_cost = jnp.float32(4.0 * n)
+    pos_signs = (graph.inc_signs > 0.0)[..., None]
+    rounds = sched.shape[0]
+    metrics = make_metrics_fn(loss, reg, graph, data, lam, w_true)
+
+    def one_round(state, active):
+        w, u, u_recv, z_recv = state
+        # 1. primal: D^T u at each client from owned duals + mirrors
+        gathered = jnp.where(pos_signs, u[graph.inc_edges],
+                             u_recv[graph.inc_edges])
+        dtu = jnp.einsum("vd,vdn->vn", graph.inc_signs, gathered)
+        w_raw = local_update.apply(prox, w, dtu, tau)
+        # 2. primal messages: dst endpoints post compressed z to owners
+        z = 2.0 * w_raw - w
+        active_dst = active[graph.dst][:, None] > 0.0
+        z_recv_new = jnp.where(active_dst,
+                               compression.compress(z[graph.dst]), z_recv)
+        # 3. dual refresh at active owners (Algorithm 1 step 10)
+        diff = z[graph.src] - z_recv_new
+        u_raw = reg.dual_prox(u + sigma[:, None] * diff, graph, lam, sigma)
+        if rho != 1.0:
+            w_raw = w + rho * (w_raw - w)
+            u_raw = reg.project_dual(u + rho * (u_raw - u), graph, lam)
+        active_node = active[:, None] > 0.0
+        active_src = active[graph.src][:, None] > 0.0
+        w_new = jnp.where(active_node, w_raw, w)
+        u_new = jnp.where(active_src, u_raw, u)
+        # 4. owners broadcast refreshed duals to the dst mirrors
+        u_recv_new = jnp.where(active_src, u_new, u_recv)
+        meter = (jnp.sum(active[graph.dst]),
+                 jnp.sum(active[graph.dst]) * up_cost,
+                 jnp.sum(active[graph.src]),
+                 jnp.sum(active[graph.src]) * down_cost)
+        return (w_new, u_new, u_recv_new, z_recv_new), meter
+
+    if metric_every == 1:
+        def step(state, active):
+            new, meter = one_round(state, active)
+            return new, (metrics(new[0]), meter)
+        (w, u, u_recv, z_recv), ((obj, mse), meter) = jax.lax.scan(
+            step, (w, u, u_recv, z_recv), sched)
+    else:
+        sched_blocks = sched.reshape(rounds // metric_every, metric_every,
+                                     sched.shape[1])
+
+        def step(state, block):
+            new, meter = jax.lax.scan(one_round, state, block)
+            return new, (metrics(new[0]), meter)
+        (w, u, u_recv, z_recv), ((obj, mse), meter) = jax.lax.scan(
+            step, (w, u, u_recv, z_recv), sched_blocks)
+        # (T, metric_every) per-round meters -> flat (rounds,)
+        meter = tuple(m.reshape(rounds) for m in meter)
+
+    return (w, u, u_recv, z_recv), (obj, mse), meter
+
+
+_chunk = jax.jit(_chunk_impl,
+                 static_argnames=("loss", "reg", "local_update",
+                                  "compression", "rho", "metric_every"))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint wiring (repro.checkpoint: npz payload + json manifest)
+# ---------------------------------------------------------------------------
+
+def _ckpt_tree(state: FederatedState, objective, mse, ledger: CommLedger):
+    return {"state": state, "objective": objective, "mse": mse,
+            "ledger": ledger}
+
+
+def _problem_fingerprint(problem: Problem) -> str:
+    """Content hash of the optimization problem a trajectory solves:
+    graph structure/weights, node data, lambda, and the loss/regularizer
+    templates.  Two same-shaped but different problems must not splice."""
+    h = hashlib.blake2b(digest_size=16)
+    for arr in (problem.graph.src, problem.graph.dst, problem.graph.weights,
+                problem.data.x, problem.data.y, problem.data.sample_mask,
+                problem.data.labeled_mask):
+        h.update(np.ascontiguousarray(np.asarray(arr)).tobytes())
+    h.update(repr((float(problem.lam), problem.loss,
+                   problem.regularizer)).encode())
+    return h.hexdigest()
+
+
+def _config_fingerprint(cfg: "FederatedConfig", problem: Problem,
+                        have_mse: bool) -> dict:
+    """What a checkpointed trajectory depends on: resuming under any
+    different value would splice two incompatible runs, so resume
+    validates every field (policies and templates are frozen dataclasses
+    — their repr is a faithful fingerprint; the problem itself is
+    content-hashed)."""
+    return {
+        "seed": cfg.seed,
+        "participation": repr(get_participation(cfg.participation)),
+        "local_update": repr(get_local_update(cfg.local_update)),
+        "compression": repr(get_compression(cfg.compression)),
+        "rho": float(cfg.rho),
+        "metric_every": int(cfg.metric_every),
+        # the chunk-boundary sequence: a different cadence would re-chunk
+        # the suffix and lose last-ulp bitwise equality with the straight
+        # run (see module docstring on XLA chunk boundaries)
+        "checkpoint_every": int(cfg.checkpoint_every or 0),
+        "have_mse": bool(have_mse),
+        "problem": _problem_fingerprint(problem),
+    }
+
+
+def _save_checkpoint(path: str, rnd: int, state: FederatedState,
+                     objective, mse, ledger: CommLedger,
+                     fingerprint: dict) -> None:
+    """Crash-safe save: the payload goes into a per-round subdirectory
+    first; only then is ``meta.json`` swapped in atomically (tmp file +
+    ``os.replace``) to point at it.  A kill mid-save leaves the previous
+    checkpoint fully intact; stale round directories are pruned after
+    the pointer moves."""
+    subdir = f"round_{rnd:08d}"
+    ckpt.save(os.path.join(path, subdir),
+              _ckpt_tree(state, objective, mse, ledger))
+    meta = {"round": int(rnd), "trace_len": int(objective.shape[0]),
+            "dir": subdir, "config": fingerprint}
+    tmp = os.path.join(path, _META_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp, os.path.join(path, _META_NAME))
+    for name in os.listdir(path):
+        if name.startswith("round_") and name != subdir:
+            shutil.rmtree(os.path.join(path, name), ignore_errors=True)
+
+
+def has_checkpoint(path: str | None) -> bool:
+    return bool(path) and os.path.exists(os.path.join(path, _META_NAME))
+
+
+def _load_checkpoint(path: str, problem: Problem, *,
+                     fingerprint: dict | None = None):
+    """(round, state, objective, mse, ledger) from a saved checkpoint.
+
+    ``fingerprint`` (when given) must match the one recorded at save
+    time — same seed, policies, rho, metric cadence, and w_true-ness —
+    otherwise the resumed suffix would run a different protocol than the
+    checkpointed prefix and the spliced result would be inconsistent.
+    """
+    with open(os.path.join(path, _META_NAME)) as f:
+        meta = json.load(f)
+    rnd, tlen = int(meta["round"]), int(meta["trace_len"])
+    if fingerprint is not None:
+        saved = meta.get("config", {})
+        bad = sorted(k for k in fingerprint
+                     if saved.get(k) != fingerprint[k])
+        if bad:
+            raise ValueError(
+                f"checkpoint at {path!r} was written under a different "
+                f"run configuration (mismatched: {bad}); resume must use "
+                f"the same seed/policies/rho/metric_every/w_true "
+                f"(saved {[saved.get(k) for k in bad]} vs "
+                f"requested {[fingerprint[k] for k in bad]})")
+    V, n = problem.num_nodes, problem.num_features
+    E = problem.graph.num_edges
+    like = _ckpt_tree(
+        FederatedState(w=jnp.zeros((V, n), jnp.float32),
+                       u=jnp.zeros((E, n), jnp.float32),
+                       u_recv=jnp.zeros((E, n), jnp.float32),
+                       z_recv=jnp.zeros((E, n), jnp.float32)),
+        jnp.zeros((tlen,), jnp.float32), jnp.zeros((tlen,), jnp.float32),
+        CommLedger(*(jnp.zeros((rnd,), jnp.float32) for _ in range(4))))
+    tree = ckpt.restore(os.path.join(path, meta.get("dir", "")), like)
+    return rnd, tree["state"], tree["objective"], tree["mse"], tree["ledger"]
+
+
+# ---------------------------------------------------------------------------
+# The runtime front-end
+# ---------------------------------------------------------------------------
+
+
+def participation_schedule(config: FederatedConfig, num_rounds: int,
+                           num_nodes: int) -> np.ndarray:
+    """The (rounds, nodes) activity mask a run with this config executes
+    (deterministic in ``config.seed``)."""
+    policy: ParticipationPolicy = get_participation(config.participation)
+    sched = policy.schedule(np.random.default_rng(config.seed), num_rounds,
+                            num_nodes)
+    if sched.shape != (num_rounds, num_nodes):
+        raise ValueError(f"schedule shape {sched.shape} != "
+                         f"{(num_rounds, num_nodes)}")
+    return np.ascontiguousarray(sched, np.float32)
+
+
+def run_federated(problem: Problem, config: FederatedConfig | None = None,
+                  *, w0=None, u0=None, w_true=None) -> FederatedResult:
+    """Execute the federated message-passing runtime on ``problem``.
+
+    Synchronous full participation with ``single`` local updates and no
+    compression reproduces the dense backend exactly (same trace); every
+    other configuration trades accuracy-per-round against the metered
+    communication cost in the returned ledger.
+    """
+    # the solver's REPRO_SOLVER_MAX_ITERS knob caps rounds the same way
+    # it caps iterations (one shared implementation, no drift)
+    from repro.api.solver import _capped
+
+    cfg = config if config is not None else FederatedConfig()
+    me = cfg.metric_every
+    R = _capped(cfg.num_rounds, me)
+    if R % me:
+        raise ValueError(
+            f"metric_every={me} must divide num_rounds={R}")
+    if cfg.checkpoint_every is not None:
+        if cfg.checkpoint_dir is None:
+            raise ValueError("checkpoint_every needs checkpoint_dir")
+        if cfg.checkpoint_every % me:
+            raise ValueError(
+                f"checkpoint_every={cfg.checkpoint_every} must be a "
+                f"multiple of metric_every={me}")
+    local_update = get_local_update(cfg.local_update)
+    compression = get_compression(cfg.compression)
+
+    graph, data = problem.graph, problem.data
+    V, n = problem.num_nodes, problem.num_features
+    E = graph.num_edges
+    schedule = participation_schedule(cfg, R, V)
+
+    if w0 is None:
+        w0 = jnp.zeros((V, n), jnp.float32)
+    else:
+        w0 = jnp.asarray(w0, jnp.float32)
+    if u0 is None:
+        u0 = jnp.zeros((E, n), jnp.float32)
+    else:
+        u0 = jnp.asarray(u0, jnp.float32)
+
+    start_round = 0
+    obj_parts: list = []
+    mse_parts: list = []
+    ledger_parts: list[CommLedger] = []
+    fingerprint = _config_fingerprint(cfg, problem, w_true is not None)
+    if cfg.resume and has_checkpoint(cfg.checkpoint_dir):
+        start_round, state, obj0, mse0, led0 = _load_checkpoint(
+            cfg.checkpoint_dir, problem, fingerprint=fingerprint)
+        if start_round % me or start_round > R:
+            raise ValueError(
+                f"checkpoint round {start_round} incompatible with "
+                f"num_rounds={R}, metric_every={me}")
+        obj_parts, mse_parts = [obj0], [mse0]
+        ledger_parts = [led0]
+    else:
+        # at join time every client knows the initial model (setup
+        # broadcast, not metered): mirrors and mailboxes start consistent
+        state = FederatedState(w=w0, u=u0, u_recv=u0, z_recv=w0[graph.dst])
+
+    w, u, u_recv, z_recv = state.w, state.u, state.u_recv, state.z_recv
+
+    # chunk boundaries: the whole horizon is ONE jitted scan unless
+    # checkpointing splits it — a checkpointed straight run and an
+    # interrupted-then-resumed run then execute the identical sequence
+    # of compiled chunks, which is what makes resume bitwise.
+    checkpointing = (cfg.checkpoint_dir is not None
+                     and bool(cfg.checkpoint_every))
+    step_rounds = cfg.checkpoint_every if checkpointing else max(
+        R - start_round, 1)
+    bounds = [(r, min(r + step_rounds, R))
+              for r in range(start_round, R, step_rounds)]
+
+    for r0, r1 in bounds:
+        sched_chunk = jnp.asarray(schedule[r0:r1])
+        (w, u, u_recv, z_recv), (obj, mse), meter = _chunk(
+            graph, data, problem.lam, w, u, u_recv, z_recv, sched_chunk,
+            w_true, loss=problem.loss, reg=problem.regularizer,
+            local_update=local_update, compression=compression,
+            rho=cfg.rho, metric_every=me)
+        obj_parts.append(obj)
+        mse_parts.append(mse)
+        ledger_parts.append(CommLedger(*meter))
+        if checkpointing:
+            _save_checkpoint(
+                cfg.checkpoint_dir, r1,
+                FederatedState(w=w, u=u, u_recv=u_recv, z_recv=z_recv),
+                jnp.concatenate(obj_parts), jnp.concatenate(mse_parts),
+                CommLedger.concat(ledger_parts), fingerprint)
+    objective = (jnp.concatenate(obj_parts) if obj_parts
+                 else jnp.zeros((0,), jnp.float32))
+    mse_tr = (jnp.concatenate(mse_parts) if mse_parts
+              else jnp.zeros((0,), jnp.float32))
+    ledger = CommLedger.concat(ledger_parts)
+    state = FederatedState(w=w, u=u, u_recv=u_recv, z_recv=z_recv)
+
+    diagnostics = (certificate(problem, w, u) if cfg.compute_diagnostics
+                   else {})
+    return FederatedResult(
+        w=w, u=u, objective=objective,
+        mse=None if w_true is None else mse_tr, lam=problem.lam,
+        diagnostics=diagnostics, ledger=ledger, schedule=schedule,
+        state=state)

@@ -14,10 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.pd_step import fused_pd_step as _fused_pd_step
 from repro.kernels.ridge_prox import batched_affine as _affine
-from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv6
 from repro.kernels.tv_prox import tv_prox as _tv_prox
 
 
@@ -44,9 +42,8 @@ def tv_prox(u: jnp.ndarray, bound: jnp.ndarray, *,
             interpret: bool | None = None,
             block_e: int | None = None) -> jnp.ndarray:
     """Edge-wise dual clip (Algorithm 1 step 10): kernel on TPU, jnp
-    reference elsewhere (mirrors ``attention``'s dispatch).  ``block_e``
-    is a kernel tiling choice — semantics-free, so the reference branch
-    accepts and ignores it."""
+    reference elsewhere.  ``block_e`` is a kernel tiling choice —
+    semantics-free, so the reference branch accepts and ignores it."""
     kw = {} if block_e is None else {"block_e": block_e}
     if interpret is not None:            # explicit request: run the kernel
         return _tv_prox(u, bound, interpret=interpret, **kw)
@@ -84,124 +81,3 @@ def pd_step(w_store, u_store, inc_edges, inc_signs, p, b, tau, src, dst,
         kw["interpret"] = _interpret()
     return fn(w_store, u_store, inc_edges, inc_signs, p, b, tau, src, dst,
               sigma, bound, **kw)
-
-
-# (T * S) above which the jnp fallback switches from the materialized
-# reference to the blocked online-softmax scan (flash-style memory).
-_BLOCKED_THRESHOLD = 4096 * 4096
-
-
-def _blocked_attention(q, k, v, *, causal: bool = True, sm_scale=None,
-                       window=None, block_k: int = 1024) -> jnp.ndarray:
-    """Flash-style online-softmax attention in pure jnp (lax.scan over
-    key blocks).
-
-    Same tiling idea as the Pallas kernel but expressed as XLA ops, so it
-    lowers on every backend — this is what the 32k-prefill dry-runs compile
-    (peak live memory O(T * block_k) per head instead of O(T * S)).
-    q: (B, Hq, T, D); k, v: (B, Hkv, S, D).
-    """
-    b, hq, t, d = q.shape
-    hkv, s = k.shape[1], k.shape[2]
-    group = hq // hkv
-    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
-
-    pad = (-s) % block_k
-    if pad:
-        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
-        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    else:
-        kp, vp = k, v
-    nb = (s + pad) // block_k
-    # (nb, B, Hkv, block, D)
-    kb = jnp.moveaxis(kp.reshape(b, hkv, nb, block_k, d), 2, 0)
-    vb = jnp.moveaxis(vp.reshape(b, hkv, nb, block_k, d), 2, 0)
-    starts = (jnp.arange(nb) * block_k).astype(jnp.int32)
-
-    qg = q.reshape(b, hkv, group, t, d).astype(jnp.float32)
-    qpos = jnp.arange(t) + (s - t)                    # decode-aligned
-
-    m0 = jnp.full((b, hkv, group, t), -jnp.inf, jnp.float32)
-    l0 = jnp.zeros((b, hkv, group, t), jnp.float32)
-    a0 = jnp.zeros((b, hkv, group, t, d), jnp.float32)
-
-    def body(carry, blk):
-        m, l, acc = carry
-        kblk, vblk, start = blk
-        logits = jnp.einsum("bhgtd,bhsd->bhgts", qg,
-                            kblk.astype(jnp.float32)) * scale
-        kpos = start + jnp.arange(block_k)
-        mask = kpos[None, :] < s
-        if causal:
-            mask &= kpos[None, :] <= qpos[:, None]
-        if window is not None:
-            mask &= kpos[None, :] > qpos[:, None] - window
-        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
-        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
-        # rows still fully masked keep m = -inf; guard the exp
-        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
-        p = jnp.exp(logits - m_safe[..., None])
-        p = jnp.where(mask[None, None, None], p, 0.0)
-        alpha = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
-        l_new = l * alpha + jnp.sum(p, axis=-1)
-        acc_new = acc * alpha[..., None] + jnp.einsum(
-            "bhgts,bhsd->bhgtd", p, vblk.astype(jnp.float32))
-        return (m_new, l_new, acc_new), None
-
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.reshape(b, hq, t, d).astype(q.dtype)
-
-
-def attention(q, k, v, *, causal: bool = True, sm_scale=None, window=None,
-              use_kernel: bool | None = None, **kw) -> jnp.ndarray:
-    """GQA attention: flash kernel on TPU, jnp fallback elsewhere.
-
-    The jnp fallback is the materialized reference for small (T, S) and the
-    blocked online-softmax scan above the ``_BLOCKED_THRESHOLD`` — the CPU
-    smoke tests hit the former, the 32k-prefill dry-runs the latter.  Pass
-    ``use_kernel=True`` (or run on TPU) for the Pallas path.
-    """
-    if use_kernel is None:
-        use_kernel = _on_tpu() or bool(os.environ.get("REPRO_FORCE_INTERPRET"))
-    if use_kernel:
-        return _flash(q, k, v, causal=causal, sm_scale=sm_scale,
-                      window=window, interpret=_interpret(), **kw)
-    if q.shape[2] * k.shape[2] > _BLOCKED_THRESHOLD:
-        return _blocked_attention(q, k, v, causal=causal, sm_scale=sm_scale,
-                                  window=window, **kw)
-    return _ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale,
-                              window=window)
-
-
-def rwkv6(r, k, v, w, u, state=None, *, use_kernel: bool | None = None,
-          **kw):
-    """RWKV6 WKV scan: chunked Pallas kernel on TPU, chunked jnp scan
-    elsewhere (same chunk algebra — see ref.rwkv6_chunked; the per-token
-    ref.rwkv6_ref stays the test oracle only, its state round-trips HBM
-    every token)."""
-    if use_kernel is None:
-        use_kernel = _on_tpu() or bool(os.environ.get("REPRO_FORCE_INTERPRET"))
-    t = r.shape[2]
-    # VMEM kernel is exact at chunk 32; the factorized jnp path uses 16
-    # to bound the pairwise-decay exponent (see ref.rwkv6_chunked)
-    chunk = kw.pop("chunk", None) or (32 if use_kernel else 16)
-    pad = (-t) % chunk if t > 1 else 0
-    if pad:
-        seq_pad = ((0, 0), (0, 0), (0, pad), (0, 0))
-        # zero k ensures padded tokens do not touch the state; w=1 is a
-        # decay no-op, so the final state is exact.
-        r = jnp.pad(r, seq_pad)
-        k = jnp.pad(k, seq_pad)
-        v = jnp.pad(v, seq_pad)
-        w = jnp.pad(w, seq_pad, constant_values=1.0)
-    if use_kernel:
-        y, s = _rwkv6(r, k, v, w, u, state, chunk=chunk,
-                      interpret=_interpret(), **kw)
-    elif t == 1 or os.environ.get("REPRO_LEGACY_SCAN"):
-        # single-token decode: the plain recurrence is one state update
-        # (REPRO_LEGACY_SCAN keeps the per-token path for §Perf baselines)
-        y, s = _ref.rwkv6_ref(r, k, v, w, u, state)
-    else:
-        y, s = _ref.rwkv6_chunked(r, k, v, w, u, state, chunk=chunk)
-    return (y[:, :, :t], s) if pad else (y, s)

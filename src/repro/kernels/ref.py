@@ -133,151 +133,3 @@ def fused_pd_step_ref(w_store: jnp.ndarray, u_store: jnp.ndarray,
         return block(0)
     w_new, u_new = jax.vmap(block)(jnp.arange(nb))
     return w_new.reshape(nb * bv, n), u_new.reshape(nb * eb, n)
-
-
-def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                  causal: bool = True, sm_scale: float | None = None,
-                  window: int | None = None) -> jnp.ndarray:
-    """GQA attention oracle.
-
-    q: (B, Hq, T, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0.
-    ``window``: sliding-window size (keys within [i-window+1, i] attend).
-    Query position i is aligned to key position i + (S - T) (decode layout).
-    """
-    b, hq, t, d = q.shape
-    hkv = k.shape[1]
-    group = hq // hkv
-    if sm_scale is None:
-        sm_scale = 1.0 / (d ** 0.5)
-    kk = jnp.repeat(k, group, axis=1)
-    vv = jnp.repeat(v, group, axis=1)
-    logits = jnp.einsum("bhtd,bhsd->bhts", q, kk) * sm_scale
-    s = k.shape[2]
-    qpos = jnp.arange(t)[:, None] + (s - t)
-    kpos = jnp.arange(s)[None, :]
-    mask = jnp.ones((t, s), bool)
-    if causal:
-        mask &= kpos <= qpos
-    if window is not None:
-        mask &= kpos > qpos - window
-    logits = jnp.where(mask[None, None], logits, -jnp.inf)
-    probs = jax.nn.softmax(logits, axis=-1)
-    probs = jnp.where(jnp.isnan(probs), 0.0, probs)   # fully-masked rows
-    return jnp.einsum("bhts,bhsd->bhtd", probs, vv)
-
-
-def rwkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-              w: jnp.ndarray, u: jnp.ndarray,
-              state: jnp.ndarray | None = None):
-    """RWKV6 (Finch) WKV recurrence oracle — strictly sequential scan.
-
-    r, k, w: (B, H, T, Dk); v: (B, H, T, Dv); u: (H, Dk) bonus.
-    w is the *decay factor* in (0, 1) (data-dependent, eq. of arXiv
-    2404.05892: w_t = exp(-exp(x_t))).
-    state: (B, H, Dk, Dv) initial state (zeros if None).
-
-    Returns (y, final_state):
-      y_t = sum_i r_{t,i} ( S_{t,i,:} + u_i k_{t,i} v_t )
-      S_{t+1} = diag(w_t) S_t + k_t v_t^T
-    """
-    bsz, h, t, dk = r.shape
-    dv = v.shape[-1]
-    if state is None:
-        state = jnp.zeros((bsz, h, dk, dv), jnp.float32)
-
-    def step(s, inp):
-        rt, kt, vt, wt = inp          # (B,H,Dk),(B,H,Dk),(B,H,Dv),(B,H,Dk)
-        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,Dk,Dv)
-        yt = jnp.einsum("bhk,bhkv->bhv", rt,
-                        s + u[None, :, :, None] * kv)
-        s_new = wt[..., :, None] * s + kv
-        return s_new, yt
-
-    xs = (jnp.moveaxis(r, 2, 0), jnp.moveaxis(k, 2, 0),
-          jnp.moveaxis(v, 2, 0), jnp.moveaxis(w, 2, 0))
-    final, ys = jax.lax.scan(step, state, xs)
-    return jnp.moveaxis(ys, 0, 2), final
-
-
-def rwkv6_chunked(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                  w: jnp.ndarray, u: jnp.ndarray,
-                  state: jnp.ndarray | None = None, *, chunk: int = 16):
-    """Chunked RWKV6 WKV scan in pure jnp — same algebra as the Pallas
-    kernel (kernels/rwkv6_scan.py), vectorized over (B, H).
-
-    This is the XLA-backend execution path (and what the dry-runs lower):
-    the per-token scan reads+writes the (B, H, Dk, Dv) fp32 state every
-    token, so its HBM traffic is 2 * T * B*H*Dk*Dv*4 bytes per layer; the
-    chunked form carries the state once per C tokens and does the rest as
-    matmuls — a ~T/C reduction of the dominant roofline term (see
-    EXPERIMENTS.md §Perf, rwkv6-3b x train_4k).
-
-    Unlike the VMEM kernel, the pairwise decay is FACTORIZED
-    exp(exc_t - cum_s) = exp(exc_t - c0) * exp(c0 - cum_s) so the (C, C)
-    score is a single matmul and the (C, C, Dk) tensor never materializes
-    in HBM.  Two stabilizations keep f32 in range for any data:
-      * c0 is the mid-chunk prefix (halves the one-sided exponent range),
-      * the per-token log-decay is clamped at -8 in the SCORE path only
-        (a token with w < e^-8 wipes 99.97% of the state; pairs crossing
-        it contribute nothing — inter-chunk and state updates stay exact
-        up to a -60 clamp that only replaces log(0) = -inf).
-    Max one-sided exponent: (chunk/2) * 8 = 64 < log(f32max) = 88.
-    The Pallas kernel keeps the unfactorized VMEM form (exact always).
-
-    Shapes as rwkv6_ref.  T must be a multiple of ``chunk`` (ops pads).
-    """
-    bsz, h, t, dk = r.shape
-    dv = v.shape[-1]
-    assert t % chunk == 0
-    nc = t // chunk
-    if state is None:
-        state = jnp.zeros((bsz, h, dk, dv), jnp.float32)
-
-    f32 = jnp.float32
-
-    def to_chunks(x):
-        # (B, H, T, D) -> (nc, B, H, C, D)
-        d = x.shape[-1]
-        return jnp.moveaxis(x.reshape(bsz, h, nc, chunk, d), 2, 0)
-
-    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
-    t_idx = jnp.arange(chunk)[:, None]
-    s_idx = jnp.arange(chunk)[None, :]
-    strict = t_idx > s_idx                              # (C, C)
-    diag = t_idx == s_idx
-
-    def body(s, inp):
-        rb, kb, vb, wb = (x.astype(f32) for x in inp)   # (B, H, C, D*)
-        # -60 floor: replaces log(underflowed w)= -inf (e^-60 is 0 anyway)
-        lw = jnp.maximum(jnp.log(wb), -60.0)
-        cum = jnp.cumsum(lw, axis=2)                    # inclusive prefix
-        exc = cum - lw                                  # exclusive prefix
-
-        # inter-chunk: queries see the carried state through decay prefix
-        rq = rb * jnp.exp(exc)
-        y_inter = jnp.einsum("bhtk,bhkv->bhtv", rq, s)
-
-        # intra-chunk: factorized pairwise decay -> one (C, C) matmul
-        # (clamped score-path decay + mid-chunk shift, see docstring)
-        lwc = jnp.maximum(lw, -8.0)
-        cumc = jnp.cumsum(lwc, axis=2)
-        excc = cumc - lwc
-        c0 = cumc[:, :, chunk // 2, None, :]            # (B, H, 1, Dk)
-        rqs = rb * jnp.exp(excc - c0)
-        ke = kb * jnp.exp(c0 - cumc)
-        a = jnp.einsum("bhtk,bhsk->bhts", rqs, ke)
-        bonus = jnp.sum(rb * u[None, :, None, :] * kb, axis=3)  # (B,H,C)
-        a = jnp.where(strict[None, None], a, 0.0)
-        a = a + jnp.where(diag[None, None], bonus[:, :, :, None], 0.0)
-        y_intra = jnp.einsum("bhts,bhsv->bhtv", a, vb)
-
-        # state: S <- diag(prod w) S + sum_s (prod_{tau>s} w_tau) k_s v_s^T
-        total = cum[:, :, -1]                           # (B, H, Dk)
-        kd = kb * jnp.exp(total[:, :, None, :] - cum)
-        s_new = jnp.exp(total)[..., None] * s + jnp.einsum(
-            "bhsk,bhsv->bhkv", kd, vb)
-        return s_new, (y_inter + y_intra).astype(r.dtype)
-
-    final, ys = jax.lax.scan(body, state, (rc, kc, vc, wc))
-    y = jnp.moveaxis(ys, 0, 2).reshape(bsz, h, t, dv)
-    return y, final

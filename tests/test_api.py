@@ -19,7 +19,7 @@ from repro.core.distributed import solve_and_unpermute
 from repro.core.losses import make_prox
 from repro.core.nlasso import (nlasso, nlasso_continuation, solve_nlasso)
 from repro.data.synthetic import make_classification_sbm, make_sbm_regression
-from repro.launch.mesh import make_host_mesh
+from repro.core.mesh import make_host_mesh
 
 
 @pytest.fixture(scope="module")

@@ -13,7 +13,12 @@ identical SolverConfig and asserts:
     fused form) matches dense on the final weights (<= 1e-4) and on the
     full objective trace,
   * sharded matches dense on the final weights (<= 1e-4) and the final
-    objective (its trace has length 1 by design).
+    objective (its trace has length 1 by design),
+  * federated_sync (the message-passing runtime in synchronous
+    full-participation mode: one exact local prox per round, no
+    compression) matches dense on the final weights (<= 1e-6) and on
+    the full objective trace — the runtime's oracle mode is the dense
+    iteration, operation for operation.
 
 Backends that declare a scenario unsupported (sharded x non-squared loss)
 must do so loudly via NotImplementedError — recorded here as a skip, so a
@@ -23,7 +28,7 @@ import numpy as np
 import pytest
 
 from repro.api import Solver, SolverConfig
-from repro.launch.mesh import make_host_mesh
+from repro.core.mesh import make_host_mesh
 from repro.scenarios import SCENARIOS, get_scenario
 
 # identical on every backend: fixed budget, no continuation (the schedule
@@ -43,7 +48,8 @@ def dense_reference(name: str):
 
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
 @pytest.mark.parametrize("backend",
-                         ["dense", "pallas", "pallas_fused", "sharded"])
+                         ["dense", "pallas", "pallas_fused", "sharded",
+                          "federated_sync"])
 def test_backend_conforms(name, backend):
     inst, ref = dense_reference(name)
     if backend == "pallas_fused":
@@ -52,6 +58,9 @@ def test_backend_conforms(name, backend):
         # pin the unfused path: on TPU fused=None would resolve to fused,
         # silently dropping conformance coverage of the unfused kernels
         cfg = CONF.replace(backend="pallas", fused=False)
+    elif backend == "federated_sync":
+        # default FederatedConfig = synchronous full participation
+        cfg = CONF.replace(backend="federated")
     else:
         cfg = CONF.replace(backend=backend)
     if backend == "sharded":
@@ -65,6 +74,9 @@ def test_backend_conforms(name, backend):
     if backend == "dense":
         # re-solve of the same jitted program must be bit-identical
         assert w_diff == 0.0, w_diff
+    elif backend == "federated_sync":
+        # the runtime's sync mode is the dense iteration's exact oracle
+        assert w_diff <= 1e-6, (name, backend, w_diff)
     else:
         assert w_diff <= 1e-4, (name, backend, w_diff)
 
@@ -74,6 +86,9 @@ def test_backend_conforms(name, backend):
         # sharded evaluates metrics once at the final iterate
         assert obj.shape == (1,)
         np.testing.assert_allclose(obj[-1], ref_obj[-1], rtol=1e-4)
+    elif backend == "federated_sync":
+        assert obj.shape == ref_obj.shape
+        np.testing.assert_allclose(obj, ref_obj, rtol=1e-6, atol=1e-7)
     elif backend == "pallas_fused":
         # same iteration, different summation order (edge-blocked layout)
         assert obj.shape == ref_obj.shape

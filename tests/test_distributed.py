@@ -22,7 +22,7 @@ from repro.core.partition import (block_partition, cluster_partition,
                                   plan_partition, permute_node_array,
                                   unpermute_node_array)
 from repro.data.synthetic import make_sbm_regression
-from repro.launch.mesh import make_host_mesh
+from repro.core.mesh import make_host_mesh
 
 
 @pytest.fixture(scope="module")
@@ -99,7 +99,7 @@ MULTIDEV_SCRIPT = textwrap.dedent("""
     from repro.core.distributed import solve_and_unpermute
     from repro.core.nlasso import nlasso
     from repro.data.synthetic import make_sbm_regression
-    from repro.launch.mesh import make_host_mesh
+    from repro.core.mesh import make_host_mesh
 
     ds = make_sbm_regression(seed=3, cluster_sizes=(24, 24), p_in=0.5,
                              p_out=5e-3, num_labeled=12)

@@ -1,0 +1,426 @@
+"""Federated message-passing runtime: semantics, ledger, checkpointing.
+
+Four claims pinned down here (the cross-backend oracle equivalence lives
+in tests/test_conformance.py as the ``federated_sync`` row):
+
+  * the runtime is *deterministic in the seed*: one seed -> one
+    participation schedule -> one ledger -> one trajectory, bitwise;
+  * the partial-participation semantics are real message-passing
+    semantics: inactive clients freeze, neighbours consume stale
+    messages, mailboxes persist;
+  * the ledger meters exactly what the protocol sends (counts follow
+    from the schedule; bytes follow from the compression policy);
+  * checkpoint/resume through ``repro.checkpoint`` is bitwise: a run
+    interrupted at round K and resumed equals the straight run.
+"""
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Solver, SolverConfig
+from repro.federated import (COMPRESSIONS, LOCAL_UPDATES, PARTICIPATION,
+                             FederatedConfig, FixedSchedule,
+                             Int8Quantization, MultiProxSteps,
+                             TopKSparsification, get_compression,
+                             get_local_update, get_participation,
+                             participation_schedule, run_federated)
+from repro.scenarios import get_scenario
+
+
+def _instance(name="sbm_regression", seed=0):
+    return get_scenario(name).build(seed=seed, smoke=True)
+
+
+def _bitwise_equal(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_policy_registries_resolve():
+    assert {"full", "bernoulli", "dropout", "straggler",
+            "fixed"} <= set(PARTICIPATION)
+    assert {"single", "prox"} <= set(LOCAL_UPDATES)
+    assert {"none", "int8", "topk"} <= set(COMPRESSIONS)
+    assert get_participation("bernoulli", p=0.25).p == 0.25
+    assert get_local_update("prox", num_steps=3).num_steps == 3
+    assert get_compression("topk", fraction=0.25).fraction == 0.25
+    with pytest.raises(ValueError):
+        get_participation("nope")
+    with pytest.raises(TypeError):
+        get_compression(Int8Quantization(), extra=1)
+
+
+# ---------------------------------------------------------------------------
+# participation schedules
+# ---------------------------------------------------------------------------
+
+def test_schedule_deterministic_in_seed():
+    cfg = FederatedConfig(participation="bernoulli", seed=7)
+    a = participation_schedule(cfg, 50, 30)
+    b = participation_schedule(cfg, 50, 30)
+    c = participation_schedule(cfg.replace(seed=8), 50, 30)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_bernoulli_rate():
+    cfg = FederatedConfig(participation=get_participation("bernoulli",
+                                                          p=0.3))
+    sched = participation_schedule(cfg, 400, 50)
+    assert abs(sched.mean() - 0.3) < 0.02
+
+
+def test_dropout_is_permanent():
+    cfg = FederatedConfig(
+        participation=get_participation("dropout", rate=0.05), seed=1)
+    sched = participation_schedule(cfg, 100, 40)
+    # once a node goes inactive it never comes back
+    for v in range(40):
+        col = sched[:, v]
+        dead = np.where(col == 0.0)[0]
+        if len(dead):
+            assert np.all(col[dead[0]:] == 0.0)
+    assert sched[0].sum() > sched[-1].sum()  # attrition really happened
+
+
+def test_straggler_shifts_rounds_late():
+    policy = get_participation("straggler", p=1.0, p_slow=1.0, delay=4)
+    cfg = FederatedConfig(participation=policy, seed=0)
+    sched = participation_schedule(cfg, 20, 8)
+    # every round straggles by exactly 4: the first 4 rounds are silent,
+    # everything after is the shifted (full) schedule
+    assert np.all(sched[:4] == 0.0)
+    assert np.all(sched[4:] == 1.0)
+
+
+def test_fixed_schedule_repeats_last_row():
+    mask = ((1.0, 0.0), (0.0, 1.0))
+    cfg = FederatedConfig(participation=FixedSchedule(mask=mask))
+    sched = participation_schedule(cfg, 4, 2)
+    assert np.array_equal(sched, [[1, 0], [0, 1], [0, 1], [0, 1]])
+
+
+# ---------------------------------------------------------------------------
+# compression policies
+# ---------------------------------------------------------------------------
+
+def test_int8_quantization_error_bound():
+    rng = np.random.default_rng(0)
+    msg = jnp.asarray(rng.standard_normal((64, 8)), jnp.float32)
+    out = np.asarray(Int8Quantization().compress(msg))
+    scale = np.max(np.abs(np.asarray(msg)), axis=-1, keepdims=True) / 127.0
+    assert np.all(np.abs(out - np.asarray(msg)) <= 0.5 * scale + 1e-7)
+    assert Int8Quantization().message_bytes(8) == 12.0
+
+
+def test_topk_keeps_largest_coordinates():
+    msg = jnp.asarray([[3.0, -1.0, 0.5, 2.0]], jnp.float32)
+    out = np.asarray(TopKSparsification(fraction=0.5).compress(msg))
+    assert np.array_equal(out, [[3.0, 0.0, 0.0, 2.0]])
+    assert TopKSparsification(fraction=0.5).message_bytes(4) == 16.0
+    # ties must keep exactly k coordinates, not all tied ones
+    tied = jnp.ones((1, 4), jnp.float32)
+    out = np.asarray(TopKSparsification(fraction=0.5).compress(tied))
+    assert int(np.count_nonzero(out)) == 2
+
+
+def test_none_compression_is_identity():
+    msg = jnp.asarray(np.random.default_rng(1).standard_normal((5, 3)),
+                      jnp.float32)
+    assert _bitwise_equal(get_compression("none").compress(msg), msg)
+
+
+# ---------------------------------------------------------------------------
+# runtime semantics
+# ---------------------------------------------------------------------------
+
+def test_run_deterministic_in_seed():
+    inst = _instance()
+    cfg = FederatedConfig(num_rounds=40, rho=1.9,
+                          participation="bernoulli", compression="int8",
+                          local_update="prox", seed=11)
+    a = run_federated(inst.problem, cfg)
+    b = run_federated(inst.problem, cfg)
+    assert np.array_equal(a.schedule, b.schedule)
+    assert _bitwise_equal(a.w, b.w)
+    assert _bitwise_equal(a.objective, b.objective)
+    for f in ("up_msgs", "up_bytes", "down_msgs", "down_bytes"):
+        assert _bitwise_equal(getattr(a.ledger, f), getattr(b.ledger, f))
+
+
+def test_inactive_clients_freeze():
+    """A node that never participates keeps its initial model."""
+    inst = _instance("chain_changepoint")
+    V = inst.problem.num_nodes
+    mask = np.ones((1, V), np.float32)
+    mask[0, 0] = 0.0                      # node 0 sits the whole run out
+    cfg = FederatedConfig(num_rounds=20, rho=1.9,
+                          participation=FixedSchedule(
+                              mask=tuple(map(tuple, mask))))
+    res = run_federated(inst.problem, cfg)
+    assert np.all(np.asarray(res.w)[0] == 0.0)
+    assert np.any(np.asarray(res.w)[1:] != 0.0)
+
+
+def test_stale_messages_follow_the_schedule():
+    """With one silent node, active nodes still make progress and the
+    objective still decreases (stale-message semantics, not a crash)."""
+    inst = _instance("grid2d")
+    cfg = FederatedConfig(num_rounds=60, rho=1.9,
+                          participation=get_participation("bernoulli",
+                                                          p=0.5), seed=3)
+    res = run_federated(inst.problem, cfg)
+    obj = np.asarray(res.objective)
+    assert np.all(np.isfinite(obj))
+    assert obj[-1] < 0.5 * obj[0]
+
+
+def test_local_prox_steps_and_compression_still_converge():
+    inst = _instance()
+    cfg = FederatedConfig(num_rounds=60, rho=1.9,
+                          participation="bernoulli",
+                          local_update=MultiProxSteps(num_steps=3),
+                          compression="int8", seed=5)
+    res = run_federated(inst.problem, cfg)
+    obj = np.asarray(res.objective)
+    assert np.all(np.isfinite(obj))
+    assert obj[-1] < 0.2 * obj[0]
+
+
+def test_solver_backend_dispatch_and_config_plumbing():
+    """backend='federated' flows policies through SolverConfig.federated
+    and folds the ledger summary into the diagnostics."""
+    inst = _instance("grid2d")
+    fed = FederatedConfig(participation="bernoulli", compression="int8",
+                          seed=2)
+    res = Solver(SolverConfig(num_iters=30, rho=1.9, backend="federated",
+                              federated=fed)).run(inst.problem)
+    comm = res.diagnostics["comm"]
+    assert comm["rounds"] == 30.0
+    E = inst.problem.graph.num_edges
+    # partial participation must send strictly less than full would
+    assert 0 < comm["up_messages"] < 30 * E
+    with pytest.raises(TypeError):
+        Solver(SolverConfig(backend="federated",
+                            federated="bogus")).run(inst.problem)
+
+
+# ---------------------------------------------------------------------------
+# ledger accounting
+# ---------------------------------------------------------------------------
+
+def test_ledger_counts_follow_schedule_exactly():
+    inst = _instance("grid2d")
+    problem = inst.problem
+    g = problem.graph
+    n = problem.num_features
+    cfg = FederatedConfig(num_rounds=25, participation="bernoulli",
+                          compression="int8", seed=9)
+    res = run_federated(problem, cfg)
+    sched = res.schedule
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    up_expect = sched[:, dst].sum(axis=1)      # dst-active edges post z up
+    down_expect = sched[:, src].sum(axis=1)    # src-active owners push u
+    np.testing.assert_array_equal(np.asarray(res.ledger.up_msgs),
+                                  up_expect)
+    np.testing.assert_array_equal(np.asarray(res.ledger.down_msgs),
+                                  down_expect)
+    np.testing.assert_allclose(np.asarray(res.ledger.up_bytes),
+                               up_expect * (n + 4.0))
+    np.testing.assert_allclose(np.asarray(res.ledger.down_bytes),
+                               down_expect * 4.0 * n)
+    # cumulative curve is monotone and ends at the total
+    cum = res.ledger.cumulative_bytes()
+    assert np.all(np.diff(cum) >= 0)
+    assert cum[-1] == res.ledger.total_bytes
+    summary = res.ledger.summary()
+    assert summary["rounds"] == 25.0
+    assert summary["total_bytes"] == res.ledger.total_bytes
+
+
+def test_full_participation_ledger_is_every_edge_every_round():
+    inst = _instance("chain_changepoint")
+    E = inst.problem.graph.num_edges
+    n = inst.problem.num_features
+    res = run_federated(inst.problem, FederatedConfig(num_rounds=10))
+    assert np.all(np.asarray(res.ledger.up_msgs) == E)
+    assert np.all(np.asarray(res.ledger.down_msgs) == E)
+    assert res.ledger.total_bytes == 10 * E * (4.0 * n + 4.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume (repro.checkpoint wiring)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w_true", [False, True])
+def test_checkpoint_resume_is_bitwise(tmp_path, w_true):
+    inst = _instance("grid2d")
+    wt = inst.w_true if w_true else None
+    d = str(tmp_path / "ckpt")
+    cfg = FederatedConfig(num_rounds=40, rho=1.9,
+                          participation="bernoulli", compression="int8",
+                          local_update="prox", seed=4,
+                          checkpoint_dir=d, checkpoint_every=10)
+    straight = run_federated(inst.problem, cfg, w_true=wt)
+
+    shutil.rmtree(d)
+    os.makedirs(d)
+    # interrupted run: stops after round 20, leaving its checkpoint
+    run_federated(inst.problem, cfg.replace(num_rounds=20), w_true=wt)
+    resumed = run_federated(inst.problem, cfg.replace(resume=True),
+                            w_true=wt)
+
+    assert _bitwise_equal(straight.w, resumed.w)
+    assert _bitwise_equal(straight.u, resumed.u)
+    assert _bitwise_equal(straight.objective, resumed.objective)
+    if w_true:
+        assert _bitwise_equal(straight.mse, resumed.mse)
+    for f in ("up_msgs", "up_bytes", "down_msgs", "down_bytes"):
+        assert _bitwise_equal(getattr(straight.ledger, f),
+                              getattr(resumed.ledger, f))
+    assert straight.ledger.num_rounds == resumed.ledger.num_rounds == 40
+
+
+def test_checkpoint_state_round_trips(tmp_path):
+    """The saved (w, u, round, ledger) really is the live state."""
+    inst = _instance("chain_changepoint")
+    d = str(tmp_path / "ckpt")
+    cfg = FederatedConfig(num_rounds=12, rho=1.9, checkpoint_dir=d,
+                          checkpoint_every=12)
+    res = run_federated(inst.problem, cfg)
+    from repro.federated.engine import _load_checkpoint
+    rnd, state, obj, mse, ledger = _load_checkpoint(d, inst.problem)
+    assert rnd == 12
+    assert _bitwise_equal(state.w, res.w)
+    assert _bitwise_equal(state.u, res.u)
+    assert _bitwise_equal(obj, res.objective)
+    assert _bitwise_equal(ledger.up_bytes, res.ledger.up_bytes)
+
+
+def test_checkpoint_config_validation(tmp_path):
+    inst = _instance("chain_changepoint")
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        run_federated(inst.problem,
+                      FederatedConfig(num_rounds=4, checkpoint_every=2))
+    with pytest.raises(ValueError, match="multiple of metric_every"):
+        run_federated(inst.problem, FederatedConfig(
+            num_rounds=4, metric_every=2, checkpoint_every=3,
+            checkpoint_dir=str(tmp_path)))
+
+
+def test_resume_rejects_config_mismatch(tmp_path):
+    """Resuming under a different seed/policy would splice two different
+    protocols; the recorded config fingerprint rejects it."""
+    inst = _instance("chain_changepoint")
+    cfg = FederatedConfig(num_rounds=8, participation="bernoulli", seed=4,
+                          checkpoint_dir=str(tmp_path), checkpoint_every=4)
+    run_federated(inst.problem, cfg.replace(num_rounds=4))
+    for bad in (cfg.replace(seed=5), cfg.replace(compression="int8"),
+                cfg.replace(rho=1.9), cfg.replace(checkpoint_every=2)):
+        with pytest.raises(ValueError, match="different run config"):
+            run_federated(inst.problem, bad.replace(resume=True))
+    run_federated(inst.problem, cfg.replace(resume=True))        # ok
+
+
+def test_checkpoint_save_is_crash_safe(tmp_path):
+    """A torn save must never destroy the previous checkpoint: payloads
+    land in a per-round dir and meta.json is swapped in last."""
+    inst = _instance("chain_changepoint")
+    d = str(tmp_path)
+    cfg = FederatedConfig(num_rounds=8, checkpoint_dir=d,
+                          checkpoint_every=4)
+    run_federated(inst.problem, cfg.replace(num_rounds=4))
+    import json
+    meta = json.load(open(os.path.join(d, "meta.json")))
+    assert meta["round"] == 4 and meta["dir"] == "round_00000004"
+    # simulate a crash mid-save of round 8: a half-written payload dir
+    # appears, but meta still points at round 4 -> resume uses round 4
+    os.makedirs(os.path.join(d, "round_00000008"))
+    res = run_federated(inst.problem, cfg.replace(resume=True))
+    assert res.ledger.num_rounds == 8
+    # the completed run pruned the stale dir and moved the pointer
+    meta = json.load(open(os.path.join(d, "meta.json")))
+    assert meta["round"] == 8
+    assert sorted(n for n in os.listdir(d) if n.startswith("round_")) == \
+        ["round_00000008"]
+
+
+def test_schedule_prefix_stable_across_horizons():
+    """Every policy's schedule prefix is independent of the horizon —
+    resuming with an extended num_rounds replays the executed prefix."""
+    for name in sorted(PARTICIPATION):
+        if name == "fixed":
+            continue
+        cfg = FederatedConfig(participation=name, seed=6)
+        short = participation_schedule(cfg, 20, 9)
+        long = participation_schedule(cfg, 45, 9)
+        assert np.array_equal(long[:20], short), name
+    # dropout with per-round sampling draws twice; cover that path too
+    cfg = FederatedConfig(
+        participation=get_participation("dropout", rate=0.02, p=0.7),
+        seed=6)
+    assert np.array_equal(participation_schedule(cfg, 45, 9)[:20],
+                          participation_schedule(cfg, 20, 9))
+
+
+def test_resume_extends_horizon_bitwise(tmp_path):
+    """A straggler run checkpointed at its horizon and resumed with a
+    longer one equals the straight long run (prefix-stable schedules)."""
+    inst = _instance("chain_changepoint")
+    d = str(tmp_path / "ck")
+    cfg = FederatedConfig(num_rounds=40, participation="straggler", seed=8,
+                          checkpoint_dir=d, checkpoint_every=20)
+    straight = run_federated(inst.problem, cfg)
+    shutil.rmtree(d)
+    os.makedirs(d)
+    run_federated(inst.problem, cfg.replace(num_rounds=20))
+    resumed = run_federated(inst.problem, cfg.replace(resume=True))
+    assert _bitwise_equal(straight.w, resumed.w)
+    assert _bitwise_equal(straight.objective, resumed.objective)
+
+
+def test_resume_rejects_different_problem_content(tmp_path):
+    """Same shapes, different problem (e.g. another lambda) must not
+    splice: the problem content hash in the fingerprint rejects it."""
+    inst = _instance("grid2d")
+    cfg = FederatedConfig(num_rounds=8, checkpoint_dir=str(tmp_path),
+                          checkpoint_every=4)
+    run_federated(inst.problem, cfg.replace(num_rounds=4))
+    with pytest.raises(ValueError, match="different run config"):
+        run_federated(inst.problem.with_lam(0.1), cfg.replace(resume=True))
+
+
+def test_resume_rejects_w_true_mismatch(tmp_path):
+    """A checkpoint written without ground truth cannot be resumed with
+    it (the MSE trace prefix would be silently zero), and vice versa."""
+    inst = _instance("chain_changepoint")
+    cfg = FederatedConfig(num_rounds=8, checkpoint_dir=str(tmp_path),
+                          checkpoint_every=4)
+    run_federated(inst.problem, cfg.replace(num_rounds=4))   # no w_true
+    with pytest.raises(ValueError, match="w_true"):
+        run_federated(inst.problem, cfg.replace(resume=True),
+                      w_true=inst.w_true)
+    run_federated(inst.problem, cfg.replace(resume=True))    # ok
+
+
+def test_resume_rejects_mismatched_problem_shape(tmp_path):
+    """Two guards against resuming onto the wrong problem: the config
+    fingerprint (first), and repro.checkpoint's shape validation as the
+    backstop when no fingerprint is supplied."""
+    inst = _instance("chain_changepoint")
+    other = _instance("grid2d")
+    cfg = FederatedConfig(num_rounds=4, checkpoint_dir=str(tmp_path),
+                          checkpoint_every=4)
+    run_federated(inst.problem, cfg)
+    with pytest.raises(ValueError, match="different run config"):
+        run_federated(other.problem, cfg.replace(resume=True))
+    from repro.federated.engine import _load_checkpoint
+    with pytest.raises(ValueError, match="shape mismatch"):
+        _load_checkpoint(str(tmp_path), other.problem)

@@ -10,9 +10,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ridge_prox import batched_affine
-from repro.kernels.rwkv6_scan import rwkv6_scan
 from repro.kernels.tv_prox import tv_prox
 
 # hypothesis is optional (shared guard in conftest); the deterministic
@@ -208,92 +206,3 @@ else:
     @pytest.mark.skip(reason="hypothesis not installed")
     def test_batched_affine_property_matches_ref():
         pass
-
-
-# ---------------------------------------------------------------------------
-# flash attention
-# ---------------------------------------------------------------------------
-@pytest.mark.parametrize("b,hq,hkv,t,s,d", [
-    (1, 4, 4, 128, 128, 32),     # MHA, single block
-    (2, 8, 2, 256, 256, 64),     # GQA 4:1, multi block
-    (1, 4, 1, 96, 96, 32),       # ragged (padding path)
-    (1, 4, 2, 64, 192, 32),      # chunked prefill: T < S
-])
-def test_flash_attention_causal(b, hq, hkv, t, s, d):
-    keys = jax.random.split(jax.random.PRNGKey(3), 3)
-    q = rnd(keys[0], (b, hq, t, d))
-    k = rnd(keys[1], (b, hkv, s, d))
-    v = rnd(keys[2], (b, hkv, s, d))
-    out = flash_attention(q, k, v, causal=True, interpret=True,
-                          block_q=64, block_k=64)
-    want = ref.attention_ref(q, k, v, causal=True)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
-                               rtol=2e-3, atol=2e-3)
-
-
-@pytest.mark.parametrize("window", [32, 128])
-def test_flash_attention_sliding_window(window):
-    keys = jax.random.split(jax.random.PRNGKey(4), 3)
-    b, h, t, d = 1, 2, 256, 32
-    q = rnd(keys[0], (b, h, t, d))
-    k = rnd(keys[1], (b, h, t, d))
-    v = rnd(keys[2], (b, h, t, d))
-    out = flash_attention(q, k, v, causal=True, window=window,
-                          interpret=True, block_q=64, block_k=64)
-    want = ref.attention_ref(q, k, v, causal=True, window=window)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
-                               rtol=2e-3, atol=2e-3)
-
-
-def test_flash_attention_bf16():
-    keys = jax.random.split(jax.random.PRNGKey(5), 3)
-    q = rnd(keys[0], (1, 4, 128, 64), jnp.bfloat16)
-    k = rnd(keys[1], (1, 2, 128, 64), jnp.bfloat16)
-    v = rnd(keys[2], (1, 2, 128, 64), jnp.bfloat16)
-    out = flash_attention(q, k, v, causal=True, interpret=True)
-    want = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
-                             v.astype(jnp.float32), causal=True)
-    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want),
-                               rtol=5e-2, atol=5e-2)
-
-
-# ---------------------------------------------------------------------------
-# rwkv6 chunked scan
-# ---------------------------------------------------------------------------
-@pytest.mark.parametrize("b,h,t,dk,dv,chunk", [
-    (1, 2, 64, 16, 16, 16),
-    (2, 2, 96, 32, 32, 32),
-    (1, 1, 128, 8, 24, 32),      # Dk != Dv
-])
-def test_rwkv6_matches_ref(b, h, t, dk, dv, chunk):
-    keys = jax.random.split(jax.random.PRNGKey(6), 6)
-    r = rnd(keys[0], (b, h, t, dk), scale=0.5)
-    k = rnd(keys[1], (b, h, t, dk), scale=0.5)
-    v = rnd(keys[2], (b, h, t, dv), scale=0.5)
-    # decays in a realistic RWKV6 range
-    w = jnp.exp(-jnp.exp(rnd(keys[3], (b, h, t, dk), scale=0.5)))
-    u = rnd(keys[4], (h, dk), scale=0.5)
-    s0 = rnd(keys[5], (b, h, dk, dv), scale=0.5)
-    y, sf = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk, interpret=True)
-    y_ref, s_ref = ref.rwkv6_ref(r, k, v, w, u, s0)
-    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
-                               rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(np.asarray(sf), np.asarray(s_ref),
-                               rtol=2e-4, atol=2e-4)
-
-
-def test_rwkv6_chunk_invariance():
-    """Different chunk sizes give the same result (algebraic identity)."""
-    keys = jax.random.split(jax.random.PRNGKey(7), 5)
-    b, h, t, d = 1, 1, 64, 16
-    r = rnd(keys[0], (b, h, t, d), scale=0.5)
-    k = rnd(keys[1], (b, h, t, d), scale=0.5)
-    v = rnd(keys[2], (b, h, t, d), scale=0.5)
-    w = jnp.exp(-jnp.exp(rnd(keys[3], (b, h, t, d))))
-    u = rnd(keys[4], (h, d))
-    y16, s16 = rwkv6_scan(r, k, v, w, u, chunk=16, interpret=True)
-    y64, s64 = rwkv6_scan(r, k, v, w, u, chunk=64, interpret=True)
-    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64),
-                               rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(np.asarray(s16), np.asarray(s64),
-                               rtol=2e-4, atol=2e-4)

@@ -74,53 +74,6 @@ def test_squared_prox_minimizes_eq18(v, m, seed):
         assert (pert >= base - 1e-4).all()
 
 
-@settings(max_examples=10, deadline=None)
-@given(b=st.integers(1, 2), h=st.integers(1, 2),
-       t=st.sampled_from([16, 32, 48]), d=st.sampled_from([8, 16]),
-       seed=st.integers(0, 2**31 - 1))
-def test_rwkv6_state_composition(b, h, t, d, seed):
-    """Running the scan on [0:t/2] then [t/2:t] with the carried state
-    equals one full scan — the invariant the chunked kernel relies on."""
-    rng = np.random.default_rng(seed)
-
-    def rnd(shape, scale=0.5):
-        return jnp.asarray(rng.standard_normal(shape).astype(np.float32)
-                           * scale)
-
-    r, k = rnd((b, h, t, d)), rnd((b, h, t, d))
-    v = rnd((b, h, t, d))
-    w = jnp.exp(-jnp.exp(rnd((b, h, t, d))))
-    u = rnd((h, d))
-    y_full, s_full = ref.rwkv6_ref(r, k, v, w, u)
-    half = t // 2
-    y1, s1 = ref.rwkv6_ref(r[:, :, :half], k[:, :, :half], v[:, :, :half],
-                           w[:, :, :half], u)
-    y2, s2 = ref.rwkv6_ref(r[:, :, half:], k[:, :, half:], v[:, :, half:],
-                           w[:, :, half:], u, state=s1)
-    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 2)),
-                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
-    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
-                               rtol=2e-4, atol=2e-4)
-
-
-@settings(max_examples=10, deadline=None)
-@given(t=st.sampled_from([32, 64]), s_extra=st.sampled_from([0, 32]),
-       window=st.sampled_from([None, 16]),
-       seed=st.integers(0, 2**31 - 1))
-def test_blocked_attention_matches_reference(t, s_extra, window, seed):
-    from repro.kernels.ops import _blocked_attention
-    rng = np.random.default_rng(seed)
-    b, hq, hkv, d = 1, 4, 2, 16
-    s = t + s_extra
-    q = jnp.asarray(rng.standard_normal((b, hq, t, d)).astype(np.float32))
-    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
-    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
-    out = _blocked_attention(q, k, v, causal=True, window=window, block_k=16)
-    want = ref.attention_ref(q, k, v, causal=True, window=window)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
-                               rtol=2e-4, atol=2e-4)
-
-
 @settings(max_examples=20, deadline=None)
 @given(v=st.integers(2, 30), shards=st.sampled_from([1, 2, 4]),
        seed=st.integers(0, 2**31 - 1))
