@@ -20,7 +20,13 @@ orders of magnitude, and compares four execution paths:
                                    fused path + off-TPU fast path landed,
   * ``pallas_fused``             — the fused primal-dual kernel over the
                                    edge-blocked layout (kernel on TPU,
-                                   bit-comparable jnp reference off-TPU).
+                                   bit-comparable jnp reference off-TPU),
+  * ``federated``                — the round-based message-passing
+                                   runtime in synchronous full-
+                                   participation mode (one engine step
+                                   per round plus the mailbox/mirror
+                                   bookkeeping), the overhead price of
+                                   the federated execution model.
 
 The full run lands in ``BENCH_scaling.json`` at the repo root (plus
 ``results/benchmarks/scaling.json``) so subsequent PRs have a perf
@@ -41,7 +47,7 @@ import numpy as np
 
 from benchmarks.common import save_result
 
-SIZES = (250, 1000, 4000, 16000)
+SIZES = (250, 1000, 4000, 16000, 32000)
 SMOKE_SIZES = (250, 1000)
 ITERS = 200
 SMOKE_ITERS = 40
@@ -64,7 +70,10 @@ METHODOLOGY = (
     "exact execution the pallas backend used before the fused kernel and "
     "the off-TPU jnp fast path existed. fused_vs_unfused = pallas_fused "
     "/ pallas_unfused_interpret; fused_vs_unfused_fastpath = pallas_fused "
-    "/ pallas_unfused (the post-PR unfused path)."
+    "/ pallas_unfused (the post-PR unfused path). federated runs the "
+    "message-passing runtime in synchronous full-participation mode (one "
+    "engine step per round); federated_overhead = dense / federated, the "
+    "per-iteration price of the mailbox/mirror protocol."
 )
 
 
@@ -136,6 +145,8 @@ def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
                              fused=False, **interp_hooks)),
             "pallas_fused": _time_iters_per_s(
                 problem, cfg(iters, backend="pallas", fused=True)),
+            "federated": _time_iters_per_s(
+                problem, cfg(iters, backend="federated")),
         }
         rows[str(v)] = {
             "edges": int(g.num_edges),
@@ -146,6 +157,7 @@ def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
                                  / modes["pallas_unfused_interpret"]),
             "fused_vs_unfused_fastpath": (modes["pallas_fused"]
                                           / modes["pallas_unfused"]),
+            "federated_overhead": modes["dense"] / modes["federated"],
         }
         if verbose:
             r = rows[str(v)]

@@ -8,9 +8,11 @@ scenario's default lambda path (or ``--lams``), and writes a JSON + CSV
 report of reference metrics — the baseline every perf/scale PR is
 measured against.  Dense/pallas sweeps reuse :func:`repro.api.solve_path`
 (one shared warm solve, vmapped finals); the sharded backend solves each
-lambda separately through the continuation schedule.  Backends that
-cannot run a scenario (e.g. sharded x logistic loss) are recorded as
-skips, not errors.
+lambda separately through the continuation schedule.  With ``--tol``
+every (backend, lambda) point instead runs a residual-stopped solve
+(``SolverConfig.tol``) and the report records iterations-to-tolerance
+per row.  Backends that cannot run a scenario (e.g. sharded x logistic
+loss) are recorded as skips, not errors.
 
 ``--mode federated`` runs the federated message-passing runtime over a
 grid of participation x compression configurations per scenario and
@@ -46,14 +48,16 @@ from repro.scenarios import SCENARIOS, get_scenario            # noqa: E402
 
 METRIC_KEYS = ("objective", "weight_mse", "prediction_mse", "accuracy")
 CSV_FIELDS = ("scenario", "backend", "lam", *METRIC_KEYS,
-              "dual_infeasibility", "sweep_seconds", "num_nodes",
-              "num_edges", "status")
+              "dual_infeasibility", "tol", "iterations", "sweep_seconds",
+              "num_nodes", "num_edges", "status")
 
 
-def _row(inst, backend, lam, metrics, diag, seconds, status="ok"):
+def _row(inst, backend, lam, metrics, diag, seconds, status="ok",
+         tol=None, iterations=None):
     g = inst.problem.graph
     row = {"scenario": inst.name, "backend": backend, "lam": float(lam),
-           "dual_infeasibility": diag, "sweep_seconds": seconds,
+           "dual_infeasibility": diag, "tol": tol,
+           "iterations": iterations, "sweep_seconds": seconds,
            "num_nodes": g.num_nodes, "num_edges": g.num_edges,
            "status": status}
     for k in METRIC_KEYS:
@@ -62,8 +66,20 @@ def _row(inst, backend, lam, metrics, diag, seconds, status="ok"):
 
 
 def run_scenario(name: str, backends: list[str], *, seed: int, smoke: bool,
-                 lams: list[float] | None, config: SolverConfig):
-    """All (backend, lambda) rows for one scenario (plus skip records)."""
+                 lams: list[float] | None, config: SolverConfig,
+                 tol: float | None = None, tol_every: int = 50):
+    """All (backend, lambda) rows for one scenario (plus skip records).
+
+    With ``tol`` set, every (backend, lambda) point runs as its own
+    residual-stopped solve (``solve_path`` vmaps a fixed-length scan, so
+    per-lambda early stopping needs per-lambda solves) and the row
+    records the iterations-to-tolerance from the solver diagnostics.
+    Deliberately *cold-start and single-phase on every backend* —
+    including sharded, which the metric sweep runs through the
+    continuation schedule — so iterations-to-tolerance means the same
+    thing in every row (continuation would reduce ``iterations`` to the
+    final phase of a two-phase schedule and make backends incomparable).
+    """
     scenario = get_scenario(name)
     inst = scenario.build(seed=seed, smoke=smoke)
     path = tuple(lams) if lams else scenario.lam_path
@@ -71,7 +87,28 @@ def run_scenario(name: str, backends: list[str], *, seed: int, smoke: bool,
     for backend in backends:
         t0 = time.perf_counter()
         try:
-            if backend in ("dense", "pallas"):
+            if tol is not None:
+                # residual cadence can't exceed the budget; round the
+                # budget down to a whole number of chunks (never to 0)
+                every = max(1, min(tol_every, config.num_iters))
+                cfg = config.replace(
+                    backend=backend, tol=tol, metric_every=every,
+                    num_iters=config.num_iters
+                    - config.num_iters % every)
+                if backend == "sharded":
+                    cfg = cfg.replace(mesh=make_host_mesh(1, 1))
+                solver = Solver(cfg)
+                results = [(lam, solver.run(inst.problem.with_lam(
+                    float(lam)))) for lam in path]
+                seconds = time.perf_counter() - t0
+                for lam, res in results:
+                    metrics = inst.evaluate(res.w, lam=float(lam))
+                    diag = float(res.diagnostics["dual_infeasibility"])
+                    rows.append(_row(
+                        inst, backend, lam, metrics, diag, seconds,
+                        tol=tol,
+                        iterations=res.diagnostics.get("iterations")))
+            elif backend in ("dense", "pallas"):
                 res = solve_path(inst.problem, path,
                                  config.replace(backend=backend))
                 seconds = time.perf_counter() - t0
@@ -236,6 +273,12 @@ def main(argv=None) -> int:
     ap.add_argument("--lams", default=None,
                     help="comma-separated lambda override for every scenario")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tol", type=float, default=None,
+                    help="sweep mode: residual-based early stopping "
+                         "tolerance; rows then record iterations-to-"
+                         "tolerance per (scenario, backend, lambda)")
+    ap.add_argument("--tol-every", type=int, default=50, dest="tol_every",
+                    help="residual check cadence (metric_every) for --tol")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized instances and short iteration budgets")
     ap.add_argument("--out", default=os.path.join("results", "experiments"))
@@ -276,7 +319,8 @@ def main(argv=None) -> int:
         t0 = time.perf_counter()
         rows, skips = run_scenario(name, backends, seed=args.seed,
                                    smoke=args.smoke, lams=lams,
-                                   config=config)
+                                   config=config, tol=args.tol,
+                                   tol_every=args.tol_every)
         all_rows.extend(rows)
         all_skips.extend(skips)
         done = sorted({r["backend"] for r in rows})
@@ -288,6 +332,7 @@ def main(argv=None) -> int:
     report = {
         "config": {"seed": args.seed, "smoke": args.smoke,
                    "backends": backends, "scenarios": names,
+                   "tol": args.tol, "tol_every": args.tol_every,
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
                    "max_iters_env":
                        os.environ.get("REPRO_SOLVER_MAX_ITERS")},

@@ -1,21 +1,32 @@
-"""Execution backends for the unified solver + the shared PD iteration.
+"""Execution backends for the unified solver — thin drivers over the engine.
 
-Four registered backends, all running the same diagonally-preconditioned
-primal-dual iteration (paper eqs. 14-15) and returning one
+Four registered backends, all running the *same* canonical primal-dual
+iteration (:func:`repro.engine.step.pd_step`, paper eqs. 14-15) through
+backend-specific executors, and returning one
 :class:`~repro.api.problem.SolveResult`:
 
-  * ``dense``     — single-program ``lax.scan`` (jit-compatible,
-                    differentiable, the CPU/GPU/TPU default),
-  * ``pallas``    — the dense path with the TPU kernels auto-wired
-                    (``kernels.ops.tv_prox`` for the dual clip,
-                    ``kernels.ops.batched_affine`` for the ridge prox),
-  * ``sharded``   — the ``shard_map`` message-passing realization in
+  * ``dense``     — single-program ``lax.scan`` over the dense executor
+                    (jit-compatible, differentiable, the CPU/GPU/TPU
+                    default),
+  * ``pallas``    — the dense path with the TPU kernels auto-wired, or
+                    (default on TPU) the fused primal-dual kernel whose
+                    in-kernel body runs the canonical step on a VMEM
+                    window executor,
+  * ``sharded``   — the ``shard_map`` halo-exchange realization in
                     ``core.distributed`` (graph partitioned over a device
-                    mesh, halo-exchange collectives per iteration),
+                    mesh, collectives per iteration),
   * ``federated`` — the round-based federated runtime in
                     ``repro.federated`` (per-node clients exchanging
                     edge messages; partial participation, local updates,
                     compression, and a communication-cost ledger).
+
+``SolverConfig.tol`` enables residual-based early stopping on every
+backend: the horizon is driven in ``metric_every``-sized compiled chunks
+(:func:`repro.engine.loop.run_chunked`) and the loop stops at the first
+metric boundary whose eq.-11 fixed-point residual
+(:func:`repro.engine.step.pd_residual`) is <= tol.  Identical iterates
+produce identical residual streams, so dense and federated_sync stop at
+the same iteration.
 
 ``register_backend`` makes new execution strategies reachable from
 ``Solver.run`` without touching call sites.
@@ -24,7 +35,6 @@ from __future__ import annotations
 
 import os
 import weakref
-from functools import partial
 from typing import Callable
 
 import jax
@@ -34,8 +44,11 @@ from repro.api.losses import Loss, SquaredLoss
 from repro.api.problem import Problem, SolveResult, SolverConfig
 from repro.api.regularizers import Regularizer, TotalVariation
 from repro.core.graph import graph_signal_mse
-from repro.core.losses import NodeData, squared_prox_setup
+from repro.core.losses import NodeData
 from repro.core.partition import gather_padded
+from repro.engine import (DenseExecutor, certificate, pd_residual,
+                          run_chunked, scan_solve)
+from repro.engine import pd_step as engine_pd_step
 from repro.kernels import ops
 
 BACKENDS: dict[str, Callable] = {}
@@ -80,47 +93,21 @@ def get_backend(name: str) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# Shared primal-dual iteration (paper Algorithm 1 body, eqs. 14-15)
+# Engine adapters (the iteration math itself lives in repro.engine.step)
 # ---------------------------------------------------------------------------
 
 def pd_iteration(graph, prox: Callable, regularizer: Regularizer, lam,
                  tau: jnp.ndarray, sigma: jnp.ndarray, w: jnp.ndarray,
                  u: jnp.ndarray, *, clip_fn: Callable | None = None):
-    """One primal-dual step; the single source of truth for the iteration.
+    """One primal-dual step on the dense executor.
 
-    primal (eq. 17):  w+ = PU(w - T D^T u)
-    dual  (step 10):  u+ = prox_{sigma dg*}(u + Sigma D (2 w+ - w))
-
-    Used by every backend, by the legacy ``core.nlasso.pd_step`` shim, and
-    by FedTV's personalization update.
+    Compatibility adapter over the canonical
+    :func:`repro.engine.step.pd_step` — kept so the legacy
+    ``core.nlasso.pd_step`` shim and FedTV's personalization update keep
+    their historical signature.
     """
-    dtu = graph.incidence_transpose_apply(u)
-    w_new = prox(w - tau[:, None] * dtu)
-    dw = graph.incidence_apply(2.0 * w_new - w)
-    u_new = regularizer.dual_prox(u + sigma[:, None] * dw, graph, lam,
-                                  sigma, clip_fn=clip_fn)
-    return w_new, u_new
-
-
-def certificate(problem: Problem, w: jnp.ndarray, u: jnp.ndarray) -> dict:
-    """Optimality diagnostics from the coupled conditions (paper eq. 11).
-
-    * dual feasibility (regularizer-defined; <= 0 means feasible),
-    * stationarity residual at labeled nodes for the squared loss.
-    """
-    diag = {"dual_infeasibility": problem.regularizer.dual_infeasibility(
-        u, problem.graph, problem.lam)}
-    if isinstance(problem.loss, SquaredLoss):
-        data = problem.data
-        pred = jnp.einsum("vmn,vn->vm", data.x, w)
-        r = (pred - data.y) * data.sample_mask
-        grad = 2.0 * jnp.einsum("vm,vmn->vn", r,
-                                data.x) / data.counts()[:, None]
-        grad = grad * data.labeled_mask[:, None]
-        station = grad + (problem.graph.incidence_transpose_apply(u)
-                          * data.labeled_mask[:, None])
-        diag["stationarity_residual_labeled"] = jnp.max(jnp.abs(station))
-    return diag
+    return engine_pd_step(DenseExecutor(graph), prox, regularizer, lam,
+                          tau, sigma, w, u, clip_fn=clip_fn)
 
 
 def _diagnostics(problem: Problem, w, u, config: SolverConfig) -> dict:
@@ -128,6 +115,22 @@ def _diagnostics(problem: Problem, w, u, config: SolverConfig) -> dict:
     if not config.compute_diagnostics:
         return {}
     return certificate(problem, w, u)
+
+
+def _check_cadence(config: SolverConfig) -> None:
+    if config.num_iters % config.metric_every:
+        raise ValueError(
+            f"metric_every={config.metric_every} must divide "
+            f"num_iters={config.num_iters}")
+
+
+def _with_iterations(diag: dict, config: SolverConfig,
+                     iterations: int) -> dict:
+    """Record iterations-to-tolerance on tol runs (host-side ints)."""
+    if config.tol is not None and diag is not None:
+        diag = dict(diag)
+        diag["iterations"] = int(iterations)
+    return diag
 
 
 # ---------------------------------------------------------------------------
@@ -169,30 +172,17 @@ def _dense_scan_impl(graph, data, lam, w0, u0, w_true, *, loss: Loss,
     sigma = graph.dual_stepsizes()
     prox = loss.make_prox(data, tau, affine_fn=affine_fn)
     metrics = make_metrics_fn(loss, reg, graph, data, lam, w_true)
+    executor = DenseExecutor(graph)
 
-    def one_iter(state):
+    def run_block(state, iters):
+        del iters                      # dense blocks advance one step
         w, u = state
-        w_new, u_new = pd_iteration(graph, prox, reg, lam, tau, sigma, w, u,
-                                    clip_fn=clip_fn)
-        if rho != 1.0:
-            w_new = w + rho * (w_new - w)
-            u_new = reg.project_dual(u + rho * (u_new - u), graph, lam)
-        return w_new, u_new
+        return engine_pd_step(executor, prox, reg, lam, tau, sigma, w, u,
+                              rho=rho, clip_fn=clip_fn)
 
-    if metric_every == 1:
-        def step(state, _):
-            new = one_iter(state)
-            return new, metrics(new[0])
-        length = num_iters
-    else:
-        def step(state, _):
-            new = jax.lax.fori_loop(0, metric_every,
-                                    lambda _, s: one_iter(s), state)
-            return new, metrics(new[0])
-        length = num_iters // metric_every
-
-    (w, u), (obj_trace, mse_trace) = jax.lax.scan(
-        step, (w0, u0), None, length=length)
+    (w, u), (obj_trace, mse_trace) = scan_solve(
+        run_block, lambda s: metrics(s[0]), (w0, u0),
+        num_iters=num_iters, metric_every=metric_every)
     return w, u, obj_trace, mse_trace
 
 
@@ -202,27 +192,89 @@ _dense_scan = _jit(_dense_scan_impl,
                    donate_argnums=(3, 4))
 
 
+def _dense_chunk_impl(graph, data, lam, w0, u0, w_true, params, *,
+                      loss: Loss, reg: Regularizer, rho: float,
+                      metric_every: int, clip_fn, affine_fn):
+    """One tol-mode chunk: ``metric_every`` steps, metrics + residual.
+
+    ``params`` is the loss's prox parameter pytree, precomputed *once*
+    per solve by the caller (the chunk runs many times per solve and
+    must not redo the per-node setup — e.g. the squared loss's batched
+    matrix inverse — on every call); None falls back to ``make_prox``
+    for opaque losses without a ``prox_setup``.
+    """
+    tau = graph.primal_stepsizes()
+    sigma = graph.dual_stepsizes()
+    if params is None:
+        prox = loss.make_prox(data, tau, affine_fn=affine_fn)
+    else:
+        def prox(v):
+            return loss.prox_apply(params, v, affine_fn=affine_fn)
+    metrics = make_metrics_fn(loss, reg, graph, data, lam, w_true)
+    executor = DenseExecutor(graph)
+
+    def step(state, _):
+        w, u = state
+        new = engine_pd_step(executor, prox, reg, lam, tau, sigma, w, u,
+                             rho=rho, clip_fn=clip_fn)
+        return new, pd_residual(tau, sigma, w, u, new[0], new[1])
+
+    (w, u), res = jax.lax.scan(step, (w0, u0), None, length=metric_every)
+    obj, mse = metrics(w)
+    # chunk-max residual: robust stopping signal (a single small step —
+    # e.g. an idle federated round — must not read as convergence)
+    return w, u, obj[None], mse[None], jnp.max(res)
+
+
+_dense_chunk = _jit(_dense_chunk_impl,
+                    static_argnames=("loss", "reg", "rho", "metric_every",
+                                     "clip_fn", "affine_fn"),
+                    donate_argnums=(3, 4))
+
+
 def _solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
                  w_true=None, clip_fn=None, affine_fn=None) -> SolveResult:
-    if config.num_iters % config.metric_every:
-        raise ValueError(
-            f"metric_every={config.metric_every} must divide "
-            f"num_iters={config.num_iters}")
+    _check_cadence(config)
     V, n = problem.num_nodes, problem.num_features
     if w0 is None:
         w0 = jnp.zeros((V, n), jnp.float32)
     if u0 is None:
         u0 = jnp.zeros((problem.graph.num_edges, n), jnp.float32)
-    w, u, obj, mse = _dense_scan(
-        problem.graph, problem.data, problem.lam, w0, u0, w_true,
-        loss=problem.loss, reg=problem.regularizer,
-        num_iters=config.num_iters, rho=config.rho,
-        metric_every=config.metric_every, clip_fn=clip_fn,
-        affine_fn=affine_fn)
+    if config.tol is None or config.num_iters == 0:
+        # a 0-iteration budget degenerates to the (0-length) scan; the
+        # chunk loop would have no chunks and hence no traces to return
+        w, u, obj, mse = _dense_scan(
+            problem.graph, problem.data, problem.lam, w0, u0, w_true,
+            loss=problem.loss, reg=problem.regularizer,
+            num_iters=config.num_iters, rho=config.rho,
+            metric_every=config.metric_every, clip_fn=clip_fn,
+            affine_fn=affine_fn)
+        iterations = config.num_iters
+    else:
+        # per-solve prox setup happens once, not once per chunk
+        try:
+            params = problem.loss.prox_setup(
+                problem.data, problem.graph.primal_stepsizes())
+        except NotImplementedError:
+            params = None
+
+        def run_chunk(state, r0, r1):
+            w_, u_, obj_, mse_, res = _dense_chunk(
+                problem.graph, problem.data, problem.lam, state[0],
+                state[1], w_true, params, loss=problem.loss,
+                reg=problem.regularizer, rho=config.rho,
+                metric_every=r1 - r0, clip_fn=clip_fn,
+                affine_fn=affine_fn)
+            return (w_, u_), (obj_, mse_), res
+
+        (w, u), (obj, mse), iterations, _ = run_chunked(
+            run_chunk, (w0, u0), total=config.num_iters,
+            chunk_size=config.metric_every, tol=config.tol)
+    diag = _with_iterations(_diagnostics(problem, w, u, config), config,
+                            iterations)
     return SolveResult(w=w, u=u, objective=obj,
                        mse=None if w_true is None else mse,
-                       lam=problem.lam,
-                       diagnostics=_diagnostics(problem, w, u, config))
+                       lam=problem.lam, diagnostics=diag)
 
 
 def resolve_kernel_hooks(problem: Problem, config: SolverConfig,
@@ -231,14 +283,14 @@ def resolve_kernel_hooks(problem: Problem, config: SolverConfig,
 
     Caller-supplied hooks from the config always win; the pallas backend
     fills unset ones with the stock TPU kernels (the dual-clip kernel only
-    applies to the TV regularizer).
+    applies to the TV regularizer, the affine kernel to the squared loss).
     """
     clip_fn, affine_fn = config.clip_fn, config.affine_fn
     if use_pallas:
         if clip_fn is None and isinstance(problem.regularizer,
                                           TotalVariation):
             clip_fn = ops.tv_prox
-        if affine_fn is None:
+        if affine_fn is None and isinstance(problem.loss, SquaredLoss):
             affine_fn = ops.batched_affine
     return clip_fn, affine_fn
 
@@ -284,9 +336,19 @@ def _fused_enabled(config: SolverConfig) -> bool:
 
 
 def _fused_supported(problem: Problem, config: SolverConfig) -> bool:
-    """The fused kernel bakes in the affine prox + TV dual clip."""
-    return (isinstance(problem.loss, SquaredLoss)
-            and isinstance(problem.regularizer, TotalVariation)
+    """The fused step needs windowable prox parameters and an
+    edge-elementwise dual resolvent.
+
+    Any registered loss qualifies through ``prox_setup`` (an opaque
+    ``CallableLoss`` does not); losses whose ``prox_apply`` cannot lower
+    inside a Pallas TPU kernel (``kernel_safe=False``, e.g. the logistic
+    Newton loop) still fuse wherever the jnp reference path runs.
+    Custom kernel hooks disable fusion (they target the unfused engine).
+    """
+    loss, reg = problem.loss, problem.regularizer
+    has_setup = type(loss).prox_setup is not Loss.prox_setup
+    kernel_ok = (not ops._use_kernel_default()) or loss.kernel_safe
+    return (has_setup and kernel_ok and reg.fusable
             and config.clip_fn is None and config.affine_fn is None)
 
 
@@ -302,7 +364,16 @@ def _fused_window_cap() -> int:
 def _fused_window_fits(problem: Problem) -> bool:
     """Plan (or fetch) the graph's layout and check the VMEM window cap."""
     lt = _graph_layout(problem.graph)
-    return lt.window_bytes(problem.num_features) <= _fused_window_cap()
+    try:
+        param_floats = problem.loss.prox_param_floats(
+            problem.data.x.shape[1], problem.num_features)
+    except NotImplementedError:
+        # a custom loss with prox_setup but no VMEM estimate: fall back
+        # to the unfused path rather than crash the dispatch gate
+        return False
+    return lt.window_bytes(
+        problem.num_features,
+        param_floats=param_floats) <= _fused_window_cap()
 
 
 def _should_fuse(problem: Problem, config: SolverConfig) -> bool:
@@ -312,42 +383,32 @@ def _should_fuse(problem: Problem, config: SolverConfig) -> bool:
             and _fused_window_fits(problem))
 
 
-def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, data_l,
-                     layout_arrays, *, loss: Loss, reg: Regularizer,
-                     layout, num_iters: int, rho: float, metric_every: int,
-                     use_kernel: bool):
-    """Jitted fused engine: scan the fused PD step over the edge-blocked
-    layout, recording metrics (in original node order, exactly the dense
-    engine's formulas) on the cadence.
-
-    ``layout`` is static (block extents); the layout's arrays come in as
-    the traced ``layout_arrays`` tuple so they stay device buffers rather
-    than jaxpr constants.
-    """
+def _fused_setup(graph, data, lam, w_true, layout_arrays, *, loss, reg,
+                 layout):
+    """Shared per-solve prep for the fused scan/chunk engines: layout
+    padding, stepsizes, windowed prox parameters, and the metric fn."""
     lt = layout
-    (node_perm, node_inv, inc_edges, inc_signs, src_l, dst_l, weights_l,
-     edge_pos) = layout_arrays
-    bv, eb = lt.block_nodes, lt.block_edges
-    kn, klo, khi, nb = lt.kn, lt.klo, lt.khi, lt.num_blocks
-    ext = (kn - 1) * bv
+    (node_perm, node_inv, src_l, dst_l, weights_l, edge_pos) = layout_arrays
 
     # the paper-eq.-13 stepsizes come from the one source of truth
     # (EmpiricalGraph), gathered into layout order (pad nodes: tau 1)
     tau_l = gather_padded(graph.primal_stepsizes(), node_perm, fill=1.0)
     sig_l = jnp.full((lt.edges_pad,), 0.5, jnp.float32)
     sig_l = sig_l.at[edge_pos].set(graph.dual_stepsizes())
-    p_mat, b_vec = squared_prox_setup(data_l, tau_l)
 
-    def pad_nodes(a):
-        return jnp.pad(a, ((0, ext),) + ((0, 0),) * (a.ndim - 1))
+    def gather_nodes(a):
+        return gather_padded(a, node_perm)
 
-    p_s, b_s = pad_nodes(p_mat), pad_nodes(b_vec)
-    tau_s = pad_nodes(tau_l[:, None])
-    inc_e = pad_nodes(inc_edges)
-    inc_s = pad_nodes(inc_signs)
+    data_l = NodeData(x=gather_nodes(data.x), y=gather_nodes(data.y),
+                      sample_mask=gather_nodes(data.sample_mask),
+                      labeled_mask=gather_nodes(data.labeled_mask))
+    params = loss.prox_setup(data_l, tau_l)
+    pkeys = tuple(sorted(params))
+    params_s = tuple(lt.pad_node_store(params[k]) for k in pkeys)
+    tau_s = lt.pad_node_store(tau_l[:, None])
     src2, dst2 = src_l[:, None], dst_l[:, None]
     sig2 = sig_l[:, None]
-    bnd2 = (lam * weights_l)[:, None]
+    la2 = (lam * weights_l)[:, None]
     unlabeled = 1.0 - data.labeled_mask
 
     def metrics(w_l):
@@ -359,43 +420,66 @@ def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, data_l,
             mse = graph_signal_mse(w, w_true, unlabeled)
         return obj, mse
 
-    # the scan carries the *padded* stores: the halo padding rows are
-    # never written, so writing each step's owned output back with a
-    # dynamic_update_slice (in-place under XLA's loop aliasing) avoids
-    # re-materializing the padded tensors every iteration
+    return (params_s, pkeys, tau_l, tau_s, sig_l, sig2, src2, dst2, la2,
+            metrics)
+
+
+def _fused_run_iters(lt, inc_e, inc_s, params_s, pkeys, tau_s, src2, dst2,
+                     sig2, la2, *, loss, reg, rho, use_kernel):
+    """Build ``run_iters(state, iters)`` advancing the padded stores.
+
+    The scan carries the *padded* stores: the halo padding rows are
+    never written, so writing each step's owned output back with a
+    dynamic_update_slice (in-place under XLA's loop aliasing) avoids
+    re-materializing the padded tensors every iteration.
+    """
+    bv, eb = lt.block_nodes, lt.block_edges
+    kn, klo, khi = lt.kn, lt.klo, lt.khi
+
     def run_iters(state, iters):
         w_store, u_store = state
         w_new, u_new = ops.pd_step(
-            w_store, u_store, inc_e, inc_s, p_s, b_s, tau_s, src2, dst2,
-            sig2, bnd2, block_nodes=bv, block_edges=eb, kn=kn, klo=klo,
-            khi=khi, rho=rho, iters=iters, use_kernel=use_kernel)
+            w_store, u_store, inc_e, inc_s, params_s, tau_s, src2, dst2,
+            sig2, la2, loss=loss, reg=reg, pkeys=pkeys, block_nodes=bv,
+            block_edges=eb, kn=kn, klo=klo, khi=khi, rho=rho, iters=iters,
+            use_kernel=use_kernel)
         return (jax.lax.dynamic_update_slice(w_store, w_new, (0, 0)),
                 jax.lax.dynamic_update_slice(u_store, u_new,
                                              (klo * eb, 0)))
 
-    if metric_every == 1:
-        def step(state, _):
-            new = run_iters(state, 1)
-            return new, metrics(new[0])
-        length = num_iters
-    elif nb == 1:
-        # multi-iteration fusion: the whole graph fits one VMEM window,
-        # so a metric chunk is a single kernel launch with an in-VMEM loop
-        def step(state, _):
-            new = run_iters(state, metric_every)
-            return new, metrics(new[0])
-        length = num_iters // metric_every
-    else:
-        def step(state, _):
-            new = jax.lax.fori_loop(0, metric_every,
-                                    lambda _, s: run_iters(s, 1), state)
-            return new, metrics(new[0])
-        length = num_iters // metric_every
+    return run_iters
 
-    w_store0 = jnp.pad(w0_l, ((0, ext), (0, 0)))
+
+def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, layout_arrays,
+                     inc_arrays, *, loss: Loss, reg: Regularizer,
+                     layout, num_iters: int, rho: float, metric_every: int,
+                     use_kernel: bool):
+    """Jitted fused engine: scan the fused PD step over the edge-blocked
+    layout, recording metrics (in original node order, exactly the dense
+    engine's formulas) on the cadence.
+
+    ``layout`` is static (block extents); the layout's arrays come in as
+    the traced ``layout_arrays``/``inc_arrays`` tuples so they stay
+    device buffers rather than jaxpr constants.
+    """
+    lt = layout
+    inc_e, inc_s = inc_arrays
+    (params_s, pkeys, _tau_l, tau_s, _sig_l, sig2, src2, dst2, la2,
+     metrics) = _fused_setup(graph, data, lam, w_true, layout_arrays,
+                             loss=loss, reg=reg, layout=lt)
+
+    run_iters = _fused_run_iters(
+        lt, lt.pad_node_store(inc_e), lt.pad_node_store(inc_s), params_s,
+        pkeys, tau_s, src2, dst2, sig2, la2, loss=loss, reg=reg, rho=rho,
+        use_kernel=use_kernel)
+
+    eb, klo, khi = lt.block_edges, lt.klo, lt.khi
+    w_store0 = lt.pad_node_store(w0_l)
     u_store0 = jnp.pad(u0_l, ((klo * eb, khi * eb), (0, 0)))
-    (w_store, u_store), (obj_trace, mse_trace) = jax.lax.scan(
-        step, (w_store0, u_store0), None, length=length)
+    (w_store, u_store), (obj_trace, mse_trace) = scan_solve(
+        run_iters, lambda s: metrics(s[0]), (w_store0, u_store0),
+        num_iters=num_iters, metric_every=metric_every,
+        multi_iter_block=(lt.num_blocks == 1))
     w_l = jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad)
     u_l = jax.lax.slice_in_dim(u_store, klo * eb, klo * eb + lt.edges_pad)
     return w_l, u_l, obj_trace, mse_trace
@@ -407,23 +491,68 @@ _fused_scan = _jit(_fused_scan_impl,
                    donate_argnums=(2, 3))
 
 
+def _fused_chunk_impl(graph, data, w_store0, u_store0, lam, w_true,
+                      node_inv, inc_stores, params_s, tau_ls, sig_ls,
+                      edge_cols, *, loss: Loss, reg: Regularizer, layout,
+                      pkeys, rho: float, metric_every: int,
+                      use_kernel: bool):
+    """One tol-mode fused chunk: single-step scans with the residual
+    evaluated on the owned (non-halo) store regions each iteration.
+
+    All per-solve setup (layout gathers, prox parameters, padded
+    stepsizes) is precomputed once by the caller and arrives as traced
+    operands — the chunk runs many times per solve and only advances
+    the padded stores.
+    """
+    lt = layout
+    inc_e_s, inc_s_s = inc_stores
+    tau_l, tau_s = tau_ls
+    sig_l, sig2 = sig_ls
+    src2, dst2, la2 = edge_cols
+
+    run_iters = _fused_run_iters(
+        lt, inc_e_s, inc_s_s, params_s, pkeys, tau_s, src2, dst2, sig2,
+        la2, loss=loss, reg=reg, rho=rho, use_kernel=use_kernel)
+
+    eb, klo = lt.block_edges, lt.klo
+
+    def owned(state):
+        w_store, u_store = state
+        return (jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad),
+                jax.lax.slice_in_dim(u_store, klo * eb,
+                                     klo * eb + lt.edges_pad))
+
+    def step(state, _):
+        new = run_iters(state, 1)
+        w_p, u_p = owned(state)
+        w_n, u_n = owned(new)
+        return new, pd_residual(tau_l, sig_l, w_p, u_p, w_n, u_n)
+
+    (w_store, u_store), res = jax.lax.scan(
+        step, (w_store0, u_store0), None, length=metric_every)
+    w_l, _ = owned((w_store, u_store))
+    w = jnp.take(w_l, node_inv, axis=0)
+    obj, mse = make_metrics_fn(loss, reg, graph, data, lam, w_true)(w)
+    return w_store, u_store, obj[None], mse[None], jnp.max(res)
+
+
+_fused_chunk = _jit(_fused_chunk_impl,
+                    static_argnames=("loss", "reg", "layout", "pkeys",
+                                     "rho", "metric_every", "use_kernel"),
+                    donate_argnums=(2, 3))
+
+
 def _solve_fused(problem: Problem, config: SolverConfig, *, w0=None,
                  u0=None, w_true=None) -> SolveResult:
     """Solve via the fused PD kernel on the edge-blocked graph layout."""
-    if config.num_iters % config.metric_every:
-        raise ValueError(
-            f"metric_every={config.metric_every} must divide "
-            f"num_iters={config.num_iters}")
+    _check_cadence(config)
     lt = _graph_layout(problem.graph)
-    V, n = problem.num_nodes, problem.num_features
+    n = problem.num_features
     data = problem.data
 
     def gather_nodes(a):
         return gather_padded(a, lt.node_perm)
 
-    data_l = NodeData(x=gather_nodes(data.x), y=gather_nodes(data.y),
-                      sample_mask=gather_nodes(data.sample_mask),
-                      labeled_mask=gather_nodes(data.labeled_mask))
     if w0 is None:
         w0_l = jnp.zeros((lt.nodes_pad, n), jnp.float32)
     else:
@@ -433,20 +562,55 @@ def _solve_fused(problem: Problem, config: SolverConfig, *, w0=None,
         u0_l = u0_l.at[lt.edge_pos].set(
             jnp.asarray(u0, jnp.float32) * lt.edge_flip[:, None])
 
-    w_l, u_l, obj, mse = _fused_scan(
-        problem.graph, data, w0_l, u0_l, problem.lam, w_true, data_l,
-        (lt.node_perm, lt.node_inv, lt.inc_edges, lt.inc_signs, lt.src,
-         lt.dst, lt.weights, lt.edge_pos),
-        loss=problem.loss, reg=problem.regularizer, layout=lt,
-        num_iters=config.num_iters, rho=config.rho,
-        metric_every=config.metric_every,
-        use_kernel=ops._use_kernel_default())
+    layout_arrays = (lt.node_perm, lt.node_inv, lt.src, lt.dst, lt.weights,
+                     lt.edge_pos)
+    inc_arrays = (lt.inc_edges, lt.inc_signs)
+    use_kernel = ops._use_kernel_default()
+    if config.tol is None or config.num_iters == 0:
+        # 0-iteration budget: degenerate 0-length scan, no chunk loop
+        w_l, u_l, obj, mse = _fused_scan(
+            problem.graph, data, w0_l, u0_l, problem.lam, w_true,
+            layout_arrays, inc_arrays, loss=problem.loss,
+            reg=problem.regularizer, layout=lt,
+            num_iters=config.num_iters, rho=config.rho,
+            metric_every=config.metric_every, use_kernel=use_kernel)
+        iterations = config.num_iters
+    else:
+        # per-solve setup (layout gathers, prox params, padded
+        # stepsizes) runs once, eagerly; chunks advance padded stores
+        (params_s, pkeys, tau_l, tau_s, sig_l, sig2, src2, dst2, la2,
+         _metrics) = _fused_setup(
+            problem.graph, data, problem.lam, w_true, layout_arrays,
+            loss=problem.loss, reg=problem.regularizer, layout=lt)
+        eb, klo = lt.block_edges, lt.klo
+        inc_stores = (lt.pad_node_store(lt.inc_edges),
+                      lt.pad_node_store(lt.inc_signs))
+        store0 = (lt.pad_node_store(w0_l),
+                  jnp.pad(u0_l, ((klo * eb, lt.khi * eb), (0, 0))))
+
+        def run_chunk(state, r0, r1):
+            w_s, u_s, obj_, mse_, res = _fused_chunk(
+                problem.graph, data, state[0], state[1], problem.lam,
+                w_true, lt.node_inv, inc_stores, params_s,
+                (tau_l, tau_s), (sig_l, sig2), (src2, dst2, la2),
+                loss=problem.loss, reg=problem.regularizer, layout=lt,
+                pkeys=pkeys, rho=config.rho, metric_every=r1 - r0,
+                use_kernel=use_kernel)
+            return (w_s, u_s), (obj_, mse_), res
+
+        ((w_store, u_store), (obj, mse), iterations, _) = run_chunked(
+            run_chunk, store0, total=config.num_iters,
+            chunk_size=config.metric_every, tol=config.tol)
+        w_l = jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad)
+        u_l = jax.lax.slice_in_dim(u_store, klo * eb,
+                                   klo * eb + lt.edges_pad)
     w = jnp.take(w_l, lt.node_inv, axis=0)
     u = jnp.take(u_l, lt.edge_pos, axis=0) * lt.edge_flip[:, None]
+    diag = _with_iterations(_diagnostics(problem, w, u, config), config,
+                            iterations)
     return SolveResult(w=w, u=u, objective=obj,
                        mse=None if w_true is None else mse,
-                       lam=problem.lam,
-                       diagnostics=_diagnostics(problem, w, u, config))
+                       lam=problem.lam, diagnostics=diag)
 
 
 @register_backend("pallas")
@@ -456,10 +620,12 @@ def solve_pallas(problem: Problem, config: SolverConfig, *, w0=None,
 
     Default on TPU (opt-out via ``fused=False`` / ``REPRO_FUSED=0``): the
     *fused* primal-dual kernel — one VMEM-resident pass per iteration over
-    the edge-blocked graph layout (``kernels/pd_step.py``).  Otherwise the
-    dense path with the unfused TPU kernels auto-wired: the dual clip
-    through ``kernels.ops.tv_prox`` (TV regularizer only) and affine-prox
-    losses through ``kernels.ops.batched_affine``;
+    the edge-blocked graph layout (``kernels/pd_step.py``), available for
+    every registered loss (squared/lasso/logistic) and every fusable
+    regularizer (``tv``/``tv2``).  Otherwise the dense path with the
+    unfused TPU kernels auto-wired: the dual clip through
+    ``kernels.ops.tv_prox`` (TV regularizer only) and the squared loss's
+    affine prox through ``kernels.ops.batched_affine``;
     ``config.clip_fn``/``config.affine_fn`` override either (and disable
     fusion).
     """
@@ -482,10 +648,11 @@ def solve_federated(problem: Problem, config: SolverConfig, *, w0=None,
     ``config.federated`` (a ``repro.federated.FederatedConfig``) carries
     the runtime policies — participation, local updates, compression,
     checkpointing; this solver config's ``num_iters`` (as rounds),
-    ``rho``, ``metric_every``, and ``compute_diagnostics`` override the
-    loop shape so backends stay comparable under one SolverConfig.  The
-    default (``federated=None``) is synchronous full participation —
-    the dense oracle mode the conformance suite locks down.
+    ``rho``, ``metric_every``, ``tol``, and ``compute_diagnostics``
+    override the loop shape so backends stay comparable under one
+    SolverConfig.  The default (``federated=None``) is synchronous full
+    participation — the dense oracle mode the conformance suite locks
+    down.
     """
     # local import: repro.federated layers on this module (lazy both ways)
     import dataclasses as _dc
@@ -498,7 +665,7 @@ def solve_federated(problem: Problem, config: SolverConfig, *, w0=None,
         raise TypeError("SolverConfig.federated must be a "
                         f"repro.federated.FederatedConfig, got {fed!r}")
     fed = _dc.replace(fed, num_rounds=config.num_iters, rho=config.rho,
-                      metric_every=config.metric_every,
+                      metric_every=config.metric_every, tol=config.tol,
                       compute_diagnostics=config.compute_diagnostics)
     return run_federated(problem, fed, w0=w0, u0=u0,
                          w_true=w_true).to_solve_result()
@@ -545,9 +712,10 @@ def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
     if u0 is not None:
         u0 = permute_edge_array_device(sp.plan, u0)
     lam = float(problem.lam)
-    w_pad, u_pad = solve_nlasso_sharded(
+    w_pad, u_pad, iterations = solve_nlasso_sharded(
         sp, mesh, lam, config.num_iters, axis=config.mesh_axis,
-        rho=config.rho, comm=config.comm, w0=w0, u0=u0, return_u=True)
+        rho=config.rho, comm=config.comm, w0=w0, u0=u0, return_u=True,
+        tol=config.tol, tol_every=config.metric_every)
     w = unpermute_node_array_device(sp.plan, w_pad, problem.graph.num_nodes)
     u = unpermute_edge_array_device(sp.plan, u_pad, problem.graph.num_edges)
     obj = problem.objective(w)[None]
@@ -556,5 +724,7 @@ def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
     else:
         mse = graph_signal_mse(w, w_true,
                                1.0 - problem.data.labeled_mask)[None]
+    diag = _with_iterations(_diagnostics(problem, w, u, config), config,
+                            iterations)
     return SolveResult(w=w, u=u, objective=obj, mse=mse, lam=problem.lam,
-                       diagnostics=_diagnostics(problem, w, u, config))
+                       diagnostics=diag)

@@ -1,30 +1,45 @@
-"""Pluggable local losses — the object registry replacing string dispatch.
+"""Pluggable local losses — the single home of the loss numerics.
 
 Paper §4: Algorithm 1 is a *template*; a concrete federated learning
 algorithm is obtained by choosing the local loss L(X^(i), w) and hence the
-node-wise primal update operator (eq. 18).  A :class:`Loss` bundles the two
-halves of that choice:
+node-wise primal update operator (eq. 18)
+
+    PU_i(v) = argmin_z  L(X^(i), z) + (1/(2 tau_i)) ||v - z||^2 .
+
+A :class:`Loss` bundles everything the engine needs from that choice:
 
   * ``node_values(data, w)`` — the per-node loss values (eq. 2 summands),
-  * ``make_prox(data, tau)`` — the batched primal-update operator PU_i.
+  * ``prox_setup(data, tau)`` — precompute the per-node prox parameters
+    as a flat dict of ``(V, ...)`` arrays (every leaf at least 2-D, so
+    the fused kernel can window-slice them uniformly),
+  * ``prox_apply(params, v)`` — evaluate PU batched over nodes from the
+    precomputed parameters (this is what runs *inside* the fused Pallas
+    kernel's VMEM window),
+  * ``make_prox(data, tau)`` — the closed-over convenience composition
+    of the two.
+
+Implemented losses (paper §4.1-4.3):
+  * squared error (eq. 20)   -> closed-form batched ridge solve (eq. 21)
+  * Lasso (eq. 22)           -> ISTA inner loop (high-dim m_i << n regime)
+  * logistic (eq. 23)        -> damped-Newton inner loop (no closed form)
 
 Losses are small frozen dataclasses, so they are hashable and ride through
-``jax.jit`` as static arguments; numerical kernels stay in
-``repro.core.losses`` and are re-used here.  Registering a new loss makes it
-reachable from every backend via ``Problem.create(..., loss="<name>")`` —
-the model-agnostic plug-in point of *Towards Model-Agnostic Federated
-Learning over Networks*.
+``jax.jit`` as static arguments.  ``kernel_safe`` marks losses whose
+``prox_apply`` lowers inside a Pallas TPU kernel (the logistic Newton
+loop needs ``jnp.linalg.solve``, which does not).  Registering a new loss
+makes it reachable from every backend via ``Problem.create(...,
+loss="<name>")`` — the model-agnostic plug-in point of *Towards
+Model-Agnostic Federated Learning over Networks*.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, ClassVar
 
+import jax
 import jax.numpy as jnp
 
-from repro.core import losses as _core
-
-NodeData = _core.NodeData
+from repro.core.losses import NodeData
 
 LOSSES: dict[str, type] = {}
 
@@ -59,11 +74,18 @@ def get_loss(spec, **kwargs) -> "Loss":
     raise TypeError(f"loss must be a Loss or a registry name, got {spec!r}")
 
 
+def _soft_threshold(z: jnp.ndarray, t) -> jnp.ndarray:
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class Loss:
     """Local loss interface (paper §4 template slot)."""
 
     name: ClassVar[str] = "base"
+    # prox_apply lowers inside a Pallas TPU kernel (no unsupported
+    # primitives such as jnp.linalg.solve)
+    kernel_safe: ClassVar[bool] = False
 
     def node_values(self, data: NodeData, w: jnp.ndarray) -> jnp.ndarray:
         """Per-node loss L(X^(i), w^(i)): (V,)."""
@@ -73,15 +95,37 @@ class Loss:
         """E_hat(w) = sum_{i in M} L(X^(i), w^(i))  (paper eq. 2)."""
         return jnp.sum(self.node_values(data, w) * data.labeled_mask)
 
-    def make_prox(self, data: NodeData, tau: jnp.ndarray, *,
-                  affine_fn: Callable | None = None) -> Callable:
-        """Batched primal-update operator PU (eq. 18): (V, n) -> (V, n).
+    def prox_setup(self, data: NodeData, tau: jnp.ndarray) -> dict:
+        """Precompute the batched primal-update parameters.
 
-        ``affine_fn`` routes affine-map losses through the Pallas
-        ``batched_affine`` kernel; losses with iterative inner solvers may
-        ignore it.
+        Returns a flat ``{name: (V, ...)}`` dict whose leaves all have
+        ``ndim >= 2`` and a leading node axis, so every executor (dense,
+        sharded rows, fused VMEM windows) can slice them uniformly.
         """
         raise NotImplementedError
+
+    def prox_apply(self, params: dict, v: jnp.ndarray, *,
+                   affine_fn: Callable | None = None) -> jnp.ndarray:
+        """Evaluate PU (eq. 18) batched over nodes: (V, n) -> (V, n).
+
+        ``affine_fn`` routes affine-map losses through the Pallas
+        ``batched_affine`` kernel; iterative losses ignore it.
+        """
+        raise NotImplementedError
+
+    def prox_param_floats(self, num_samples: int, num_features: int) -> int:
+        """Per-node fp32 count of ``prox_setup`` leaves (VMEM budgeting)."""
+        raise NotImplementedError
+
+    def make_prox(self, data: NodeData, tau: jnp.ndarray, *,
+                  affine_fn: Callable | None = None) -> Callable:
+        """Batched primal-update operator PU (eq. 18): (V, n) -> (V, n)."""
+        params = self.prox_setup(data, tau)
+
+        def prox(v: jnp.ndarray) -> jnp.ndarray:
+            return self.prox_apply(params, v, affine_fn=affine_fn)
+
+        return prox
 
 
 @register_loss("squared")
@@ -89,11 +133,44 @@ class Loss:
 class SquaredLoss(Loss):
     """Squared error (paper §4.1, eq. 20) — closed-form ridge prox (eq. 21)."""
 
-    def node_values(self, data, w):
-        return _core.squared_loss(data, w)
+    kernel_safe: ClassVar[bool] = True
 
-    def make_prox(self, data, tau, *, affine_fn=None):
-        return _core.make_squared_prox(data, tau, affine_fn=affine_fn)
+    def node_values(self, data, w):
+        pred = jnp.einsum("vmn,vn->vm", data.x, w)
+        res = (data.y - pred) ** 2 * data.sample_mask
+        return jnp.sum(res, axis=1) / data.counts()
+
+    def prox_setup(self, data, tau):
+        """Precompute eq. 21 as an affine map.
+
+        PU_i(v) = (I + (2 tau_i / m_i) Q_i)^{-1} (v + (2 tau_i / m_i)
+        X_i^T y_i) with Q_i = X_i^T X_i; returns ``{"p": (V, n, n),
+        "b": (V, n)}`` such that PU_i(v) = P_i @ (v + b_i).  Unlabeled
+        nodes get P = I, b = 0.
+        """
+        xm = data.x * data.sample_mask[..., None]
+        q = jnp.einsum("vmn,vmk->vnk", xm, data.x)            # (V, n, n)
+        xty = jnp.einsum("vmn,vm->vn", xm, data.y)            # (V, n)
+        c = (2.0 * tau / data.counts())[:, None]              # (V, 1)
+        n = data.num_features
+        eye = jnp.eye(n, dtype=data.x.dtype)
+        a = eye[None] + c[..., None] * q
+        p = jnp.linalg.inv(a)
+        b = c * xty
+        lab = data.labeled_mask
+        p = jnp.where(lab[:, None, None] > 0, p, eye[None])
+        b = jnp.where(lab[:, None] > 0, b, 0.0)
+        return {"p": p, "b": b}
+
+    def prox_apply(self, params, v, *, affine_fn=None):
+        vb = v + params["b"]
+        if affine_fn is not None:
+            return affine_fn(params["p"], vb)
+        return jnp.einsum("vnk,vk->vn", params["p"], vb)
+
+    def prox_param_floats(self, num_samples, num_features):
+        n = num_features
+        return n * n + n
 
 
 @register_loss("lasso")
@@ -102,32 +179,101 @@ class LassoLoss(Loss):
     """Lasso (paper §4.2, eq. 22) — ISTA inner loop for the m_i << n regime.
 
     ``alpha`` is the local l1 weight (lambda inside eq. 22; renamed to
-    avoid clashing with the TV strength).
+    avoid clashing with the TV strength).  The smooth part has per-node
+    Lipschitz constant L_i = 2 lambda_max(Q_i)/m_i + 1/tau_i; ISTA takes
+    steps 1/L_i and soft-thresholds with alpha/L_i.
     """
 
     alpha: float = 0.0
     num_inner: int = 50
 
-    def node_values(self, data, w):
-        return _core.lasso_loss(data, w, self.alpha)
+    kernel_safe: ClassVar[bool] = True
 
-    def make_prox(self, data, tau, *, affine_fn=None):
-        return _core.make_lasso_prox(data, tau, self.alpha,
-                                     num_inner=self.num_inner)
+    def node_values(self, data, w):
+        return (SquaredLoss().node_values(data, w)
+                + self.alpha * jnp.sum(jnp.abs(w), axis=1))
+
+    def prox_setup(self, data, tau):
+        xm = data.x * data.sample_mask[..., None]
+        q = jnp.einsum("vmn,vmk->vnk", xm, data.x)
+        xty = jnp.einsum("vmn,vm->vn", xm, data.y)
+        m = data.counts()
+        # lambda_max via eigvalsh (setup-time only; n is small)
+        lam_max = jnp.linalg.eigvalsh(q)[:, -1]
+        lips = 2.0 * lam_max / m + 1.0 / tau                  # (V,)
+        return {"q": q, "xty": xty, "m": m[:, None],
+                "step": (1.0 / lips)[:, None], "tau": tau[:, None],
+                "labeled": data.labeled_mask[:, None]}
+
+    def prox_apply(self, params, v, *, affine_fn=None):
+        del affine_fn                       # iterative inner solver
+        q, xty = params["q"], params["xty"]
+        m, step, tau = params["m"], params["step"], params["tau"]
+
+        def body(_, z):
+            grad = 2.0 * (jnp.einsum("vnk,vk->vn", q, z) - xty) / m
+            grad = grad + (z - v) / tau
+            return _soft_threshold(z - step * grad, self.alpha * step)
+
+        z = jax.lax.fori_loop(0, self.num_inner, body, v)
+        return jnp.where(params["labeled"] > 0, z, v)
+
+    def prox_param_floats(self, num_samples, num_features):
+        n = num_features
+        return n * n + n + 4
 
 
 @register_loss("logistic")
 @dataclasses.dataclass(frozen=True)
 class LogisticLoss(Loss):
-    """Logistic (paper §4.3, eq. 23) — damped-Newton inner loop."""
+    """Logistic (paper §4.3, eq. 23) — damped-Newton inner loop.
+
+    The objective  L_i(z) + (1/(2 tau_i))||z - v||^2  is smooth and
+    strongly convex; n is small, so a handful of exact Newton steps
+    converge to machine precision (the paper's remark that the updates
+    are robust to inexact resolvent evaluation).  ``kernel_safe`` is
+    False: the Newton solve needs ``jnp.linalg.solve``, which has no
+    Pallas lowering — the fused backend runs this loss through the
+    bit-comparable jnp reference instead of the TPU kernel.
+    """
 
     num_inner: int = 8
 
     def node_values(self, data, w):
-        return _core.logistic_loss(data, w)
+        logits = jnp.einsum("vmn,vn->vm", data.x, w)
+        # numerically-stable BCE with logits
+        per = jnp.maximum(logits, 0.0) - logits * data.y + jnp.log1p(
+            jnp.exp(-jnp.abs(logits)))
+        return jnp.sum(per * data.sample_mask, axis=1) / data.counts()
 
-    def make_prox(self, data, tau, *, affine_fn=None):
-        return _core.make_logistic_prox(data, tau, num_inner=self.num_inner)
+    def prox_setup(self, data, tau):
+        return {"x": data.x, "y": data.y, "mask": data.sample_mask,
+                "m": data.counts()[:, None], "tau": tau[:, None],
+                "labeled": data.labeled_mask[:, None]}
+
+    def prox_apply(self, params, v, *, affine_fn=None):
+        del affine_fn                       # iterative inner solver
+        x, y, mask = params["x"], params["y"], params["mask"]
+        m, tau = params["m"], params["tau"]
+
+        def body(_, z):
+            logits = jnp.einsum("vmn,vn->vm", x, z)
+            s = jax.nn.sigmoid(logits)
+            r = (s - y) * mask                                   # (V, m)
+            grad = jnp.einsum("vm,vmn->vn", r, x) / m
+            grad = grad + (z - v) / tau
+            d = (s * (1 - s)) * mask                             # (V, m)
+            hess = jnp.einsum("vm,vmn,vmk->vnk", d, x, x) / m[..., None]
+            n = z.shape[1]
+            hess = hess + jnp.eye(n, dtype=z.dtype)[None] / tau[..., None]
+            delta = jnp.linalg.solve(hess, grad[..., None])[..., 0]
+            return z - delta
+
+        z = jax.lax.fori_loop(0, self.num_inner, body, v)
+        return jnp.where(params["labeled"] > 0, z, v)
+
+    def prox_param_floats(self, num_samples, num_features):
+        return num_samples * (num_features + 2) + 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,7 +282,9 @@ class CallableLoss(Loss):
 
     Wraps an externally-built ``prox(v)`` while delegating metric values to
     ``base``.  Not registered — exists so ``core.nlasso.solve_nlasso`` can
-    keep accepting arbitrary prox callables through the new solver.
+    keep accepting arbitrary prox callables through the new solver.  No
+    ``prox_setup``: the fused backend cannot window an opaque callable,
+    so it falls back to the unfused path.
     """
 
     prox_fn: Callable = None

@@ -92,6 +92,16 @@ class SolverConfig:
                     roughly doubles per-iteration progress (EXPERIMENTS.md).
       metric_every: objective/MSE cadence; must divide the iteration count.
                     Traces then have length num_iters // metric_every.
+      tol:          residual-based early stopping (None disables).  The
+                    solve advances in metric_every-sized compiled chunks
+                    and stops at the first chunk whose max per-iteration
+                    eq.-11 fixed-point residual (engine.pd_residual: the
+                    tau/sigma-scaled max-norm change of one iteration)
+                    is <= tol; num_iters becomes the budget ceiling.
+                    Implemented once in repro.engine and honoured by
+                    every backend; the stopping iteration lands in
+                    ``diagnostics["iterations"]``.  Traces then have
+                    length iterations // metric_every.
 
     Continuation (beyond-paper warm-start schedule, see
     ``core.nlasso.nlasso_continuation`` for the rationale):
@@ -132,6 +142,7 @@ class SolverConfig:
     num_iters: int = 500
     rho: float = 1.0
     metric_every: int = 1
+    tol: float | None = None
     # continuation schedule
     continuation: bool = False
     warm_lam: float | None = None

@@ -22,6 +22,10 @@ from typing import Callable, ClassVar
 import jax.numpy as jnp
 
 from repro.core.graph import EmpiricalGraph
+# the engine's column normalizer: resolvents are called both with a real
+# graph (1-D ``weights``) and with an engine executor whose window
+# carries pre-columned 2-D parameters (everything >= 2-D for Mosaic)
+from repro.engine import ensure_column as _col
 
 REGULARIZERS: dict[str, type] = {}
 
@@ -54,9 +58,18 @@ def get_regularizer(spec, **kwargs) -> "Regularizer":
 
 @dataclasses.dataclass(frozen=True)
 class Regularizer:
-    """Edge-coupling penalty lam * g(D w) (GTVMin template slot)."""
+    """Edge-coupling penalty lam * g(D w) (GTVMin template slot).
+
+    ``dual_prox`` / ``project_dual`` receive either an
+    :class:`~repro.core.graph.EmpiricalGraph` or an engine
+    :class:`~repro.engine.step.GraphExecutor` as ``graph`` — both expose
+    ``weights``, which is all the resolvents read.  ``fusable`` marks
+    regularizers whose resolvent runs inside the fused kernel's VMEM
+    window (elementwise in the owned edge rows).
+    """
 
     name: ClassVar[str] = "base"
+    fusable: ClassVar[bool] = False
 
     def value(self, graph: EmpiricalGraph, w: jnp.ndarray,
               lam) -> jnp.ndarray:
@@ -89,11 +102,14 @@ class TotalVariation(Regularizer):
     Pallas ``tv_prox`` kernel.
     """
 
+    fusable: ClassVar[bool] = True
+
     @staticmethod
     def _clip(u, bound, clip_fn):
         if clip_fn is not None:
             return clip_fn(u, bound)
-        return jnp.clip(u, -bound[:, None], bound[:, None])
+        b = _col(bound)
+        return jnp.clip(u, -b, b)
 
     def value(self, graph, w, lam):
         return lam * graph.total_variation(w)
@@ -121,10 +137,12 @@ class SquaredTV(Regularizer):
     projection is the identity.
     """
 
+    fusable: ClassVar[bool] = True
+
     def value(self, graph, w, lam):
         d = graph.incidence_apply(w)
         return 0.5 * lam * jnp.sum(graph.weights * jnp.sum(d * d, axis=1))
 
     def dual_prox(self, u, graph, lam, sigma, *, clip_fn=None):
-        la = lam * graph.weights
-        return u * (la / (la + sigma))[:, None]
+        la = _col(lam * graph.weights)
+        return u * (la / (la + _col(sigma)))

@@ -17,7 +17,6 @@ short-iteration knob CI smoke jobs use.
 from __future__ import annotations
 
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp
@@ -26,34 +25,8 @@ from repro.api.backends import (_should_fuse, _solve_dense, _solve_fused,
                                 certificate, get_backend,
                                 resolve_kernel_hooks)
 from repro.api.problem import Problem, SolveResult, SolverConfig
-
-
-def _iter_cap() -> int:
-    return int(os.environ.get("REPRO_SOLVER_MAX_ITERS", 1 << 30))
-
-
-def _capped(num_iters: int, metric_every: int = 1) -> int:
-    """Apply the env cap, keeping the metric cadence divisibility.
-
-    Leaves ``num_iters`` untouched when no cap bites (so mismatched
-    cadences still error loudly in the backend).
-    """
-    cap = _iter_cap()
-    if num_iters <= cap:
-        return num_iters
-    capped = max(cap, metric_every)
-    return capped - capped % metric_every if metric_every > 1 else capped
-
-
-def _default_warm_lam(lam: float) -> float:
-    """Continuation warm strength: 10x target, clipped to [1e-2, 1].
-
-    The dual-clip bound lambda*A_e limits how far an unlabeled node moves
-    per iteration, so a cold start at small lambda needs ~||w*||/lambda
-    iterations just to travel; warming at a larger lambda propagates fast
-    (see core.nlasso.nlasso_continuation and EXPERIMENTS.md).
-    """
-    return float(min(max(10.0 * lam, 1e-2), 1.0))
+from repro.engine import capped as _capped
+from repro.engine import default_warm_lam as _default_warm_lam
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +81,12 @@ def solve_path(problem: Problem, lams, config: SolverConfig | None = None,
         raise NotImplementedError(
             "solve_path vmaps the dense engine; backend must be "
             f"'dense' or 'pallas', got {cfg.backend!r}")
+    if cfg.tol is not None:
+        raise NotImplementedError(
+            "solve_path vmaps a fixed-length scan over the lambda path; "
+            "per-lambda early stopping (tol) needs per-lambda solves — "
+            "run Solver(config).run(problem.with_lam(lam)) per point "
+            "(experiments/run.py --tol does exactly that)")
     lams = jnp.asarray(lams, jnp.float32)
     if lams.ndim != 1 or lams.shape[0] == 0:
         raise ValueError("lams must be a non-empty 1-D array")

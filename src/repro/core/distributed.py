@@ -5,7 +5,10 @@ graph is partitioned over the ``data`` axis of a device mesh; each shard
 owns a contiguous slice of nodes (primal state + local datasets + prox
 parameters) and the edges whose ``src`` endpoint it owns (dual state).
 
-Per iteration the communication pattern is (DESIGN.md §3.3):
+The iteration body is the canonical engine step
+(:func:`repro.engine.step.pd_step`) evaluated through a
+:class:`repro.engine.executors.HaloExecutor`, whose per-iteration
+communication pattern is (DESIGN.md §3.3):
 
   * ``dense`` mode (baseline): one ``all_gather`` of the primal block
     (V_pad x n) to evaluate D w, and one ``psum`` of the dense D^T u
@@ -34,7 +37,9 @@ from repro.core import losses as L
 from repro.core.graph import EmpiricalGraph
 from repro.core.partition import (PartitionPlan, block_partition,
                                   cluster_partition, plan_partition,
-                                  permute_node_array, unpermute_node_array)
+                                  permute_node_array)
+from repro.engine import HaloExecutor, pd_residual, run_chunked
+from repro.engine import pd_step as engine_pd_step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,7 +49,6 @@ class ShardedProblem:
     # node-sharded (S*vp, ...) arrays
     tau: jnp.ndarray
     prox_params: dict
-    labeled: jnp.ndarray
     # edge-sharded (S*ep, ...) arrays
     src: jnp.ndarray
     dst: jnp.ndarray
@@ -57,6 +61,8 @@ def shard_problem(graph: EmpiricalGraph, data: L.NodeData,
                   num_shards: int, *, partitioner: str = "cluster",
                   loss: str = "squared", seed: int = 0) -> ShardedProblem:
     """Partition the graph + data and precompute shard-layout prox params."""
+    from repro.api.losses import SquaredLoss
+
     if partitioner == "cluster":
         assign = cluster_partition(graph, num_shards, seed=seed)
     elif partitioner == "block":
@@ -72,15 +78,14 @@ def shard_problem(graph: EmpiricalGraph, data: L.NodeData,
         raise NotImplementedError(
             "sharded solver currently supports the squared loss (paper §4.1);"
             " lasso/logistic run via the single-program solver")
-    p_full, b_full = L.squared_prox_setup(
+    params_full = SquaredLoss().prox_setup(
         data, jnp.asarray(tau_full.astype(np.float32)))
     n = data.num_features
-    p_pad = permute_node_array(plan, np.asarray(p_full), fill=0.0)
+    p_pad = permute_node_array(plan, np.asarray(params_full["p"]), fill=0.0)
     # padded nodes need identity P so they stay put
     invalid = plan.node_perm < 0
     p_pad[invalid] = np.eye(n, dtype=p_pad.dtype)
-    b_pad = permute_node_array(plan, np.asarray(b_full), fill=0.0)
-    labeled = permute_node_array(plan, np.asarray(data.labeled_mask), fill=0.0)
+    b_pad = permute_node_array(plan, np.asarray(params_full["b"]), fill=0.0)
 
     # boundary rows: nodes touching a cut edge (new numbering)
     src_old = np.asarray(graph.src)
@@ -94,7 +99,6 @@ def shard_problem(graph: EmpiricalGraph, data: L.NodeData,
         plan=plan,
         tau=jnp.asarray(tau.astype(np.float32)),
         prox_params={"p": jnp.asarray(p_pad), "b": jnp.asarray(b_pad)},
-        labeled=jnp.asarray(labeled),
         src=jnp.asarray(plan.src_new, jnp.int32),
         dst=jnp.asarray(plan.dst_new, jnp.int32),
         bound_unit=jnp.asarray(plan.weights),
@@ -102,17 +106,85 @@ def shard_problem(graph: EmpiricalGraph, data: L.NodeData,
     )
 
 
+def _make_sharded_run(problem: ShardedProblem, mesh: Mesh, lam: float,
+                      *, axis: str, rho: float, comm: str,
+                      num_iters: int, with_residual: bool):
+    """Build the shard_map program scanning ``num_iters`` engine steps.
+
+    With ``with_residual`` the program additionally returns each shard's
+    local max per-iteration fixed-point residual over the chunk (a (1,)
+    row per shard; the host maxes over shards), which is what the tol
+    chunk loop compares against the tolerance.
+    """
+    from repro.api.losses import SquaredLoss
+    from repro.api.regularizers import TotalVariation
+
+    plan = problem.plan
+    S, vp = plan.num_shards, plan.nodes_per_shard
+    V_pad = S * vp
+    sigma = 0.5
+    loss, reg = SquaredLoss(), TotalVariation()
+
+    node_spec = P(axis)
+    edge_spec = P(axis)
+    out_specs = (node_spec, edge_spec)
+    if with_residual:
+        out_specs = out_specs + (edge_spec,)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(node_spec, edge_spec, node_spec,
+                       P(axis, None, None), node_spec,
+                       edge_spec, edge_spec, edge_spec, node_spec),
+             out_specs=out_specs)
+    def run(w, u, tau, pmat, b, src, dst, wts, send):
+        me = jax.lax.axis_index(axis)
+        send_full = jax.lax.all_gather(send, axis, tiled=True) \
+            if comm == "boundary" else None
+        executor = HaloExecutor(
+            axis=axis, comm=comm, vp=vp, v_pad=V_pad, base=me * vp,
+            src=src, dst=dst, weights=wts, send=send,
+            send_full=send_full)
+        params = {"p": pmat, "b": b}
+
+        def prox(v):
+            return loss.prox_apply(params, v)
+
+        def body(state, _):
+            w_loc, u_loc = state
+            new = engine_pd_step(executor, prox, reg, lam, tau, sigma,
+                                 w_loc, u_loc, rho=rho)
+            if with_residual:
+                return new, pd_residual(tau, sigma, w_loc, u_loc,
+                                        new[0], new[1])
+            return new, None
+
+        (w_fin, u_fin), res = jax.lax.scan(body, (w, u), None,
+                                           length=num_iters)
+        if with_residual:
+            # chunk-max residual, like every other backend's tol chunk
+            return w_fin, u_fin, jnp.max(res)[None]
+        return w_fin, u_fin
+
+    return run
+
+
 def solve_nlasso_sharded(problem: ShardedProblem, mesh: Mesh, lam: float,
                          num_iters: int, *, axis: str = "data",
                          rho: float = 1.0, comm: str = "dense",
                          w0: jnp.ndarray | None = None,
                          u0: jnp.ndarray | None = None,
-                         return_u: bool = False):
+                         return_u: bool = False,
+                         tol: float | None = None,
+                         tol_every: int | None = None):
     """Run Algorithm 1 under shard_map; returns W in plan layout (S*vp, n).
 
     ``comm``: "dense" | "boundary" (see module docstring).  ``w0``/``u0``
     warm-start the iteration (plan layout); ``return_u=True`` additionally
-    returns the final dual state U in plan layout (S*ep, n).
+    returns the final dual state U in plan layout (S*ep, n) and the
+    iteration count actually run.  ``tol`` enables residual-based early
+    stopping: the horizon advances in ``tol_every``-iteration chunks and
+    stops at the first chunk whose (shard-maxed) fixed-point residual is
+    <= tol.
     """
     plan = problem.plan
     S, vp, ep = plan.num_shards, plan.nodes_per_shard, plan.edges_per_shard
@@ -122,78 +194,37 @@ def solve_nlasso_sharded(problem: ShardedProblem, mesh: Mesh, lam: float,
         w0 = jnp.zeros((V_pad, n), jnp.float32)
     if u0 is None:
         u0 = jnp.zeros((S * ep, n), jnp.float32)
-    bound = lam * problem.bound_unit[:, None]
-    sigma = 0.5
+    operands = (problem.tau, problem.prox_params["p"],
+                problem.prox_params["b"], problem.src, problem.dst,
+                problem.bound_unit, problem.send_rows)
 
-    node_spec = P(axis)
-    edge_spec = P(axis)
+    if tol is None or num_iters == 0:
+        run = _make_sharded_run(problem, mesh, lam, axis=axis, rho=rho,
+                                comm=comm, num_iters=num_iters,
+                                with_residual=False)
+        w_out, u_out = run(w0, u0, *operands)
+        iterations = num_iters
+    else:
+        # the shared chunk driver (engine.loop.run_chunked) owns the
+        # stopping rule; this backend only supplies the chunk program
+        chunk = int(tol_every) if tol_every else min(50, num_iters)
+        runs = {}
 
-    @partial(shard_map, mesh=mesh,
-             in_specs=(node_spec, edge_spec, node_spec,
-                       P(axis, None, None), node_spec, node_spec,
-                       edge_spec, edge_spec, edge_spec, node_spec),
-             out_specs=(node_spec, edge_spec))
-    def run(w, u, tau, pmat, b, labeled, src, dst, bnd, send):
-        me = jax.lax.axis_index(axis)
-        base = me * vp
+        def run_chunk(state, r0, r1):
+            length = r1 - r0
+            if length not in runs:
+                runs[length] = _make_sharded_run(
+                    problem, mesh, lam, axis=axis, rho=rho, comm=comm,
+                    num_iters=length, with_residual=True)
+            w_, u_, res = runs[length](*state, *operands)
+            # (S,) per-shard chunk-max residuals -> one host scalar
+            return (w_, u_), (), np.max(np.asarray(res))
 
-        def gather_w(w_loc):
-            """Return a (V_pad, n) view of the global primal signal."""
-            if comm == "dense":
-                return jax.lax.all_gather(w_loc, axis, tiled=True)
-            # boundary mode: exchange only rows marked in `send`; local rows
-            # are taken from the local block, remote non-boundary rows are
-            # never read (their edges are shard-internal elsewhere).
-            contrib = jnp.zeros((V_pad, n), w_loc.dtype)
-            contrib = jax.lax.dynamic_update_slice(
-                contrib, w_loc * send[:, None], (base, 0))
-            wg = jax.lax.psum(contrib, axis)
-            # overwrite own block with exact local values
-            wg = jax.lax.dynamic_update_slice(wg, w_loc, (base, 0))
-            return wg
+        (w_out, u_out), _traces, iterations, _ = run_chunked(
+            run_chunk, (w0, u0), total=num_iters, chunk_size=chunk,
+            tol=tol)
 
-        def scatter_dtu(u_loc, src, dst):
-            """All-shards-summed D^T u, returning the local (vp, n) block."""
-            acc = jnp.zeros((V_pad, n), u_loc.dtype)
-            acc = acc.at[src].add(u_loc)
-            acc = acc.at[dst].add(-u_loc)
-            if comm == "dense":
-                tot = jax.lax.psum(acc, axis)
-            else:
-                # shard-internal part stays local; only boundary rows summed
-                local_rows = jax.lax.dynamic_slice(acc, (base, 0), (vp, n))
-                bacc = acc * send_full[:, None]
-                tot_b = jax.lax.psum(bacc, axis)
-                tot = jax.lax.dynamic_update_slice(
-                    jnp.zeros_like(acc), local_rows, (base, 0))
-                # rows that are boundary take the global sum instead
-                tot = jnp.where(send_full[:, None] > 0, tot_b, tot)
-            return jax.lax.dynamic_slice(tot, (base, 0), (vp, n))
-
-        send_full = jax.lax.all_gather(send, axis, tiled=True) \
-            if comm == "boundary" else None
-
-        def body(state, _):
-            w_loc, u_loc = state
-            dtu = scatter_dtu(u_loc, src, dst)
-            v = w_loc - tau[:, None] * dtu
-            w_new = L.squared_prox_apply({"p": pmat, "b": b}, v)
-            wg = gather_w(2.0 * w_new - w_loc)
-            diff = wg[src] - wg[dst]
-            u_new = jnp.clip(u_loc + sigma * diff, -bnd, bnd)
-            if rho != 1.0:
-                w_new = w_loc + rho * (w_new - w_loc)
-                u_new = jnp.clip(u_loc + rho * (u_new - u_loc), -bnd, bnd)
-            return (w_new, u_new), None
-
-        (w_fin, u_fin), _ = jax.lax.scan(body, (w, u), None,
-                                         length=num_iters)
-        return w_fin, u_fin
-
-    w_out, u_out = run(w0, u0, problem.tau, problem.prox_params["p"],
-                       problem.prox_params["b"], problem.labeled,
-                       problem.src, problem.dst, bound, problem.send_rows)
-    return (w_out, u_out) if return_u else w_out
+    return (w_out, u_out, iterations) if return_u else w_out
 
 
 def solve_and_unpermute(graph: EmpiricalGraph, data: L.NodeData, mesh: Mesh,

@@ -29,13 +29,12 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.api.backends import pd_iteration
 from repro.api.regularizers import TotalVariation
-from repro.core.graph import EmpiricalGraph, build_graph, chain_graph, sbm_graph
+from repro.core.graph import EmpiricalGraph, chain_graph, sbm_graph
 
 _TV = TotalVariation()
 

@@ -93,14 +93,29 @@ class EdgeBlockLayout:
     def edges_pad(self) -> int:
         return self.num_blocks * self.block_edges
 
-    def window_bytes(self, num_features: int) -> int:
-        """fp32 VMEM footprint of one grid step's resident window."""
+    def pad_node_store(self, a: jnp.ndarray) -> jnp.ndarray:
+        """Append the (kn-1)*BV halo-suffix padding rows to a
+        (nodes_pad, ...) node-aligned array — the one store-shape
+        convention shared by the fused scan/chunk/setup paths."""
+        ext = (self.kn - 1) * self.block_nodes
+        return jnp.pad(a, ((0, ext),) + ((0, 0),) * (a.ndim - 1))
+
+    def window_bytes(self, num_features: int,
+                     param_floats: int | None = None) -> int:
+        """fp32 VMEM footprint of one grid step's resident window.
+
+        ``param_floats`` is the per-node float count of the loss's prox
+        parameters (``Loss.prox_param_floats``); defaults to the squared
+        loss's affine map (P, b).
+        """
         n = num_features
+        if param_floats is None:
+            param_floats = n * n + n                          # P, b
         nw = self.kn * self.block_nodes
         ew = (self.klo + 1 + self.khi) * self.block_edges
-        per_node = n + n * n + n + 1 + 2 * self.max_degree    # w, P, b, tau, inc
+        per_node = n + param_floats + 1 + 2 * self.max_degree  # w, prox, tau, inc
         per_edge = n                                           # u window
-        owned = self.block_edges * (n + 4)                     # u+, src/dst/sig/bnd
+        owned = self.block_edges * (n + 4)                     # u+, src/dst/sig/la
         return 4 * (nw * per_node + ew * per_edge + owned)
 
 
@@ -178,13 +193,6 @@ class EmpiricalGraph:
         """
         gathered = u[self.inc_edges]                     # (V, max_deg, n)
         return jnp.einsum("vd,vdn->vn", self.inc_signs, gathered)
-
-    def incidence_transpose_apply_scatter(self, u: jnp.ndarray) -> jnp.ndarray:
-        """Reference D^T via segment-sum scatter (oracle for tests)."""
-        out = jnp.zeros((self.num_nodes, u.shape[1]), u.dtype)
-        out = out.at[self.src].add(u)
-        out = out.at[self.dst].add(-u)
-        return out
 
     # -- TV seminorm (paper eq. 3) ------------------------------------------
     def total_variation(self, w: jnp.ndarray) -> jnp.ndarray:

@@ -1,15 +1,19 @@
-"""Local loss functions and their proximal (primal-update) operators.
+"""Batched node-local datasets + legacy loss adapters.
 
-Paper §4: Algorithm 1 is a template; a concrete federated learning algorithm
-is obtained by choosing the local loss L(X^(i), w) and hence the node-wise
-primal update operator (eq. 18)
+The loss numerics (paper §4.1-4.3: per-node loss values and the
+primal-update operators of eq. 18) live in :mod:`repro.api.losses` as
+methods of the registered :class:`~repro.api.losses.Loss` classes —
+``prox_setup`` / ``prox_apply`` — so every backend (dense scan, sharded
+halo exchange, fused Pallas windows, federated rounds) consumes one
+implementation.  This module keeps:
 
-    PU_i(v) = argmin_z  L(X^(i), z) + (1/(2 tau_i)) ||v - z||^2 .
-
-Implemented losses (paper §4.1-4.3):
-  * squared error (eq. 20)   -> closed-form batched ridge solve (eq. 21)
-  * Lasso (eq. 22)           -> ISTA inner loop (high-dim m_i << n regime)
-  * logistic (eq. 23)        -> damped-Newton inner loop (no closed form)
+  * :class:`NodeData` — the padded batched container for the local
+    datasets X^(i) (the data half of a ``Problem``), and
+  * the legacy string-dispatch front-ends (``squared_loss`` /
+    ``lasso_loss`` / ``logistic_loss`` / ``empirical_error`` /
+    ``make_prox``) as one-line adapters over the loss registry, kept so
+    historical call sites and the paper-reading experience ("here is
+    eq. 20/22/23") keep working.
 
 All node-local data is stored batched over nodes with padding:
 X: (V, m_max, n), y: (V, m_max), sample_mask: (V, m_max). Unlabeled nodes
@@ -62,183 +66,46 @@ class NodeData:
 
 
 # ---------------------------------------------------------------------------
-# Squared error loss (paper §4.1, eq. 20-21)
+# Legacy adapters over the loss registry (repro.api.losses owns the math)
 # ---------------------------------------------------------------------------
+
+def _resolve(loss: str, alpha: float = 0.0, num_inner: int = 50):
+    """Map the historical string+kwargs dispatch onto a Loss instance."""
+    from repro.api.losses import get_loss
+
+    if loss == "squared":
+        return get_loss("squared")
+    if loss == "lasso":
+        return get_loss("lasso", alpha=alpha, num_inner=num_inner)
+    if loss == "logistic":
+        return get_loss("logistic", num_inner=min(num_inner, 12))
+    raise ValueError(f"unknown loss {loss!r}")
+
 
 def squared_loss(data: NodeData, w: jnp.ndarray) -> jnp.ndarray:
-    """(1/m_i) sum_r (y_r - w^T x_r)^2 per node: (V,)."""
-    pred = jnp.einsum("vmn,vn->vm", data.x, w)
-    res = (data.y - pred) ** 2 * data.sample_mask
-    return jnp.sum(res, axis=1) / data.counts()
+    """(1/m_i) sum_r (y_r - w^T x_r)^2 per node: (V,) (eq. 20)."""
+    return _resolve("squared").node_values(data, w)
 
-
-def squared_prox_setup(data: NodeData, tau: jnp.ndarray):
-    """Precompute the closed-form primal update (eq. 21) as an affine map.
-
-    PU_i(v) = (I + (2 tau_i / m_i) Q_i)^{-1} (v + (2 tau_i / m_i) X_i^T y_i)
-    with Q_i = X_i^T X_i.  Returns (P, b) with P: (V, n, n), b: (V, n) such
-    that PU_i(v) = P_i @ (v + b_i).  Unlabeled nodes get P = I, b = 0.
-    """
-    V, _, n = data.x.shape
-    xm = data.x * data.sample_mask[..., None]
-    q = jnp.einsum("vmn,vmk->vnk", xm, data.x)            # (V, n, n)
-    xty = jnp.einsum("vmn,vm->vn", xm, data.y)            # (V, n)
-    c = (2.0 * tau / data.counts())[:, None]               # (V, 1)
-    eye = jnp.eye(n, dtype=data.x.dtype)
-    a = eye[None] + c[..., None] * q
-    p = jnp.linalg.inv(a)
-    b = c * xty
-    lab = data.labeled_mask
-    p = jnp.where(lab[:, None, None] > 0, p, eye[None])
-    b = jnp.where(lab[:, None] > 0, b, 0.0)
-    return p, b
-
-
-def squared_prox_apply(params: dict, v: jnp.ndarray,
-                       affine_fn: Callable | None = None) -> jnp.ndarray:
-    """Evaluate eq. (21) from precomputed affine params (batched over nodes).
-
-    Pure in (params, v) — shard-friendly: params rows shard with nodes.
-    """
-    vb = v + params["b"]
-    if affine_fn is not None:
-        return affine_fn(params["p"], vb)
-    return jnp.einsum("vnk,vk->vn", params["p"], vb)
-
-
-def make_squared_prox(data: NodeData, tau: jnp.ndarray,
-                      affine_fn: Callable | None = None):
-    """Returns prox(v): (V, n) -> (V, n) evaluating eq. (21) batched.
-
-    ``affine_fn(P, v_plus_b)`` may be supplied to route the batched matvec
-    through the Pallas kernel (kernels.ops.batched_affine); defaults to
-    einsum.
-    """
-    p, b = squared_prox_setup(data, tau)
-    params = {"p": p, "b": b}
-
-    def prox(v: jnp.ndarray) -> jnp.ndarray:
-        return squared_prox_apply(params, v, affine_fn=affine_fn)
-
-    return prox
-
-
-# ---------------------------------------------------------------------------
-# Lasso loss (paper §4.2, eq. 22) — ISTA inner loop
-# ---------------------------------------------------------------------------
 
 def lasso_loss(data: NodeData, w: jnp.ndarray, alpha: float) -> jnp.ndarray:
-    """(1/m_i)||X w - y||^2 + alpha ||w||_1 per node: (V,)."""
-    return squared_loss(data, w) + alpha * jnp.sum(jnp.abs(w), axis=1)
+    """(1/m_i)||X w - y||^2 + alpha ||w||_1 per node: (V,) (eq. 22)."""
+    return _resolve("lasso", alpha=alpha).node_values(data, w)
 
-
-def _soft_threshold(z: jnp.ndarray, t) -> jnp.ndarray:
-    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
-
-
-def make_lasso_prox(data: NodeData, tau: jnp.ndarray, alpha: float,
-                    num_inner: int = 50):
-    """ISTA solve of eq. (22):
-
-    argmin_z (1/m_i)||X_i z - y_i||^2 + alpha||z||_1 + (1/(2 tau_i))||z - v||^2
-
-    The smooth part has per-node Lipschitz constant
-    L_i = 2 lambda_max(Q_i)/m_i + 1/tau_i; we take ISTA steps 1/L_i and
-    soft-threshold with alpha/L_i.  Unlabeled nodes return v unchanged.
-    """
-    xm = data.x * data.sample_mask[..., None]
-    q = jnp.einsum("vmn,vmk->vnk", xm, data.x)
-    xty = jnp.einsum("vmn,vm->vn", xm, data.y)
-    m = data.counts()
-    # lambda_max via eigvalsh (setup-time only; n is small).
-    lam_max = jnp.linalg.eigvalsh(q)[:, -1]
-    lips = 2.0 * lam_max / m + 1.0 / tau                   # (V,)
-    step = 1.0 / lips
-
-    def prox(v: jnp.ndarray) -> jnp.ndarray:
-        def body(_, z):
-            grad = 2.0 * (jnp.einsum("vnk,vk->vn", q, z) - xty) / m[:, None]
-            grad = grad + (z - v) / tau[:, None]
-            z_new = _soft_threshold(z - step[:, None] * grad,
-                                    alpha * step[:, None])
-            return z_new
-
-        z = jax.lax.fori_loop(0, num_inner, body, v)
-        return jnp.where(data.labeled_mask[:, None] > 0, z, v)
-
-    return prox
-
-
-# ---------------------------------------------------------------------------
-# Logistic loss (paper §4.3, eq. 23) — damped-Newton inner loop
-# ---------------------------------------------------------------------------
 
 def logistic_loss(data: NodeData, w: jnp.ndarray) -> jnp.ndarray:
-    """(-1/m_i) sum_r [y log sig(w^T x) + (1-y) log(1 - sig(w^T x))]: (V,)."""
-    logits = jnp.einsum("vmn,vn->vm", data.x, w)
-    # numerically-stable BCE with logits
-    per = jnp.maximum(logits, 0.0) - logits * data.y + jnp.log1p(
-        jnp.exp(-jnp.abs(logits)))
-    return jnp.sum(per * data.sample_mask, axis=1) / data.counts()
+    """Per-node binary cross-entropy (eq. 23): (V,)."""
+    return _resolve("logistic").node_values(data, w)
 
-
-def make_logistic_prox(data: NodeData, tau: jnp.ndarray, num_inner: int = 8):
-    """Newton solve of eq. (18) with the logistic loss (eq. 23).
-
-    The objective  L_i(z) + (1/(2 tau_i))||z - v||^2  is smooth and strongly
-    convex; n is small, so a handful of exact Newton steps converge to
-    machine precision.  This instantiates the paper's remark that the updates
-    are robust to inexact resolvent evaluation.
-    """
-    m = data.counts()
-
-    def prox(v: jnp.ndarray) -> jnp.ndarray:
-        def body(_, z):
-            logits = jnp.einsum("vmn,vn->vm", data.x, z)
-            s = jax.nn.sigmoid(logits)
-            r = (s - data.y) * data.sample_mask                  # (V, m)
-            grad = jnp.einsum("vm,vmn->vn", r, data.x) / m[:, None]
-            grad = grad + (z - v) / tau[:, None]
-            d = (s * (1 - s)) * data.sample_mask                 # (V, m)
-            hess = jnp.einsum("vm,vmn,vmk->vnk", d, data.x,
-                              data.x) / m[:, None, None]
-            n = z.shape[1]
-            hess = hess + jnp.eye(n, dtype=z.dtype)[None] / tau[:, None, None]
-            delta = jnp.linalg.solve(hess, grad[..., None])[..., 0]
-            return z - delta
-
-        z = jax.lax.fori_loop(0, num_inner, body, v)
-        return jnp.where(data.labeled_mask[:, None] > 0, z, v)
-
-    return prox
-
-
-# ---------------------------------------------------------------------------
-# Empirical error (paper eq. 2) and loss registry
-# ---------------------------------------------------------------------------
 
 def empirical_error(data: NodeData, w: jnp.ndarray, loss: str = "squared",
                     alpha: float = 0.0) -> jnp.ndarray:
     """E_hat(w) = sum_{i in M} L(X^(i), w^(i))  (eq. 2)."""
-    if loss == "squared":
-        per = squared_loss(data, w)
-    elif loss == "lasso":
-        per = lasso_loss(data, w, alpha)
-    elif loss == "logistic":
-        per = logistic_loss(data, w)
-    else:
-        raise ValueError(f"unknown loss {loss!r}")
-    return jnp.sum(per * data.labeled_mask)
+    return _resolve(loss, alpha=alpha).empirical_error(data, w)
 
 
 def make_prox(loss: str, data: NodeData, tau: jnp.ndarray, *,
               alpha: float = 0.0, num_inner: int = 50,
               affine_fn: Callable | None = None):
     """Primal-update operator factory (one per paper §4.x variant)."""
-    if loss == "squared":
-        return make_squared_prox(data, tau, affine_fn=affine_fn)
-    if loss == "lasso":
-        return make_lasso_prox(data, tau, alpha, num_inner=num_inner)
-    if loss == "logistic":
-        return make_logistic_prox(data, tau, num_inner=min(num_inner, 12))
-    raise ValueError(f"unknown loss {loss!r}")
+    return _resolve(loss, alpha=alpha, num_inner=num_inner).make_prox(
+        data, tau, affine_fn=affine_fn)

@@ -53,17 +53,6 @@ class NLassoResult:
     mse: jnp.ndarray | None   # (iters,) MSE vs. true weights, if provided
 
 
-def clip_dual(u: jnp.ndarray, bound: jnp.ndarray,
-              clip_fn: Callable | None = None) -> jnp.ndarray:
-    """Edge-wise clipping T^{(lambda A_e)} — resolvent of sigma dg* (step 10).
-
-    ``clip_fn(u, bound)`` can route through the Pallas tv_prox kernel.
-    """
-    if clip_fn is not None:
-        return clip_fn(u, bound)
-    return jnp.clip(u, -bound[:, None], bound[:, None])
-
-
 def pd_step(graph: EmpiricalGraph, prox: Callable, lam: float,
             tau: jnp.ndarray, sigma: jnp.ndarray, state: SolverState,
             clip_fn: Callable | None = None) -> SolverState:

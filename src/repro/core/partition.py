@@ -20,7 +20,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.graph import EmpiricalGraph, build_graph
+from repro.core.graph import EmpiricalGraph
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,33 @@
+"""The engine layer: one primal-dual step, many executors, one loop.
+
+``repro.engine`` is the single home of the paper's Algorithm 1 math
+(eqs. 14-15) and of the solve-loop machinery every backend shares:
+
+  * :mod:`repro.engine.step` — the canonical :func:`pd_step` decomposed
+    into typed primitives over a :class:`GraphExecutor`, the eq.-11
+    :func:`certificate`, and the fixed-point :func:`pd_residual` that
+    drives ``SolverConfig.tol`` early stopping,
+  * :mod:`repro.engine.executors` — the four executors (dense
+    gather-sum, edge-blocked VMEM window, shard_map halo exchange,
+    federated mailboxes),
+  * :mod:`repro.engine.loop` — scan chunking, metric cadence, the
+    host-side chunk driver (early stopping + checkpoint schedules),
+    iteration caps, and continuation defaults.
+
+The ``api`` / ``core`` / ``kernels`` / ``federated`` packages are thin
+drivers over this layer.
+"""
+from repro.engine.executors import (DenseExecutor, HaloExecutor,
+                                    MailboxExecutor, WindowExecutor)
+from repro.engine.loop import (capped, chunk_bounds, concat_traces,
+                               default_warm_lam, iter_cap, run_chunked,
+                               scan_solve)
+from repro.engine.step import (GraphExecutor, certificate, ensure_column,
+                               pd_residual, pd_step)
+
+__all__ = [
+    "DenseExecutor", "GraphExecutor", "HaloExecutor", "MailboxExecutor",
+    "WindowExecutor", "capped", "certificate", "chunk_bounds",
+    "concat_traces", "default_warm_lam", "ensure_column", "iter_cap",
+    "pd_residual", "pd_step", "run_chunked", "scan_solve",
+]

@@ -1,0 +1,189 @@
+"""The four realizations of the engine's :class:`GraphExecutor` protocol.
+
+Each executor answers one question — *how do D and D^T run on this
+substrate?* — so :func:`repro.engine.step.pd_step` stays the only
+statement of the iteration math:
+
+  * :class:`DenseExecutor`    — padded incidence-table gather-sum on one
+    device (the dense / unfused-pallas backends and every legacy shim),
+  * :class:`WindowExecutor`   — a single VMEM-resident window of the
+    edge-blocked layout; the fused Pallas kernel's in-kernel body runs
+    the canonical step through this executor,
+  * :class:`HaloExecutor`     — shard_map collectives over a device mesh
+    (dense all-gather or boundary-only exchange),
+  * :class:`MailboxExecutor`  — the federated runtime's per-edge message
+    protocol: duals read through owner broadcasts, primal differences
+    through persistent (optionally compressed) mailboxes.
+
+Executors also stand in for the graph inside the regularizer resolvents:
+``weights`` is the per-owned-edge A_e in the executor's own edge order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseExecutor:
+    """Single-device executor over an :class:`EmpiricalGraph`."""
+
+    graph: Any
+
+    @property
+    def weights(self) -> jnp.ndarray:
+        return self.graph.weights
+
+    def gather_duals(self, u: jnp.ndarray) -> jnp.ndarray:
+        return self.graph.incidence_transpose_apply(u)
+
+    def edge_diff(self, z: jnp.ndarray) -> jnp.ndarray:
+        return self.graph.incidence_apply(z)
+
+    def owned_duals(self, u: jnp.ndarray) -> jnp.ndarray:
+        return u
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowExecutor:
+    """One VMEM window of the edge-blocked layout (``EdgeBlockLayout``).
+
+    State shapes differ from the dense case: ``w`` is the (NW, n) node
+    window (owned + halo blocks), the gather-side dual state is the
+    (EW, n) edge window, and the executor *owns* the (EB, n) rows at
+    offset ``klo * EB`` inside it.  ``inc_local`` holds window-relative
+    edge ids (pre-clipped), ``src_local`` / ``dst_local`` window-relative
+    node ids per owned edge.  ``weights`` carries the already
+    lambda-scaled clip levels ``lam * A_e`` for the owned edges (the
+    kernel precomputes them once per solve), so the canonical step is
+    invoked with ``lam = 1.0``.
+    """
+
+    inc_local: jnp.ndarray      # (NW, max_deg) window-relative edge ids
+    inc_signs: jnp.ndarray      # (NW, max_deg) +1 / -1 / 0
+    src_local: jnp.ndarray      # (EB,) window-relative src node ids
+    dst_local: jnp.ndarray      # (EB,) window-relative dst node ids
+    weights: jnp.ndarray        # (EB, 1) lam * A_e per owned edge
+    klo: int
+    block_edges: int
+
+    def gather_duals(self, u: jnp.ndarray) -> jnp.ndarray:
+        n = u.shape[1]
+        gathered = u[self.inc_local.reshape(-1)].reshape(
+            self.inc_local.shape + (n,))             # (NW, max_deg, n)
+        return jnp.einsum("vd,vdn->vn", self.inc_signs, gathered)
+
+    def edge_diff(self, z: jnp.ndarray) -> jnp.ndarray:
+        return z[self.src_local] - z[self.dst_local]
+
+    def owned_duals(self, u: jnp.ndarray) -> jnp.ndarray:
+        eb = self.block_edges
+        return jax.lax.slice_in_dim(u, self.klo * eb, (self.klo + 1) * eb)
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloExecutor:
+    """shard_map executor: each shard owns ``vp`` nodes and the edges
+    whose src endpoint it owns; D / D^T become lock-step collectives.
+
+    ``comm`` selects the exchange (DESIGN.md §3.3): ``dense`` all-gathers
+    the primal block and psums the dense D^T u accumulator; ``boundary``
+    exchanges only rows marked in ``send`` (nodes touching cut edges).
+    Built *inside* the shard_map body — ``base = shard_index * vp`` is a
+    traced value.
+    """
+
+    axis: str
+    comm: str
+    vp: int
+    v_pad: int
+    base: Any                   # traced: this shard's first global row
+    src: jnp.ndarray            # (ep,) global node ids of owned edges
+    dst: jnp.ndarray
+    weights: jnp.ndarray        # (ep,) A_e (0 for padded edge slots)
+    send: jnp.ndarray           # (vp,) 1.0 if local node is boundary
+    send_full: jnp.ndarray | None   # (V_pad,) boundary mask, boundary mode
+
+    def gather_duals(self, u_loc: jnp.ndarray) -> jnp.ndarray:
+        """All-shards-summed D^T u, returning the local (vp, n) block."""
+        vp, n = self.vp, u_loc.shape[1]
+        acc = jnp.zeros((self.v_pad, n), u_loc.dtype)
+        acc = acc.at[self.src].add(u_loc)
+        acc = acc.at[self.dst].add(-u_loc)
+        if self.comm == "dense":
+            tot = jax.lax.psum(acc, self.axis)
+        else:
+            # shard-internal part stays local; only boundary rows summed
+            local_rows = jax.lax.dynamic_slice(acc, (self.base, 0),
+                                               (vp, n))
+            bacc = acc * self.send_full[:, None]
+            tot_b = jax.lax.psum(bacc, self.axis)
+            tot = jax.lax.dynamic_update_slice(
+                jnp.zeros_like(acc), local_rows, (self.base, 0))
+            # rows that are boundary take the global sum instead
+            tot = jnp.where(self.send_full[:, None] > 0, tot_b, tot)
+        return jax.lax.dynamic_slice(tot, (self.base, 0), (vp, n))
+
+    def edge_diff(self, z_loc: jnp.ndarray) -> jnp.ndarray:
+        n = z_loc.shape[1]
+        if self.comm == "dense":
+            zg = jax.lax.all_gather(z_loc, self.axis, tiled=True)
+        else:
+            # boundary mode: exchange only rows marked in `send`; local
+            # rows come from the local block, remote non-boundary rows
+            # are never read (their edges are shard-internal elsewhere).
+            contrib = jnp.zeros((self.v_pad, n), z_loc.dtype)
+            contrib = jax.lax.dynamic_update_slice(
+                contrib, z_loc * self.send[:, None], (self.base, 0))
+            zg = jax.lax.psum(contrib, self.axis)
+            # overwrite own block with exact local values
+            zg = jax.lax.dynamic_update_slice(zg, z_loc, (self.base, 0))
+        return zg[self.src] - zg[self.dst]
+
+    def owned_duals(self, u: jnp.ndarray) -> jnp.ndarray:
+        return u
+
+
+class MailboxExecutor:
+    """Federated message-passing executor (one communication round).
+
+    Duals are gathered from owned rows plus the owner-broadcast mirrors
+    ``u_recv`` (stale while the owner sleeps); the edge difference runs
+    through the persistent primal mailboxes: active dst endpoints post a
+    (compressed) copy of their operand ``z`` up to the edge owner, and
+    the difference is formed against the mailbox content.  The refreshed
+    mailbox state is left on ``z_recv_new`` for the round protocol to
+    carry forward — an executor is built fresh each round.
+    """
+
+    def __init__(self, graph, u_recv, z_recv, pos_signs, active_dst,
+                 compress: Callable):
+        self.graph = graph
+        self.u_recv = u_recv
+        self.z_recv = z_recv
+        self.pos_signs = pos_signs          # (V, max_deg, 1) owner-side mask
+        self.active_dst = active_dst        # (E, 1) bool
+        self.compress = compress
+        self.z_recv_new = None
+
+    @property
+    def weights(self) -> jnp.ndarray:
+        return self.graph.weights
+
+    def gather_duals(self, u: jnp.ndarray) -> jnp.ndarray:
+        g = self.graph
+        gathered = jnp.where(self.pos_signs, u[g.inc_edges],
+                             self.u_recv[g.inc_edges])
+        return jnp.einsum("vd,vdn->vn", g.inc_signs, gathered)
+
+    def edge_diff(self, z: jnp.ndarray) -> jnp.ndarray:
+        g = self.graph
+        self.z_recv_new = jnp.where(self.active_dst,
+                                    self.compress(z[g.dst]), self.z_recv)
+        return z[g.src] - self.z_recv_new
+
+    def owned_duals(self, u: jnp.ndarray) -> jnp.ndarray:
+        return u

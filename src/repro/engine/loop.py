@@ -1,0 +1,151 @@
+"""The shared solve-loop harness: one loop, every backend.
+
+Everything the backends used to reimplement separately lives here once:
+
+  * **scan chunking** — :func:`scan_solve` is the jitted inner loop
+    shape (per-iteration scan / fori metric blocks / whole-block
+    multi-iteration fusion) shared by the dense and fused engines,
+  * **metric cadence** — traces are recorded every ``metric_every``
+    iterations by construction of the scan,
+  * **chunked driving** — :func:`run_chunked` is the host-side chunk
+    loop shared by residual-based early stopping and the federated
+    checkpoint schedule (both split the horizon into identical compiled
+    chunks; a straight run and a resumed run execute the same chunk
+    sequence, which is what keeps resume bitwise),
+  * **early stopping** — ``SolverConfig.tol`` compares the eq.-11
+    fixed-point residual (:func:`repro.engine.step.pd_residual`)
+    against ``tol`` at every metric boundary and stops the chunk loop,
+  * **iteration caps and warm starts** — the ``REPRO_SOLVER_MAX_ITERS``
+    env cap and the continuation warm-lambda default used by
+    ``Solver.run`` / ``solve_path`` / the federated runtime.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Iteration caps + continuation defaults (one implementation, no drift)
+# ---------------------------------------------------------------------------
+
+def iter_cap() -> int:
+    return int(os.environ.get("REPRO_SOLVER_MAX_ITERS", 1 << 30))
+
+
+def capped(num_iters: int, metric_every: int = 1) -> int:
+    """Apply the env cap, keeping the metric cadence divisibility.
+
+    Leaves ``num_iters`` untouched when no cap bites (so mismatched
+    cadences still error loudly in the backend).
+    """
+    cap = iter_cap()
+    if num_iters <= cap:
+        return num_iters
+    capped_iters = max(cap, metric_every)
+    if metric_every > 1:
+        return capped_iters - capped_iters % metric_every
+    return capped_iters
+
+
+def default_warm_lam(lam: float) -> float:
+    """Continuation warm strength: 10x target, clipped to [1e-2, 1].
+
+    The dual-clip bound lambda*A_e limits how far an unlabeled node moves
+    per iteration, so a cold start at small lambda needs ~||w*||/lambda
+    iterations just to travel; warming at a larger lambda propagates fast
+    (see core.nlasso.nlasso_continuation and EXPERIMENTS.md).
+    """
+    return float(min(max(10.0 * lam, 1e-2), 1.0))
+
+
+# ---------------------------------------------------------------------------
+# The jitted inner loop shape (dense + fused engines)
+# ---------------------------------------------------------------------------
+
+def scan_solve(run_block: Callable, metrics: Callable, state0, *,
+               num_iters: int, metric_every: int,
+               multi_iter_block: bool = False):
+    """Scan ``num_iters`` iterations, recording ``metrics`` on a cadence.
+
+    ``run_block(state, iters)`` advances the solver state; ``metrics``
+    maps a state to the per-record ys.  Three chunk shapes, exactly the
+    ones the dense and fused engines compiled before the refactor:
+
+      * ``metric_every == 1``     — one ``run_block(state, 1)`` per
+        scan step,
+      * ``multi_iter_block=True`` — one ``run_block(state,
+        metric_every)`` per scan step (whole-graph-in-VMEM fusion),
+      * otherwise                 — a ``fori_loop`` of single steps per
+        scan step.
+
+    Returns ``(final_state, ys)`` like ``jax.lax.scan``.
+    """
+    if metric_every == 1:
+        def step(state, _):
+            new = run_block(state, 1)
+            return new, metrics(new)
+        length = num_iters
+    elif multi_iter_block:
+        def step(state, _):
+            new = run_block(state, metric_every)
+            return new, metrics(new)
+        length = num_iters // metric_every
+    else:
+        def step(state, _):
+            new = jax.lax.fori_loop(0, metric_every,
+                                    lambda _, s: run_block(s, 1), state)
+            return new, metrics(new)
+        length = num_iters // metric_every
+    return jax.lax.scan(step, state0, None, length=length)
+
+
+# ---------------------------------------------------------------------------
+# The host-side chunk driver (early stopping + checkpoint schedules)
+# ---------------------------------------------------------------------------
+
+def chunk_bounds(start: int, total: int, size: int) -> list[tuple[int, int]]:
+    """[(r0, r1), ...] covering [start, total) in chunks of ``size``."""
+    return [(r, min(r + size, total)) for r in range(start, total, size)]
+
+
+def concat_traces(parts: list):
+    """Concatenate per-chunk trace pytrees along their leading axis."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs), *parts)
+
+
+def run_chunked(run_chunk: Callable, state, *, total: int, start: int = 0,
+                chunk_size: int, tol: float | None = None,
+                on_chunk: Callable | None = None):
+    """Drive a solve as a host-side loop over identical compiled chunks.
+
+    ``run_chunk(state, r0, r1) -> (state, traces, residual)`` advances
+    ``r1 - r0`` iterations and returns its trace pytree (leading axis =
+    records in the chunk) plus the chunk's max per-iteration fixed-point
+    residual (or None when not tracked).  ``on_chunk(state, r1, parts)`` fires after every
+    chunk (checkpoint hook).  When ``tol`` is set, the loop stops at the
+    first chunk whose residual is <= tol — every backend stops on the
+    identical residual stream, so dense and federated_sync stop at the
+    same iteration.
+
+    Returns ``(state, traces, iterations_run, stopped_early)``.
+    """
+    parts = []
+    iterations = start
+    stopped = False
+    for r0, r1 in chunk_bounds(start, total, chunk_size):
+        state, traces, residual = run_chunk(state, r0, r1)
+        parts.append(traces)
+        iterations = r1
+        if on_chunk is not None:
+            on_chunk(state, r1, parts)
+        if (tol is not None and residual is not None
+                and float(residual) <= tol):
+            stopped = True
+            break
+    traces = concat_traces(parts) if parts else None
+    return state, traces, iterations, stopped

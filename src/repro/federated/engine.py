@@ -56,9 +56,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.backends import certificate, make_metrics_fn
+from repro.api.backends import make_metrics_fn
 from repro.api.problem import Problem, SolveResult
 from repro.checkpoint import checkpoint as ckpt
+from repro.engine import (MailboxExecutor, capped, certificate, pd_residual,
+                          run_chunked)
+from repro.engine import pd_step as engine_pd_step
 from repro.federated.ledger import CommLedger
 from repro.federated.policies import (CompressionPolicy, LocalUpdatePolicy,
                                       ParticipationPolicy, get_compression,
@@ -88,6 +91,16 @@ class FederatedConfig:
       compression:  ``none`` | ``int8`` | ``topk``.
       seed:         drives the participation schedule (and nothing else);
                     same seed -> identical schedule and ledger.
+      tol:          residual-based early stopping: advance in
+                    ``metric_every``-round chunks and stop at the first
+                    chunk whose *max per-round* eq.-11 fixed-point
+                    residual (``repro.engine.step.pd_residual``) is
+                    <= tol — the max makes single idle rounds under
+                    partial participation not read as convergence (a
+                    fully idle chunk still would; pick metric_every
+                    well above 1/participation-rate).  The residual
+                    stream is identical to the dense backend's in
+                    synchronous mode, so both stop at the same round.
 
     Checkpointing (``repro.checkpoint``):
       checkpoint_dir:   where to save; None disables.
@@ -103,6 +116,7 @@ class FederatedConfig:
     local_update: Any = "single"
     compression: Any = "none"
     seed: int = 0
+    tol: float | None = None
     checkpoint_dir: str | None = None
     checkpoint_every: int | None = None
     resume: bool = False
@@ -177,24 +191,37 @@ class FederatedResult:
 # The jitted segment: metric_every message-passing rounds
 # ---------------------------------------------------------------------------
 
-def _chunk_impl(graph, data, lam, w, u, u_recv, z_recv, sched, w_true, *,
-                loss, reg, local_update: LocalUpdatePolicy,
+def _chunk_impl(graph, data, lam, w, u, u_recv, z_recv, sched, w_true,
+                params, *, loss, reg, local_update: LocalUpdatePolicy,
                 compression: CompressionPolicy, rho: float,
-                metric_every: int):
+                metric_every: int, with_residual: bool = False):
     """Scan a whole chunk of rounds, metrics on the cadence.
 
-    The per-round body deliberately re-uses the dense backend's exact
-    expressions (same prox, same einsum contraction for D^T u, same
-    ``z[src] - z[dst]`` for D, same resolvent and relaxation formulas)
-    and the chunk is one ``lax.scan`` like the dense engine's, so the
-    full-participation/no-compression mode is operation-for-operation
-    the dense iteration — the conformance suite pins the two traces
-    together.  ``sched`` is the (rounds, V) activity mask for the chunk;
-    ys are the metric trace plus the per-round communication meter.
+    The per-round body is the canonical engine step
+    (:func:`repro.engine.step.pd_step`) evaluated through a
+    :class:`~repro.engine.executors.MailboxExecutor` — the *same*
+    expressions the dense backend scans (same prox, same einsum
+    contraction for D^T u, same ``z[src] - z[dst]`` for D, same
+    resolvent and relaxation formulas) — and the chunk is one
+    ``lax.scan`` like the dense engine's, so the full-participation /
+    no-compression mode is operation-for-operation the dense iteration —
+    the conformance suite pins the two traces together.  ``sched`` is
+    the (rounds, V) activity mask for the chunk; ys are the metric trace
+    plus the per-round communication meter (plus, under
+    ``with_residual``, the chunk's *max* per-round fixed-point residual
+    for tol early stopping — see the comment at the reduction).
     """
     tau = graph.primal_stepsizes()
     sigma = graph.dual_stepsizes()
-    prox = loss.make_prox(data, tau)
+    if params is None:
+        prox = loss.make_prox(data, tau)
+    else:
+        # per-solve prox parameters precomputed once by run_federated —
+        # a tol/checkpoint run calls this chunk many times and must not
+        # redo the per-node setup (e.g. the squared loss's batched
+        # matrix inverse) on every call
+        def prox(v):
+            return loss.prox_apply(params, v)
     n = w.shape[1]
     up_cost = jnp.float32(compression.message_bytes(n))
     down_cost = jnp.float32(4.0 * n)
@@ -204,58 +231,65 @@ def _chunk_impl(graph, data, lam, w, u, u_recv, z_recv, sched, w_true, *,
 
     def one_round(state, active):
         w, u, u_recv, z_recv = state
-        # 1. primal: D^T u at each client from owned duals + mirrors
-        gathered = jnp.where(pos_signs, u[graph.inc_edges],
-                             u_recv[graph.inc_edges])
-        dtu = jnp.einsum("vd,vdn->vn", graph.inc_signs, gathered)
-        w_raw = local_update.apply(prox, w, dtu, tau)
-        # 2. primal messages: dst endpoints post compressed z to owners
-        z = 2.0 * w_raw - w
+        # the round protocol around the canonical step: who is active,
+        # which mailboxes refresh, what the meter records
         active_dst = active[graph.dst][:, None] > 0.0
-        z_recv_new = jnp.where(active_dst,
-                               compression.compress(z[graph.dst]), z_recv)
-        # 3. dual refresh at active owners (Algorithm 1 step 10)
-        diff = z[graph.src] - z_recv_new
-        u_raw = reg.dual_prox(u + sigma[:, None] * diff, graph, lam, sigma)
-        if rho != 1.0:
-            w_raw = w + rho * (w_raw - w)
-            u_raw = reg.project_dual(u + rho * (u_raw - u), graph, lam)
+        executor = MailboxExecutor(graph, u_recv, z_recv, pos_signs,
+                                   active_dst, compression.compress)
+        w_raw, u_raw = engine_pd_step(
+            executor, prox, reg, lam, tau, sigma, w, u, rho=rho,
+            primal_update=local_update.apply)
+        z_recv_new = executor.z_recv_new
         active_node = active[:, None] > 0.0
         active_src = active[graph.src][:, None] > 0.0
         w_new = jnp.where(active_node, w_raw, w)
         u_new = jnp.where(active_src, u_raw, u)
-        # 4. owners broadcast refreshed duals to the dst mirrors
+        # active owners broadcast refreshed duals to the dst mirrors
         u_recv_new = jnp.where(active_src, u_new, u_recv)
         meter = (jnp.sum(active[graph.dst]),
                  jnp.sum(active[graph.dst]) * up_cost,
                  jnp.sum(active[graph.src]),
                  jnp.sum(active[graph.src]) * down_cost)
-        return (w_new, u_new, u_recv_new, z_recv_new), meter
+        new = (w_new, u_new, u_recv_new, z_recv_new)
+        if with_residual:
+            return new, (meter, pd_residual(tau, sigma, w, u, w_new,
+                                            u_new))
+        return new, (meter,)
 
     if metric_every == 1:
         def step(state, active):
-            new, meter = one_round(state, active)
-            return new, (metrics(new[0]), meter)
-        (w, u, u_recv, z_recv), ((obj, mse), meter) = jax.lax.scan(
+            new, ys = one_round(state, active)
+            return new, (metrics(new[0]),) + ys
+        (w, u, u_recv, z_recv), ys = jax.lax.scan(
             step, (w, u, u_recv, z_recv), sched)
+        (obj, mse), meter = ys[0], ys[1]
+        res = ys[2] if with_residual else None
     else:
         sched_blocks = sched.reshape(rounds // metric_every, metric_every,
                                      sched.shape[1])
 
         def step(state, block):
-            new, meter = jax.lax.scan(one_round, state, block)
-            return new, (metrics(new[0]), meter)
-        (w, u, u_recv, z_recv), ((obj, mse), meter) = jax.lax.scan(
+            new, ys = jax.lax.scan(one_round, state, block)
+            return new, (metrics(new[0]),) + ys
+        (w, u, u_recv, z_recv), ys = jax.lax.scan(
             step, (w, u, u_recv, z_recv), sched_blocks)
+        (obj, mse), meter = ys[0], ys[1]
         # (T, metric_every) per-round meters -> flat (rounds,)
         meter = tuple(m.reshape(rounds) for m in meter)
+        res = ys[2].reshape(rounds) if with_residual else None
 
-    return (w, u, u_recv, z_recv), (obj, mse), meter
+    if with_residual:
+        # chunk-max: a single idle round (few/no active clients) moves
+        # nothing and must not read as convergence under partial
+        # participation — only a whole chunk without movement stops
+        res = jnp.max(res)
+    return (w, u, u_recv, z_recv), (obj, mse), meter, res
 
 
 _chunk = jax.jit(_chunk_impl,
                  static_argnames=("loss", "reg", "local_update",
-                                  "compression", "rho", "metric_every"))
+                                  "compression", "rho", "metric_every",
+                                  "with_residual"))
 
 
 # ---------------------------------------------------------------------------
@@ -299,6 +333,8 @@ def _config_fingerprint(cfg: "FederatedConfig", problem: Problem,
         # the suffix and lose last-ulp bitwise equality with the straight
         # run (see module docstring on XLA chunk boundaries)
         "checkpoint_every": int(cfg.checkpoint_every or 0),
+        # tol re-chunks the horizon at metric_every (and may stop early)
+        "tol": None if cfg.tol is None else float(cfg.tol),
         "have_mse": bool(have_mse),
         "problem": _problem_fingerprint(problem),
     }
@@ -393,13 +429,11 @@ def run_federated(problem: Problem, config: FederatedConfig | None = None,
     other configuration trades accuracy-per-round against the metered
     communication cost in the returned ledger.
     """
-    # the solver's REPRO_SOLVER_MAX_ITERS knob caps rounds the same way
-    # it caps iterations (one shared implementation, no drift)
-    from repro.api.solver import _capped
-
     cfg = config if config is not None else FederatedConfig()
     me = cfg.metric_every
-    R = _capped(cfg.num_rounds, me)
+    # the solver's REPRO_SOLVER_MAX_ITERS knob caps rounds the same way
+    # it caps iterations (one shared implementation, no drift)
+    R = capped(cfg.num_rounds, me)
     if R % me:
         raise ValueError(
             f"metric_every={me} must divide num_rounds={R}")
@@ -428,9 +462,9 @@ def run_federated(problem: Problem, config: FederatedConfig | None = None,
         u0 = jnp.asarray(u0, jnp.float32)
 
     start_round = 0
-    obj_parts: list = []
-    mse_parts: list = []
-    ledger_parts: list[CommLedger] = []
+    obj_prefix: list = []
+    mse_prefix: list = []
+    ledger_prefix: list[CommLedger] = []
     fingerprint = _config_fingerprint(cfg, problem, w_true is not None)
     if cfg.resume and has_checkpoint(cfg.checkpoint_dir):
         start_round, state, obj0, mse0, led0 = _load_checkpoint(
@@ -439,42 +473,87 @@ def run_federated(problem: Problem, config: FederatedConfig | None = None,
             raise ValueError(
                 f"checkpoint round {start_round} incompatible with "
                 f"num_rounds={R}, metric_every={me}")
-        obj_parts, mse_parts = [obj0], [mse0]
-        ledger_parts = [led0]
+        obj_prefix, mse_prefix = [obj0], [mse0]
+        ledger_prefix = [led0]
     else:
         # at join time every client knows the initial model (setup
         # broadcast, not metered): mirrors and mailboxes start consistent
         state = FederatedState(w=w0, u=u0, u_recv=u0, z_recv=w0[graph.dst])
 
-    w, u, u_recv, z_recv = state.w, state.u, state.u_recv, state.z_recv
-
     # chunk boundaries: the whole horizon is ONE jitted scan unless
-    # checkpointing splits it — a checkpointed straight run and an
-    # interrupted-then-resumed run then execute the identical sequence
-    # of compiled chunks, which is what makes resume bitwise.
+    # checkpointing or tol early stopping splits it — a checkpointed
+    # straight run and an interrupted-then-resumed run then execute the
+    # identical sequence of compiled chunks, which is what makes resume
+    # bitwise; a tol run re-chunks at the metric cadence so the residual
+    # is checked at every metric boundary.
     checkpointing = (cfg.checkpoint_dir is not None
                      and bool(cfg.checkpoint_every))
-    step_rounds = cfg.checkpoint_every if checkpointing else max(
-        R - start_round, 1)
-    bounds = [(r, min(r + step_rounds, R))
-              for r in range(start_round, R, step_rounds)]
+    with_residual = cfg.tol is not None
+    if with_residual:
+        step_rounds = me
+    elif checkpointing:
+        step_rounds = cfg.checkpoint_every
+    else:
+        step_rounds = max(R - start_round, 1)
 
-    for r0, r1 in bounds:
+    # Precompute the prox parameters once per solve — but only when the
+    # horizon really is chunked (tol / checkpointing): the single-chunk
+    # program computes them inside the jitted chunk exactly like the
+    # dense scan does, keeping the synchronous mode bitwise the dense
+    # iteration (eager setup differs from in-jit setup at the last ulp,
+    # which would break the conformance oracle).
+    prox_params = None
+    if with_residual or checkpointing:
+        try:
+            prox_params = problem.loss.prox_setup(
+                data, graph.primal_stepsizes())
+        except NotImplementedError:
+            prox_params = None      # opaque loss: chunk falls back
+
+    def run_chunk(chunk_state, r0, r1):
         sched_chunk = jnp.asarray(schedule[r0:r1])
-        (w, u, u_recv, z_recv), (obj, mse), meter = _chunk(
-            graph, data, problem.lam, w, u, u_recv, z_recv, sched_chunk,
-            w_true, loss=problem.loss, reg=problem.regularizer,
-            local_update=local_update, compression=compression,
-            rho=cfg.rho, metric_every=me)
-        obj_parts.append(obj)
-        mse_parts.append(mse)
-        ledger_parts.append(CommLedger(*meter))
-        if checkpointing:
-            _save_checkpoint(
-                cfg.checkpoint_dir, r1,
-                FederatedState(w=w, u=u, u_recv=u_recv, z_recv=z_recv),
-                jnp.concatenate(obj_parts), jnp.concatenate(mse_parts),
-                CommLedger.concat(ledger_parts), fingerprint)
+        new_state, (obj, mse), meter, res = _chunk(
+            graph, data, problem.lam, *chunk_state, sched_chunk,
+            w_true, prox_params, loss=problem.loss,
+            reg=problem.regularizer, local_update=local_update,
+            compression=compression, rho=cfg.rho, metric_every=me,
+            with_residual=with_residual)
+        return new_state, (obj, mse, CommLedger(*meter)), res
+
+    last_saved = start_round if cfg.resume else None
+    last_parts: list = []
+
+    def save_at(chunk_state, r1, parts):
+        nonlocal last_saved
+        _save_checkpoint(
+            cfg.checkpoint_dir, r1, FederatedState(*chunk_state),
+            jnp.concatenate(obj_prefix + [p[0] for p in parts]),
+            jnp.concatenate(mse_prefix + [p[1] for p in parts]),
+            CommLedger.concat(ledger_prefix + [p[2] for p in parts]),
+            fingerprint)
+        last_saved = r1
+
+    def on_chunk(chunk_state, r1, parts):
+        last_parts[:] = parts
+        if not checkpointing:
+            return
+        if r1 % cfg.checkpoint_every and r1 != R:
+            return
+        save_at(chunk_state, r1, parts)
+
+    chunk_state, traces, iterations, _stopped = run_chunked(
+        run_chunk, (state.w, state.u, state.u_recv, state.z_recv),
+        total=R, start=start_round, chunk_size=step_rounds, tol=cfg.tol,
+        on_chunk=on_chunk)
+    if checkpointing and last_parts and last_saved != iterations:
+        # a tol-stop can land between checkpoint_every boundaries; the
+        # converged final state must still be saved
+        save_at(chunk_state, iterations, last_parts)
+    w, u, u_recv, z_recv = chunk_state
+    obj_parts = obj_prefix + ([traces[0]] if traces is not None else [])
+    mse_parts = mse_prefix + ([traces[1]] if traces is not None else [])
+    ledger_parts = ledger_prefix + ([traces[2]]
+                                    if traces is not None else [])
     objective = (jnp.concatenate(obj_parts) if obj_parts
                  else jnp.zeros((0,), jnp.float32))
     mse_tr = (jnp.concatenate(mse_parts) if mse_parts
@@ -484,8 +563,11 @@ def run_federated(problem: Problem, config: FederatedConfig | None = None,
 
     diagnostics = (certificate(problem, w, u) if cfg.compute_diagnostics
                    else {})
+    if with_residual:
+        diagnostics = dict(diagnostics)
+        diagnostics["iterations"] = int(iterations)
     return FederatedResult(
         w=w, u=u, objective=objective,
         mse=None if w_true is None else mse_tr, lam=problem.lam,
-        diagnostics=diagnostics, ledger=ledger, schedule=schedule,
-        state=state)
+        diagnostics=diagnostics, ledger=ledger,
+        schedule=schedule[:iterations], state=state)

@@ -1,19 +1,27 @@
 """Pallas TPU kernel: fused primal-dual step (Algorithm 1, eqs. 14-15).
 
 The unfused ``pallas`` backend realizes one primal-dual iteration as four
-separate HBM round-trips (dense D^T u gather, affine prox, D apply, dual
-clip).  This kernel fuses the whole step: the grid runs over *node
+separate HBM round-trips (dense D^T u gather, prox, D apply, dual
+resolvent).  This kernel fuses the whole step: the grid runs over *node
 blocks* of an edge-blocked graph layout (``core.graph.EdgeBlockLayout``),
 and each grid step keeps its node window ``w``, the incident dual rows
-``u``, the prox parameters (P, b, tau) and the dual step/clip parameters
+``u``, the loss's prox parameters and the dual step/clip parameters
 VMEM-resident while it computes
 
-    primal gather-sum D^T u  ->  affine/ridge prox (eq. 21)
-    ->  D (2 w+ - w)         ->  dual box clip (step 10)
+    primal gather-sum D^T u  ->  loss prox (eq. 18)
+    ->  D (2 w+ - w)         ->  regularizer dual resolvent (step 10)
 
 emitting ``w+`` and ``u+`` with one HBM read and one write per tensor
 (halo rows are re-read by neighbouring blocks; the four intermediate
 edge/node signals never touch HBM).
+
+The loss and regularizer are *static template slots*: the prox
+parameters arrive as a tuple of per-node arrays (``loss.prox_setup``
+leaves, sorted by key) each getting its own windowed BlockSpec, and the
+in-kernel body is ``kernels.ref.pd_window_step`` — which itself runs the
+canonical ``repro.engine.step.pd_step`` through a window executor.  The
+iteration math is therefore stated once in the engine; this kernel is
+locked to it by the interpret-mode bit-parity tests.
 
 Layout contract (all index maps are plain ``i + j`` offsets because the
 layout pass aligns every block's halo window to exactly ``i * BV`` /
@@ -28,10 +36,6 @@ layout pass aligns every block's halo window to exactly ``i * BV`` /
 When the whole graph fits one block (``nb == 1``), ``iters > 1`` runs a
 ``fori_loop`` *inside* the kernel — multi-iteration fusion with the
 ``(w, u)`` carry never leaving VMEM.
-
-The in-kernel math is ``kernels.ref.pd_window_step``, shared with the jnp
-oracle ``kernels.ref.fused_pd_step_ref`` so the two paths are
-bit-comparable under the conformance suite.
 """
 from __future__ import annotations
 
@@ -45,7 +49,8 @@ from repro.kernels import ref as _ref
 
 
 def _make_kernel(bv: int, eb: int, kn: int, ktot: int, klo: int,
-                 rho: float, iters: int):
+                 num_params: int, loss, reg, pkeys: tuple, rho: float,
+                 iters: int):
     """Build the grid-step kernel for fixed layout extents."""
 
     def cat(refs):
@@ -59,10 +64,11 @@ def _make_kernel(bv: int, eb: int, kn: int, ktot: int, klo: int,
         u_refs = refs[pos:pos + ktot]; pos += ktot
         ie_refs = refs[pos:pos + kn]; pos += kn
         is_refs = refs[pos:pos + kn]; pos += kn
-        p_refs = refs[pos:pos + kn]; pos += kn
-        b_refs = refs[pos:pos + kn]; pos += kn
+        param_refs = [refs[pos + p * kn:pos + (p + 1) * kn]
+                      for p in range(num_params)]
+        pos += num_params * kn
         tau_refs = refs[pos:pos + kn]; pos += kn
-        src_ref, dst_ref, sig_ref, bnd_ref = refs[pos:pos + 4]; pos += 4
+        src_ref, dst_ref, sig_ref, la_ref = refs[pos:pos + 4]; pos += 4
         w_out_ref, u_out_ref = refs[pos:pos + 2]
 
         i = pl.program_id(0)
@@ -72,14 +78,16 @@ def _make_kernel(bv: int, eb: int, kn: int, ktot: int, klo: int,
         # storage ids -> window-local (clipped; sign 0 kills stray slots)
         el = jnp.clip(cat(ie_refs) - i * eb, 0, ew - 1)
         isg = cat(is_refs)
-        p_win, b_win, tau_win = cat(p_refs), cat(b_refs), cat(tau_refs)
+        params_win = tuple(cat(prefs) for prefs in param_refs)
+        tau_win = cat(tau_refs)
         sl = jnp.clip(src_ref[...][:, 0] - i * bv, 0, nw - 1)
         dl = jnp.clip(dst_ref[...][:, 0] - i * bv, 0, nw - 1)
-        sg, bd = sig_ref[...], bnd_ref[...]
+        sg, bd = sig_ref[...], la_ref[...]
 
         def one(w, u):
-            return _ref.pd_window_step(w, u, el, isg, p_win, b_win,
-                                       tau_win, sl, dl, sg, bd, klo=klo,
+            return _ref.pd_window_step(w, u, el, isg, params_win, tau_win,
+                                       sl, dl, sg, bd, loss=loss, reg=reg,
+                                       pkeys=pkeys, klo=klo,
                                        block_edges=eb, rho=rho)
 
         if iters == 1:
@@ -97,13 +105,14 @@ def _make_kernel(bv: int, eb: int, kn: int, ktot: int, klo: int,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "block_nodes", "block_edges", "kn", "klo", "khi", "rho", "iters",
-    "interpret"))
+    "loss", "reg", "pkeys", "block_nodes", "block_edges", "kn", "klo",
+    "khi", "rho", "iters", "interpret"))
 def fused_pd_step(w_store: jnp.ndarray, u_store: jnp.ndarray,
                   inc_edges: jnp.ndarray, inc_signs: jnp.ndarray,
-                  p: jnp.ndarray, b: jnp.ndarray, tau: jnp.ndarray,
+                  params: tuple, tau: jnp.ndarray,
                   src: jnp.ndarray, dst: jnp.ndarray, sigma: jnp.ndarray,
-                  bound: jnp.ndarray, *, block_nodes: int, block_edges: int,
+                  la: jnp.ndarray, *, loss, reg, pkeys: tuple,
+                  block_nodes: int, block_edges: int,
                   kn: int, klo: int, khi: int, rho: float = 1.0,
                   iters: int = 1, interpret: bool = False):
     """Fused PD step over the edge-blocked layout (storage shapes as
@@ -116,22 +125,23 @@ def fused_pd_step(w_store: jnp.ndarray, u_store: jnp.ndarray,
         raise ValueError("multi-iteration fusion requires a single block")
     n = w_store.shape[1]
     max_deg = inc_edges.shape[1]
+    params = tuple(params)
 
-    def nmap(j):
-        return lambda i, j=j: (i + j, 0)
+    def nmap(j, rank=2):
+        return lambda i, j=j: (i + j,) + (0,) * (rank - 1)
 
-    def nmap3(j):
-        return lambda i, j=j: (i + j, 0, 0)
-
+    param_specs = [
+        pl.BlockSpec((bv,) + leaf.shape[1:], nmap(j, leaf.ndim))
+        for leaf in params for j in range(kn)
+    ]
     in_specs = (
         [pl.BlockSpec((bv, n), nmap(j)) for j in range(kn)]          # w views
         + [pl.BlockSpec((eb, n), nmap(j)) for j in range(ktot)]      # u views
         + [pl.BlockSpec((bv, max_deg), nmap(j)) for j in range(kn)]  # inc ids
         + [pl.BlockSpec((bv, max_deg), nmap(j)) for j in range(kn)]  # inc sign
-        + [pl.BlockSpec((bv, n, n), nmap3(j)) for j in range(kn)]    # P
-        + [pl.BlockSpec((bv, n), nmap(j)) for j in range(kn)]        # b
+        + param_specs                                                # prox
         + [pl.BlockSpec((bv, 1), nmap(j)) for j in range(kn)]        # tau
-        + [pl.BlockSpec((eb, 1), nmap(0))] * 4                       # src/dst/sig/bnd
+        + [pl.BlockSpec((eb, 1), nmap(0))] * 4                       # src/dst/sig/la
     )
     out_specs = [pl.BlockSpec((bv, n), nmap(0)),
                  pl.BlockSpec((eb, n), nmap(0))]
@@ -140,11 +150,13 @@ def fused_pd_step(w_store: jnp.ndarray, u_store: jnp.ndarray,
 
     operands = (
         [w_store] * kn + [u_store] * ktot + [inc_edges] * kn
-        + [inc_signs] * kn + [p] * kn + [b] * kn + [tau] * kn
-        + [src, dst, sigma, bound]
+        + [inc_signs] * kn
+        + [leaf for leaf in params for _ in range(kn)]
+        + [tau] * kn + [src, dst, sigma, la]
     )
     w_new, u_new = pl.pallas_call(
-        _make_kernel(bv, eb, kn, ktot, klo, rho, iters),
+        _make_kernel(bv, eb, kn, ktot, klo, len(params), loss, reg,
+                     pkeys, rho, iters),
         grid=(nb,),
         in_specs=in_specs,
         out_specs=out_specs,

@@ -2,11 +2,21 @@
 
 Each function is the semantic ground truth the corresponding kernel must
 match (tests sweep shapes/dtypes and assert_allclose against these).
+
+The fused primal-dual window step is *not* restated here: it is the
+canonical :func:`repro.engine.step.pd_step` evaluated through a
+:class:`repro.engine.executors.WindowExecutor`, so the Pallas kernel,
+the jnp oracle, and every other backend share one statement of the
+iteration math (the bit-parity tests in ``tests/test_engine.py`` and
+``tests/test_kernels.py`` pin the kernel to it).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.engine.executors import WindowExecutor
+from repro.engine.step import pd_step as _engine_pd_step
 
 
 def tv_prox_ref(u: jnp.ndarray, bound: jnp.ndarray) -> jnp.ndarray:
@@ -28,63 +38,55 @@ def batched_affine_ref(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
 
 def pd_window_step(w_win: jnp.ndarray, u_win: jnp.ndarray,
                    inc_local: jnp.ndarray, inc_signs: jnp.ndarray,
-                   p_win: jnp.ndarray, b_win: jnp.ndarray,
-                   tau_win: jnp.ndarray, src_local: jnp.ndarray,
-                   dst_local: jnp.ndarray, sigma: jnp.ndarray,
-                   bound: jnp.ndarray, *, klo: int, block_edges: int,
+                   params_win: tuple, tau_win: jnp.ndarray,
+                   src_local: jnp.ndarray, dst_local: jnp.ndarray,
+                   sigma: jnp.ndarray, la: jnp.ndarray, *, loss, reg,
+                   pkeys: tuple, klo: int, block_edges: int,
                    rho: float = 1.0):
     """One fused primal-dual step on a single VMEM-resident window.
 
-    The single source of truth for the fused kernel's math — the Pallas
-    kernel (kernels/pd_step.py) runs exactly this function on its loaded
+    A thin adapter: builds the window executor and the windowed prox,
+    then runs the canonical engine step.  The Pallas kernel
+    (kernels/pd_step.py) runs exactly this function on its loaded
     window, so interpret-mode kernel output is bit-comparable to the jnp
     reference (:func:`fused_pd_step_ref`).
 
     Window shapes (see ``core.graph.EdgeBlockLayout``): ``w_win`` (NW, n),
     ``u_win`` (EW, n), ``inc_local`` / ``inc_signs`` (NW, max_deg) with
-    edge ids already relative to the window (pre-clipped), ``p_win``
-    (NW, n, n), ``b_win`` (NW, n), ``tau_win`` (NW, 1), and per *owned*
-    edge ``src_local`` / ``dst_local`` (EB,), ``sigma`` / ``bound``
-    (EB, 1).  Returns (w_relaxed_window (NW, n), u_new_owned (EB, n)):
-    primal gather-sum D^T u -> affine ridge prox -> D(2 w+ - w) -> dual
-    box clip, with Krasnosel'skii-Mann relaxation folded in when
-    ``rho != 1``.
+    edge ids already relative to the window (pre-clipped), ``params_win``
+    a tuple of per-node prox parameter windows (leaves (NW, ...), keyed
+    by the static ``pkeys`` — the sorted keys of ``loss.prox_setup``),
+    ``tau_win`` (NW, 1), and per *owned* edge ``src_local`` /
+    ``dst_local`` (EB,), ``sigma`` / ``la`` (EB, 1) with ``la`` the
+    pre-scaled ``lam * A_e`` (the canonical step runs at ``lam = 1``).
+    Returns (w_relaxed_window (NW, n), u_new_owned (EB, n)).
     """
-    n = u_win.shape[1]
-    # primal: dtu = D^T u via the padded incident-edge gather-sum
-    gathered = u_win[inc_local.reshape(-1)].reshape(
-        inc_local.shape + (n,))                          # (NW, max_deg, n)
-    dtu = jnp.einsum("vd,vdn->vn", inc_signs, gathered)
-    # affine (ridge) prox: w+ = P (v + b), eq. 21
-    v_in = w_win - tau_win * dtu
-    w_plus = jnp.einsum("vnk,vk->vn", p_win, v_in + b_win)
-    # dual: u+ = clip(u + sigma D(2 w+ - w))
-    y = 2.0 * w_plus - w_win
-    dw = y[src_local] - y[dst_local]                     # (EB, n)
-    eb = block_edges
-    u_own = jax.lax.slice_in_dim(u_win, klo * eb, (klo + 1) * eb)
-    u_plus = jnp.clip(u_own + sigma * dw, -bound, bound)
-    if rho == 1.0:
-        return w_plus, u_plus
-    w_out = w_win + rho * (w_plus - w_win)
-    u_out = jnp.clip(u_own + rho * (u_plus - u_own), -bound, bound)
-    return w_out, u_out
+    executor = WindowExecutor(
+        inc_local=inc_local, inc_signs=inc_signs, src_local=src_local,
+        dst_local=dst_local, weights=la, klo=klo, block_edges=block_edges)
+    params = dict(zip(pkeys, params_win))
+
+    def prox(v):
+        return loss.prox_apply(params, v)
+
+    return _engine_pd_step(executor, prox, reg, 1.0, tau_win, sigma,
+                           w_win, u_win, rho=rho)
 
 
 def fused_pd_step_ref(w_store: jnp.ndarray, u_store: jnp.ndarray,
                       inc_edges: jnp.ndarray, inc_signs: jnp.ndarray,
-                      p: jnp.ndarray, b: jnp.ndarray, tau: jnp.ndarray,
+                      params: tuple, tau: jnp.ndarray,
                       src: jnp.ndarray, dst: jnp.ndarray,
-                      sigma: jnp.ndarray, bound: jnp.ndarray, *,
-                      block_nodes: int, block_edges: int, kn: int,
-                      klo: int, khi: int, rho: float = 1.0,
+                      sigma: jnp.ndarray, la: jnp.ndarray, *, loss, reg,
+                      pkeys: tuple, block_nodes: int, block_edges: int,
+                      kn: int, klo: int, khi: int, rho: float = 1.0,
                       iters: int = 1):
     """jnp oracle for the fused PD kernel: vmap of the window step.
 
     Storage shapes (layout order, see ``EdgeBlockLayout``):
       w_store (nb*BV + (kn-1)*BV, n), u_store ((nb+klo+khi)*EB, n),
-      inc_edges/inc_signs/p/b/tau padded to the same node-store rows,
-      src/dst/sigma/bound (nb*EB, 1).
+      inc_edges/inc_signs/tau and every ``params`` leaf padded to the
+      same node-store rows, src/dst/sigma/la (nb*EB, 1).
     Returns (w_new (nb*BV, n), u_new (nb*EB, n)).  ``iters > 1`` (the
     whole-graph-in-VMEM multi-iteration fusion) requires nb == 1.
     """
@@ -96,26 +98,30 @@ def fused_pd_step_ref(w_store: jnp.ndarray, u_store: jnp.ndarray,
     nw, ew = kn * bv, (klo + 1 + khi) * eb
     max_deg = inc_edges.shape[1]
 
+    def node_slice(a, n0):
+        return jax.lax.dynamic_slice(
+            a, (n0,) + (0,) * (a.ndim - 1), (nw,) + a.shape[1:])
+
     def block(i):
         n0, e0 = i * bv, i * eb
         w_win = jax.lax.dynamic_slice(w_store, (n0, 0), (nw, n))
         u_win = jax.lax.dynamic_slice(u_store, (e0, 0), (ew, n))
         ie = jax.lax.dynamic_slice(inc_edges, (n0, 0), (nw, max_deg))
         isg = jax.lax.dynamic_slice(inc_signs, (n0, 0), (nw, max_deg))
-        p_win = jax.lax.dynamic_slice(p, (n0, 0, 0), (nw, n, n))
-        b_win = jax.lax.dynamic_slice(b, (n0, 0), (nw, n))
+        params_win = tuple(node_slice(a, n0) for a in params)
         tau_win = jax.lax.dynamic_slice(tau, (n0, 0), (nw, 1))
         sv = jax.lax.dynamic_slice(src, (e0, 0), (eb, 1))[:, 0]
         dv = jax.lax.dynamic_slice(dst, (e0, 0), (eb, 1))[:, 0]
         sg = jax.lax.dynamic_slice(sigma, (e0, 0), (eb, 1))
-        bd = jax.lax.dynamic_slice(bound, (e0, 0), (eb, 1))
+        bd = jax.lax.dynamic_slice(la, (e0, 0), (eb, 1))
         el = jnp.clip(ie - e0, 0, ew - 1)
         sl = jnp.clip(sv - n0, 0, nw - 1)
         dl = jnp.clip(dv - n0, 0, nw - 1)
 
         def one(w_win_, u_win_):
-            return pd_window_step(w_win_, u_win_, el, isg, p_win, b_win,
-                                  tau_win, sl, dl, sg, bd, klo=klo,
+            return pd_window_step(w_win_, u_win_, el, isg, params_win,
+                                  tau_win, sl, dl, sg, bd, loss=loss,
+                                  reg=reg, pkeys=pkeys, klo=klo,
                                   block_edges=eb, rho=rho)
 
         if iters == 1:

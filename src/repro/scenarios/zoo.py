@@ -1,4 +1,4 @@
-"""The concrete scenario zoo — six registered workloads.
+"""The concrete scenario zoo — eight registered workloads.
 
 Each scenario pins one point of the (graph family x data model x loss x
 regularizer) space the paper's template covers:
@@ -16,7 +16,14 @@ regularizer) space the paper's template covers:
                               steps),
   * ``clustered_logistic``  — clustered federated classification via
                               GTVMin (arXiv 2105.12769) with the §4.3
-                              logistic loss.
+                              logistic loss,
+  * ``sparse_lasso``        — the §4.2 high-dimensional regime
+                              (m_i < n): sparse per-cluster weights, the
+                              Lasso local loss with its ISTA prox,
+  * ``laplacian_smoothing`` — GTVMin quadratic coupling (``tv2``):
+                              a smoothly varying weight field on a ring,
+                              Laplacian-style smoothing instead of
+                              piecewise-constant clustering.
 
 Every builder takes ``(rng, smoke)`` and returns a
 :class:`~repro.data.synthetic.NetworkedDataset`; ``smoke=True`` shrinks
@@ -119,6 +126,46 @@ def pref_attach(rng: np.random.Generator, smoke: bool) -> NetworkedDataset:
     return make_regression_data(rng, graph, levels[gen], samples_per_node=5,
                                 num_labeled=max(V // 4, 4), noise_scale=0.1,
                                 clusters=gen)
+
+
+@register_scenario(
+    "sparse_lasso",
+    description="Paper §4.2 high-dim regime: m_i < n local samples, "
+                "sparse per-cluster weights, Lasso local loss (ISTA prox).",
+    graph_family="sbm", data_model="sparse high-dim regression",
+    loss="lasso", loss_kwargs={"alpha": 0.02, "num_inner": 30},
+    lam=1e-2, lam_path=(1e-3, 5e-3, 1e-2, 5e-2), metric="mse")
+def sparse_lasso(rng: np.random.Generator, smoke: bool) -> NetworkedDataset:
+    sizes, labeled = ((20, 20), 10) if smoke else ((60, 60), 24)
+    graph, assign = sbm_graph(rng, sizes, p_in=0.5, p_out=1e-3)
+    # sparse 4-dim weights, 3 samples per node: each node alone is
+    # under-determined, the TV coupling + l1 prox recover the support
+    levels = np.array([[2.0, 0.0, -1.5, 0.0],
+                       [0.0, -2.0, 0.0, 1.5]], np.float32)
+    return make_regression_data(rng, graph, levels[assign],
+                                samples_per_node=3, num_labeled=labeled,
+                                noise_scale=0.05, clusters=assign)
+
+
+@register_scenario(
+    "laplacian_smoothing",
+    description="GTVMin quadratic coupling (tv2): smoothly varying "
+                "weight field on a ring, squared loss.",
+    graph_family="watts_strogatz", data_model="smooth field regression",
+    regularizer="tv2", lam=5e-2, lam_path=(5e-3, 2e-2, 5e-2, 2e-1),
+    metric="mse")
+def laplacian_smoothing(rng: np.random.Generator,
+                        smoke: bool) -> NetworkedDataset:
+    V = 40 if smoke else 120
+    graph = watts_strogatz_graph(rng, V, k=4, p_rewire=0.05)
+    # a smooth (single-harmonic) field over the ring: the regime where
+    # quadratic coupling beats the piecewise-constant TV prior
+    t = 2.0 * np.pi * np.arange(V) / V
+    w_true = np.stack([1.5 * np.sin(t), 1.5 * np.cos(t)],
+                      axis=1).astype(np.float32)
+    return make_regression_data(rng, graph, w_true, samples_per_node=5,
+                                num_labeled=max(V // 4, 4),
+                                noise_scale=0.1)
 
 
 @register_scenario(

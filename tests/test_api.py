@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.api import (BACKENDS, LOSSES, REGULARIZERS, Problem, SolveResult,
-                       Solver, SolverConfig, SquaredLoss, TotalVariation,
+                       Solver, SolverConfig, SquaredLoss,
                        get_loss, get_regularizer, register_loss, solve_path)
 from repro.core.distributed import solve_and_unpermute
 from repro.core.losses import make_prox

@@ -109,5 +109,25 @@ def test_scenario_solves_to_finite_certificate(name):
 
 
 def test_conformance_covers_the_whole_zoo():
-    """The parametrization above really spans >= 6 scenarios."""
-    assert len(SCENARIOS) >= 6
+    """The parametrization above really spans >= 8 scenarios."""
+    assert len(SCENARIOS) >= 8
+
+
+@pytest.mark.parametrize("name", ["sparse_lasso", "clustered_logistic",
+                                  "laplacian_smoothing"])
+def test_engine_rows_do_not_silently_fall_back(name):
+    """The loss x backend rows the engine refactor unlocked must really
+    take the fused path (pre-engine code silently fell back to the
+    unfused dense engine for anything but squared+TV) and must run — not
+    raise — on the federated runtime."""
+    from repro.api.backends import _should_fuse
+    from repro.kernels import ops
+
+    inst, ref = dense_reference(name)
+    cfg = CONF.replace(backend="pallas", fused=True)
+    if not (ops._use_kernel_default()
+            and not inst.problem.loss.kernel_safe):
+        assert _should_fuse(inst.problem, cfg), name
+    fed = Solver(CONF.replace(backend="federated")).run(inst.problem)
+    w_diff = float(np.max(np.abs(np.asarray(fed.w) - np.asarray(ref.w))))
+    assert w_diff <= 1e-6, (name, w_diff)

@@ -71,6 +71,8 @@ def test_batched_affine_matches_ref(v, n, dtype):
 # fused primal-dual step (interpret kernel vs jnp oracle, shared layout)
 # ---------------------------------------------------------------------------
 def _fused_step_args(v, n, bv, seed=0, rho=1.9):
+    from repro.api.losses import SquaredLoss
+    from repro.api.regularizers import TotalVariation
     from repro.core.graph import plan_edge_blocks, sbm_graph
     rng = np.random.default_rng(seed)
     g, _ = sbm_graph(rng, (v // 2, v - v // 2), p_in=0.3, p_out=0.03)
@@ -80,20 +82,23 @@ def _fused_step_args(v, n, bv, seed=0, rho=1.9):
     pad = lambda a: jnp.pad(a, ((0, ext),) + ((0, 0),) * (a.ndim - 1))
     deg = jnp.sum(lt.inc_signs != 0.0, axis=1).astype(jnp.float32)
     tau = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 1.0)
+    # squared-loss prox params (P, b) in sorted-pkeys order ("b", "p")
+    p_win = pad(rnd(kk[2], (lt.nodes_pad, n, n), scale=0.1)
+                + jnp.eye(n)[None])
+    b_win = pad(rnd(kk[3], (lt.nodes_pad, n), scale=0.1))
     args = (
         pad(rnd(kk[0], (lt.nodes_pad, n))),
         jnp.pad(rnd(kk[1], (lt.edges_pad, n), scale=0.1),
                 ((lt.klo * lt.block_edges, lt.khi * lt.block_edges),
                  (0, 0))),
         pad(lt.inc_edges), pad(lt.inc_signs),
-        pad(rnd(kk[2], (lt.nodes_pad, n, n), scale=0.1)
-            + jnp.eye(n)[None]),
-        pad(rnd(kk[3], (lt.nodes_pad, n), scale=0.1)),
+        (b_win, p_win),
         pad(tau[:, None]), lt.src[:, None], lt.dst[:, None],
         jnp.full((lt.edges_pad, 1), 0.5),
         (1e-2 * lt.weights)[:, None],
     )
-    kw = dict(block_nodes=lt.block_nodes, block_edges=lt.block_edges,
+    kw = dict(loss=SquaredLoss(), reg=TotalVariation(), pkeys=("b", "p"),
+              block_nodes=lt.block_nodes, block_edges=lt.block_edges,
               kn=lt.kn, klo=lt.klo, khi=lt.khi, rho=rho)
     return args, kw
 

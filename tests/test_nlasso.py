@@ -11,8 +11,8 @@ import pytest
 
 from repro.core import baselines, losses as L
 from repro.core.graph import chain_graph
-from repro.core.nlasso import (nlasso, nlasso_continuation, pd_step,
-                               primal_dual_gap_certificate, solve_nlasso)
+from repro.core.nlasso import (nlasso, nlasso_continuation,
+                               primal_dual_gap_certificate)
 from repro.data.synthetic import make_classification_sbm, make_sbm_regression
 
 

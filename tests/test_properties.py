@@ -1,5 +1,4 @@
 """Hypothesis property tests on system invariants (brief deliverable c)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -7,11 +6,16 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.api.regularizers import TotalVariation
 from repro.core import losses as L
 from repro.core.graph import build_graph
-from repro.core.nlasso import clip_dual
-from repro.kernels import ref
 from repro.kernels.tv_prox import tv_prox
+
+
+def clip_dual(u, bound):
+    """The TV dual clip (one registry implementation since the engine
+    refactor): project u onto {|u_j^(e)| <= bound_e}."""
+    return TotalVariation._clip(u, bound, None)
 
 
 @settings(max_examples=30, deadline=None)
