@@ -1,0 +1,167 @@
+"""Serving benchmark: warm-started re-solve latency under an update stream.
+
+The serving claim: a long-lived GTVMin session answering a stream of
+small data deltas should re-certify (eq.-11 residual <= tol) in a small
+fraction of the cold-start iteration count, because the primal/dual
+state cached from the previous solve is already near the new fixed
+point.  This benchmark drives a :class:`repro.serving.SolveService`
+session through a synthetic drift + edge-churn stream
+(``repro.serving.stream``) and, for every event, answers it twice:
+warm (the service path) and cold (from zeros against the *same*
+problem state), so the warm-vs-cold comparison is per-instance honest.
+
+Reported: p50/p99/mean request latency (warm and cold), the
+warm-vs-cold iteration ratio split by event kind (data-only vs
+structural edge churn), plan-cache hit rate, and the per-tenant
+service ledger.  A second tenant serving the same graph structure with
+different data measures cross-tenant plan sharing.
+
+The full run lands in ``BENCH_serving.json`` at the repo root (plus
+``results/benchmarks/serving.json``); smoke runs write
+``BENCH_serving_smoke.json`` so CI never clobbers the committed
+baseline.  ``warm_cold_iter_ratio_data`` is the acceptance column
+(<= 0.2 gates ``ok``: warm re-solves on small deltas within 1/5 of
+cold).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import save_result
+
+NUM_STEPS = 30
+SMOKE_STEPS = 6
+CHURN_EVERY = 5
+SMOKE_CHURN_EVERY = 3
+LAM = 1e-2
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_PATH = os.path.join(REPO_ROOT, "BENCH_serving.json")
+# smoke (CI) runs must not clobber the committed full-run baseline
+BENCH_SMOKE_PATH = os.path.join(REPO_ROOT, "BENCH_serving_smoke.json")
+
+METHODOLOGY = (
+    "One SolveService session per tenant (sbm_regression scenario, "
+    f"lam={LAM}, tol-certified solves at the service default config) "
+    "driven through a synthetic update stream: each step replaces the "
+    "labels of 5% of the nodes with drifted values (noise at 5% "
+    "of the label std); every "
+    "churn-th step also drops one random edge and adds one random "
+    "non-edge (structural event: new structure hash, dual transfer, "
+    "re-plan).  Every event is answered twice — warm (cached state) "
+    "then cold (from zeros, same problem state) — so iteration ratios "
+    "compare identical instances.  Latencies are wall-clock per "
+    "request on the cache-hot service (the first cold solve pays the "
+    "XLA compile and is reported separately as compile_seconds). "
+    "warm_cold_iter_ratio_* = sum(warm iters) / sum(cold iters) over "
+    "data-only / structural events.  tenant_b re-serves the same graph "
+    "structure with re-seeded data to measure cross-tenant plan "
+    "sharing (expect cache_hit=True, compiled=False on its cold "
+    "solve)."
+)
+
+
+def run(seed: int = 0, verbose: bool = True,
+        smoke: bool | None = None) -> dict:
+    import jax
+
+    from repro.scenarios import SCENARIOS
+    from repro.serving import SolveService, latency_stats, replay, \
+        synthetic_stream
+
+    if smoke is None:
+        smoke = bool(os.environ.get("REPRO_SMOKE"))
+    num_steps = SMOKE_STEPS if smoke else NUM_STEPS
+    churn_every = SMOKE_CHURN_EVERY if smoke else CHURN_EVERY
+
+    rng = np.random.default_rng(seed)
+    inst = SCENARIOS["sbm_regression"].build(seed=seed, smoke=True)
+    problem = inst.problem.with_lam(LAM)
+
+    svc = SolveService()
+    sid = svc.create_session("tenant_a", problem)
+
+    # session admission: the first solve pays plan build + XLA compile
+    first = svc.solve(sid)
+    compile_seconds = first.seconds
+
+    events = synthetic_stream(rng, problem.data, problem.graph,
+                              num_steps=num_steps,
+                              drift_fraction=0.05, drift_scale=0.05,
+                              churn_every=churn_every)
+    records = replay(svc, sid, events, cold_reference=True)
+
+    data_recs = [r for r in records if not r["structural"]]
+    struct_recs = [r for r in records if r["structural"]]
+
+    def iter_ratio(recs):
+        warm = sum(r["warm_iterations"] for r in recs)
+        cold = sum(r["cold_iterations"] for r in recs)
+        return warm / cold if cold else float("nan")
+
+    # cross-tenant plan sharing: same structure, re-seeded data
+    inst_b = SCENARIOS["sbm_regression"].build(seed=seed, smoke=True)
+    sid_b = svc.create_session("tenant_b", inst_b.problem.with_lam(LAM))
+    resp_b = svc.solve(sid_b)
+
+    ratio_data = iter_ratio(data_recs)
+    payload = {
+        "scenario": "sbm_regression",
+        "lam": LAM,
+        "tol": svc.config.tol,
+        "num_steps": num_steps,
+        "churn_every": churn_every,
+        "compile_seconds": compile_seconds,
+        "cold_start_iterations": first.iterations,
+        "latency_warm": latency_stats(records, "warm_seconds"),
+        "latency_cold": latency_stats(records, "cold_seconds"),
+        "warm_cold_iter_ratio_data": ratio_data,
+        "warm_cold_iter_ratio_structural": iter_ratio(struct_recs),
+        "sla_met_fraction": float(np.mean(
+            [r["warm_meets_sla"] for r in records])),
+        "max_warm_residual": float(max(
+            r["warm_residual"] for r in records)),
+        "cross_tenant_plan_hit": bool(resp_b.cache_hit
+                                      and not resp_b.compiled),
+        "records": records,
+        "service": svc.summary(),
+        "smoke": bool(smoke),
+        "backend": jax.default_backend(),
+        "methodology": METHODOLOGY,
+        "ok": bool(ratio_data <= 0.2 and resp_b.cache_hit),
+    }
+    save_result("serving", payload)
+    out_path = BENCH_SMOKE_PATH if smoke else BENCH_PATH
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    if verbose:
+        lw, lc = payload["latency_warm"], payload["latency_cold"]
+        print(f"cold start: {first.iterations} iters, "
+              f"{compile_seconds:.2f}s (incl. compile)")
+        print(f"warm latency  p50={lw['p50'] * 1e3:7.1f}ms "
+              f"p99={lw['p99'] * 1e3:7.1f}ms")
+        print(f"cold latency  p50={lc['p50'] * 1e3:7.1f}ms "
+              f"p99={lc['p99'] * 1e3:7.1f}ms")
+        print(f"warm/cold iterations: data-only={ratio_data:.3f} "
+              f"structural={payload['warm_cold_iter_ratio_structural']:.3f}")
+        print(f"SLA met on {payload['sla_met_fraction']:.0%} of requests "
+              f"(max residual {payload['max_warm_residual']:.2e}, "
+              f"tol {svc.config.tol})")
+        print(f"cross-tenant plan hit: {payload['cross_tenant_plan_hit']}")
+        print(f"acceptance gate (data-only ratio <= 0.2): "
+              f"{'PASS' if payload['ok'] else 'FAIL'}")
+        print(f"wrote {out_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short stream (CI smoke mode)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(seed=args.seed, smoke=args.smoke or None)

@@ -1,6 +1,6 @@
 """Experiment harness: sweep scenarios x backends x lambda, emit a report.
 
-Two modes:
+Three modes:
 
 ``--mode sweep`` (default) runs every registered scenario (or a
 ``--scenarios`` subset) through the requested backends over the
@@ -20,11 +20,20 @@ writes a *communication-vs-accuracy* report: final reference metrics,
 the ledger totals, and a downsampled (cumulative bytes, objective) curve
 per configuration — ``federated_report.json`` / ``federated_report.csv``.
 
+``--mode serving`` drives one :class:`repro.serving.SolveService` session
+per (scenario, intensity) through a synthetic update stream and reports
+the warm-start payoff — warm-vs-cold iteration ratio, p50/p99 request
+latency, SLA fraction, plan-cache stats — as the stream intensity sweeps
+from almost-static to nearly-cold: ``serving_report.json`` /
+``serving_report.csv``.
+
     python experiments/run.py --smoke                  # CI-sized sweep
     python experiments/run.py --scenarios grid2d,small_world \
         --backends dense,pallas --out results/experiments
     python experiments/run.py --mode federated --smoke \
         --participation full,bernoulli:0.5 --compression none,int8
+    python experiments/run.py --mode serving --smoke \
+        --intensities 0.05,0.2 --churn-every 3
 
 ``REPRO_SOLVER_MAX_ITERS`` caps every solve phase (the CI smoke knob).
 """
@@ -134,6 +143,117 @@ def run_scenario(name: str, backends: list[str], *, seed: int, smoke: bool,
             skips.append({"scenario": name, "backend": backend,
                           "reason": str(e)})
     return rows, skips
+
+
+# ---------------------------------------------------------------------------
+# Serving mode: warm-start payoff over update-stream intensities
+# ---------------------------------------------------------------------------
+
+SERVING_CSV_FIELDS = ("scenario", "drift_fraction", "drift_scale",
+                      "churn_every", "steps", "lam", "tol",
+                      "cold_start_iterations", "warm_cold_iter_ratio",
+                      "latency_p50_ms", "latency_p99_ms",
+                      "sla_met_fraction", "max_residual",
+                      "cache_hit_rate", "compiles", "seconds", "status")
+
+
+def run_serving_scenario(name: str, intensities, *, seed: int, smoke: bool,
+                         steps: int, churn_every: int):
+    """One SolveService session per (scenario, intensity) row.
+
+    Each row replays a ``steps``-event drift stream at the given
+    intensity (drift_fraction; noise scale rides it at 2x) and answers
+    every event warm *and* cold, so the warm-vs-cold iteration ratio is
+    measured against the identical problem state.  Intensity sweeps the
+    serving regime from "almost-static session" to "every solve is
+    nearly cold".
+    """
+    from repro.serving import SolveService, latency_stats, replay, \
+        synthetic_stream
+
+    scenario = get_scenario(name)
+    rows = []
+    for intensity in intensities:
+        inst = scenario.build(seed=seed, smoke=smoke)
+        problem = inst.problem.with_lam(float(scenario.lam))
+        svc = SolveService()
+        sid = svc.create_session("sweep", problem)
+        t0 = time.perf_counter()
+        first = svc.solve(sid)
+        rng = np.random.default_rng(seed + 1)
+        events = synthetic_stream(
+            rng, problem.data, problem.graph, num_steps=steps,
+            drift_fraction=intensity, drift_scale=2.0 * intensity,
+            churn_every=churn_every)
+        records = replay(svc, sid, events, cold_reference=True)
+        seconds = time.perf_counter() - t0
+        warm = sum(r["warm_iterations"] for r in records)
+        cold = sum(r["cold_iterations"] for r in records)
+        stats = latency_stats(records)
+        led = svc.ledger("sweep")
+        rows.append({
+            "scenario": name, "drift_fraction": float(intensity),
+            "drift_scale": 2.0 * float(intensity),
+            "churn_every": churn_every, "steps": steps,
+            "lam": float(scenario.lam), "tol": svc.config.tol,
+            "cold_start_iterations": first.iterations,
+            "warm_cold_iter_ratio": warm / cold if cold else None,
+            "latency_p50_ms": stats["p50"] * 1e3,
+            "latency_p99_ms": stats["p99"] * 1e3,
+            "sla_met_fraction": float(np.mean(
+                [r["warm_meets_sla"] for r in records])),
+            "max_residual": float(max(
+                r["warm_residual"] for r in records)),
+            "cache_hit_rate": led.cache_hit_rate,
+            "compiles": led.compiles,
+            "seconds": seconds, "status": "ok",
+        })
+    return rows
+
+
+def run_serving_mode(args) -> int:
+    names = (args.scenarios.split(",") if args.scenarios
+             else ["sbm_regression", "chain_changepoint"])
+    for name in names:
+        get_scenario(name)
+    intensities = [float(x) for x in args.intensities.split(",")]
+    steps = args.stream_steps if args.stream_steps else \
+        (4 if args.smoke else 12)
+
+    all_rows = []
+    for name in names:
+        t0 = time.perf_counter()
+        rows = run_serving_scenario(
+            name, intensities, seed=args.seed, smoke=args.smoke,
+            steps=steps, churn_every=args.churn_every)
+        all_rows.extend(rows)
+        print(f"[{name}] {len(rows)} serving intensities "
+              f"({time.perf_counter() - t0:.1f}s)")
+
+    report = {
+        "mode": "serving",
+        "config": {"seed": args.seed, "smoke": args.smoke,
+                   "scenarios": names, "intensities": intensities,
+                   "steps": steps, "churn_every": args.churn_every,
+                   "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                   "max_iters_env":
+                       os.environ.get("REPRO_SOLVER_MAX_ITERS")},
+        "rows": all_rows,
+    }
+    os.makedirs(args.out, exist_ok=True)
+    json_path = os.path.join(args.out, "serving_report.json")
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=2)
+    csv_path = os.path.join(args.out, "serving_report.csv")
+    with open(csv_path, "w", newline="") as f:
+        writer = csv.DictWriter(f, fieldnames=SERVING_CSV_FIELDS,
+                                extrasaction="ignore")
+        writer.writeheader()
+        writer.writerows(all_rows)
+    print(f"serving report: {json_path} ({len(all_rows)} rows over "
+          f"{len(names)} scenarios x {len(intensities)} intensities); "
+          f"csv: {csv_path}")
+    return 0
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +385,7 @@ def run_federated_mode(args) -> int:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--mode", choices=("sweep", "federated"),
+    ap.add_argument("--mode", choices=("sweep", "federated", "serving"),
                     default="sweep")
     ap.add_argument("--scenarios", default=None,
                     help="comma-separated subset (default: all registered)")
@@ -294,10 +414,24 @@ def main(argv=None) -> int:
     ap.add_argument("--rounds", type=int, default=None,
                     help="federated mode: rounds per run "
                          "(default 2000, smoke 500)")
+    # serving-mode knobs
+    ap.add_argument("--intensities", default="0.02,0.05,0.1,0.25",
+                    help="serving mode: comma list of update-stream "
+                         "intensities (drift_fraction per step; noise "
+                         "scale rides at 2x)")
+    ap.add_argument("--stream-steps", type=int, default=None,
+                    dest="stream_steps",
+                    help="serving mode: events per stream "
+                         "(default 12, smoke 4)")
+    ap.add_argument("--churn-every", type=int, default=0,
+                    dest="churn_every",
+                    help="serving mode: edge-churn cadence (0 disables)")
     args = ap.parse_args(argv)
 
     if args.mode == "federated":
         return run_federated_mode(args)
+    if args.mode == "serving":
+        return run_serving_mode(args)
 
     names = (args.scenarios.split(",") if args.scenarios
              else sorted(SCENARIOS))

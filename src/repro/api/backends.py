@@ -160,7 +160,8 @@ def make_metrics_fn(loss: Loss, reg: Regularizer, graph, data, lam, w_true):
 
 def _dense_scan_impl(graph, data, lam, w0, u0, w_true, *, loss: Loss,
                      reg: Regularizer, num_iters: int, rho: float,
-                     metric_every: int, clip_fn, affine_fn):
+                     metric_every: int, clip_fn, affine_fn,
+                     record_residual: bool = False):
     """The jitted engine: scan Algorithm 1, recording metrics on a cadence.
 
     ``loss``/``reg`` are static (hashable frozen dataclasses), so repeated
@@ -180,15 +181,27 @@ def _dense_scan_impl(graph, data, lam, w0, u0, w_true, *, loss: Loss,
         return engine_pd_step(executor, prox, reg, lam, tau, sigma, w, u,
                               rho=rho, clip_fn=clip_fn)
 
-    (w, u), (obj_trace, mse_trace) = scan_solve(
+    residual_fn = None
+    if record_residual:
+        def residual_fn(prev, new):
+            return pd_residual(tau, sigma, prev[0], prev[1], new[0],
+                               new[1])
+
+    (w, u), traces = scan_solve(
         run_block, lambda s: metrics(s[0]), (w0, u0),
-        num_iters=num_iters, metric_every=metric_every)
-    return w, u, obj_trace, mse_trace
+        num_iters=num_iters, metric_every=metric_every,
+        residual_fn=residual_fn)
+    if record_residual:
+        (obj_trace, mse_trace), res_trace = traces
+    else:
+        (obj_trace, mse_trace), res_trace = traces, None
+    return w, u, obj_trace, mse_trace, res_trace
 
 
 _dense_scan = _jit(_dense_scan_impl,
                    static_argnames=("loss", "reg", "num_iters", "rho",
-                                    "metric_every", "clip_fn", "affine_fn"),
+                                    "metric_every", "clip_fn", "affine_fn",
+                                    "record_residual"),
                    donate_argnums=(3, 4))
 
 
@@ -243,12 +256,13 @@ def _solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
     if config.tol is None or config.num_iters == 0:
         # a 0-iteration budget degenerates to the (0-length) scan; the
         # chunk loop would have no chunks and hence no traces to return
-        w, u, obj, mse = _dense_scan(
+        w, u, obj, mse, res = _dense_scan(
             problem.graph, problem.data, problem.lam, w0, u0, w_true,
             loss=problem.loss, reg=problem.regularizer,
             num_iters=config.num_iters, rho=config.rho,
             metric_every=config.metric_every, clip_fn=clip_fn,
-            affine_fn=affine_fn)
+            affine_fn=affine_fn,
+            record_residual=config.record_residual)
         iterations = config.num_iters
     else:
         # per-solve prox setup happens once, not once per chunk
@@ -259,22 +273,23 @@ def _solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
             params = None
 
         def run_chunk(state, r0, r1):
-            w_, u_, obj_, mse_, res = _dense_chunk(
+            w_, u_, obj_, mse_, res_ = _dense_chunk(
                 problem.graph, problem.data, problem.lam, state[0],
                 state[1], w_true, params, loss=problem.loss,
                 reg=problem.regularizer, rho=config.rho,
                 metric_every=r1 - r0, clip_fn=clip_fn,
                 affine_fn=affine_fn)
-            return (w_, u_), (obj_, mse_), res
+            # the chunk-max residual doubles as the certificate trace
+            return (w_, u_), (obj_, mse_, res_[None]), res_
 
-        (w, u), (obj, mse), iterations, _ = run_chunked(
+        (w, u), (obj, mse, res), iterations, _ = run_chunked(
             run_chunk, (w0, u0), total=config.num_iters,
             chunk_size=config.metric_every, tol=config.tol)
     diag = _with_iterations(_diagnostics(problem, w, u, config), config,
                             iterations)
     return SolveResult(w=w, u=u, objective=obj,
                        mse=None if w_true is None else mse,
-                       lam=problem.lam, diagnostics=diag)
+                       lam=problem.lam, diagnostics=diag, residual=res)
 
 
 def resolve_kernel_hooks(problem: Problem, config: SolverConfig,
@@ -453,7 +468,7 @@ def _fused_run_iters(lt, inc_e, inc_s, params_s, pkeys, tau_s, src2, dst2,
 def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, layout_arrays,
                      inc_arrays, *, loss: Loss, reg: Regularizer,
                      layout, num_iters: int, rho: float, metric_every: int,
-                     use_kernel: bool):
+                     use_kernel: bool, record_residual: bool = False):
     """Jitted fused engine: scan the fused PD step over the edge-blocked
     layout, recording metrics (in original node order, exactly the dense
     engine's formulas) on the cadence.
@@ -464,7 +479,7 @@ def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, layout_arrays,
     """
     lt = layout
     inc_e, inc_s = inc_arrays
-    (params_s, pkeys, _tau_l, tau_s, _sig_l, sig2, src2, dst2, la2,
+    (params_s, pkeys, tau_l, tau_s, sig_l, sig2, src2, dst2, la2,
      metrics) = _fused_setup(graph, data, lam, w_true, layout_arrays,
                              loss=loss, reg=reg, layout=lt)
 
@@ -474,20 +489,38 @@ def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, layout_arrays,
         use_kernel=use_kernel)
 
     eb, klo, khi = lt.block_edges, lt.klo, lt.khi
+
+    def owned(state):
+        w_store, u_store = state
+        return (jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad),
+                jax.lax.slice_in_dim(u_store, klo * eb,
+                                     klo * eb + lt.edges_pad))
+
+    residual_fn = None
+    if record_residual:
+        def residual_fn(prev, new):
+            w_p, u_p = owned(prev)
+            w_n, u_n = owned(new)
+            return pd_residual(tau_l, sig_l, w_p, u_p, w_n, u_n)
+
     w_store0 = lt.pad_node_store(w0_l)
     u_store0 = jnp.pad(u0_l, ((klo * eb, khi * eb), (0, 0)))
-    (w_store, u_store), (obj_trace, mse_trace) = scan_solve(
+    (w_store, u_store), traces = scan_solve(
         run_iters, lambda s: metrics(s[0]), (w_store0, u_store0),
         num_iters=num_iters, metric_every=metric_every,
-        multi_iter_block=(lt.num_blocks == 1))
-    w_l = jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad)
-    u_l = jax.lax.slice_in_dim(u_store, klo * eb, klo * eb + lt.edges_pad)
-    return w_l, u_l, obj_trace, mse_trace
+        multi_iter_block=(lt.num_blocks == 1), residual_fn=residual_fn)
+    if record_residual:
+        (obj_trace, mse_trace), res_trace = traces
+    else:
+        (obj_trace, mse_trace), res_trace = traces, None
+    w_l, u_l = owned((w_store, u_store))
+    return w_l, u_l, obj_trace, mse_trace, res_trace
 
 
 _fused_scan = _jit(_fused_scan_impl,
                    static_argnames=("loss", "reg", "layout", "num_iters",
-                                    "rho", "metric_every", "use_kernel"),
+                                    "rho", "metric_every", "use_kernel",
+                                    "record_residual"),
                    donate_argnums=(2, 3))
 
 
@@ -568,12 +601,13 @@ def _solve_fused(problem: Problem, config: SolverConfig, *, w0=None,
     use_kernel = ops._use_kernel_default()
     if config.tol is None or config.num_iters == 0:
         # 0-iteration budget: degenerate 0-length scan, no chunk loop
-        w_l, u_l, obj, mse = _fused_scan(
+        w_l, u_l, obj, mse, res = _fused_scan(
             problem.graph, data, w0_l, u0_l, problem.lam, w_true,
             layout_arrays, inc_arrays, loss=problem.loss,
             reg=problem.regularizer, layout=lt,
             num_iters=config.num_iters, rho=config.rho,
-            metric_every=config.metric_every, use_kernel=use_kernel)
+            metric_every=config.metric_every, use_kernel=use_kernel,
+            record_residual=config.record_residual)
         iterations = config.num_iters
     else:
         # per-solve setup (layout gathers, prox params, padded
@@ -589,16 +623,17 @@ def _solve_fused(problem: Problem, config: SolverConfig, *, w0=None,
                   jnp.pad(u0_l, ((klo * eb, lt.khi * eb), (0, 0))))
 
         def run_chunk(state, r0, r1):
-            w_s, u_s, obj_, mse_, res = _fused_chunk(
+            w_s, u_s, obj_, mse_, res_ = _fused_chunk(
                 problem.graph, data, state[0], state[1], problem.lam,
                 w_true, lt.node_inv, inc_stores, params_s,
                 (tau_l, tau_s), (sig_l, sig2), (src2, dst2, la2),
                 loss=problem.loss, reg=problem.regularizer, layout=lt,
                 pkeys=pkeys, rho=config.rho, metric_every=r1 - r0,
                 use_kernel=use_kernel)
-            return (w_s, u_s), (obj_, mse_), res
+            # the chunk-max residual doubles as the certificate trace
+            return (w_s, u_s), (obj_, mse_, res_[None]), res_
 
-        ((w_store, u_store), (obj, mse), iterations, _) = run_chunked(
+        ((w_store, u_store), (obj, mse, res), iterations, _) = run_chunked(
             run_chunk, store0, total=config.num_iters,
             chunk_size=config.metric_every, tol=config.tol)
         w_l = jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad)
@@ -610,7 +645,7 @@ def _solve_fused(problem: Problem, config: SolverConfig, *, w0=None,
                             iterations)
     return SolveResult(w=w, u=u, objective=obj,
                        mse=None if w_true is None else mse,
-                       lam=problem.lam, diagnostics=diag)
+                       lam=problem.lam, diagnostics=diag, residual=res)
 
 
 @register_backend("pallas")

@@ -102,6 +102,13 @@ class SolverConfig:
                     every backend; the stopping iteration lands in
                     ``diagnostics["iterations"]``.  Traces then have
                     length iterations // metric_every.
+      record_residual: record the eq.-11 fixed-point residual
+                    (engine.pd_residual) in ``SolveResult.residual`` at
+                    the metric cadence even without ``tol`` — the
+                    certificate-decay trace reports and the serving
+                    layer read.  tol runs always carry the residual
+                    trace (the stopping test computes it anyway);
+                    dense/pallas backends only.
 
     Continuation (beyond-paper warm-start schedule, see
     ``core.nlasso.nlasso_continuation`` for the rationale):
@@ -143,6 +150,7 @@ class SolverConfig:
     rho: float = 1.0
     metric_every: int = 1
     tol: float | None = None
+    record_residual: bool = False
     # continuation schedule
     continuation: bool = False
     warm_lam: float | None = None
@@ -187,6 +195,11 @@ class SolveResult:
       diagnostics: optimality certificate (eq. 11): ``dual_infeasibility``
                    always; ``stationarity_residual_labeled`` for the
                    squared loss.
+      residual:    (T,) eq.-11 fixed-point residual trace at the metric
+                   cadence (the certificate-decay curve; its last entry
+                   is the per-response serving SLA).  Populated on tol
+                   runs and ``record_residual`` runs of the dense/pallas
+                   backends, else None.
     """
 
     w: jnp.ndarray
@@ -195,10 +208,11 @@ class SolveResult:
     mse: jnp.ndarray | None
     lam: jnp.ndarray | float
     diagnostics: dict
+    residual: jnp.ndarray | None = None
 
     def tree_flatten(self):
         return (self.w, self.u, self.objective, self.mse, self.lam,
-                self.diagnostics), None
+                self.diagnostics, self.residual), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):

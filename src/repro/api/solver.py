@@ -54,6 +54,7 @@ class Solver:
                     else _default_warm_lam(float(problem.lam)))
         warm_cfg = cfg.replace(
             continuation=False, compute_diagnostics=False,
+            record_residual=False,
             num_iters=_capped(cfg.warm_iters, cfg.metric_every))
         warm = backend(problem.with_lam(warm_lam), warm_cfg, w0=w0, u0=u0)
         # re-project the warm duals onto the target feasible set and debias
@@ -95,6 +96,7 @@ def solve_path(problem: Problem, lams, config: SolverConfig | None = None,
                 else _default_warm_lam(float(jnp.max(lams))))
     warm_cfg = cfg.replace(
         continuation=False, compute_diagnostics=False,
+        record_residual=False,
         num_iters=_capped(cfg.warm_iters, cfg.metric_every))
     warm = get_backend(cfg.backend)(problem.with_lam(warm_lam), warm_cfg)
 

@@ -20,11 +20,18 @@ Both D and D^T applications are dense, vectorized, and shard cleanly over a
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import weakref
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# structure hashes are content hashes of frozen arrays, so they are
+# computed once per graph *object* (EmpiricalGraph hashes by identity);
+# the weak cache never retains graphs
+_STRUCT_HASH_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -176,6 +183,31 @@ class EmpiricalGraph:
         """(V,) number of incident edges per node."""
         return jnp.sum(self.inc_signs != 0.0, axis=1)
 
+    def structure_hash(self) -> str:
+        """Canonical content hash of the graph structure.
+
+        Hashes (num_nodes, src, dst, weights) — everything a solve plan
+        (RCM order, edge-blocked layout, stepsizes) depends on, and
+        nothing the node-local data contributes.  Two graphs built from
+        the same edge set hash identically regardless of the input edge
+        order (``build_graph`` canonicalizes), so a serving plan cache
+        can key compiled layouts on it: same structure + different data
+        shares a plan, any edge add/drop/reweight changes the hash.
+
+        Computed once per graph object (content hashing pulls the edge
+        arrays to the host) and memoized in a weak cache.
+        """
+        cached = _STRUCT_HASH_CACHE.get(self)
+        if cached is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(np.int64(self.num_nodes).tobytes())
+            h.update(np.asarray(self.src, np.int64).tobytes())
+            h.update(np.asarray(self.dst, np.int64).tobytes())
+            h.update(np.asarray(self.weights, np.float32).tobytes())
+            cached = h.hexdigest()
+            _STRUCT_HASH_CACHE[self] = cached
+        return cached
+
     # -- incidence operator D and its transpose -----------------------------
     def incidence_apply(self, w: jnp.ndarray) -> jnp.ndarray:
         """Apply block-incidence D: (V, n) node signal -> (E, n) edge signal.
@@ -274,7 +306,7 @@ def plan_edge_blocks(graph: EmpiricalGraph,
     padding; the result is static aux the fused primal-dual kernel keys
     its BlockSpec index maps on.
     """
-    from repro.core.partition import rcm_order   # local: avoid import cycle
+    from repro.core.partition import rcm_order_cached   # local: avoid cycle
 
     V, E = graph.num_nodes, graph.num_edges
     src = np.asarray(graph.src, np.int64)
@@ -289,8 +321,12 @@ def plan_edge_blocks(graph: EmpiricalGraph,
     nb = -(-max(V, 1) // BV)
     V_pad = nb * BV
 
-    # 1. RCM relabel (bandwidth-minimizing => small halo windows)
-    order = (rcm_order(src, dst, V) if E else np.arange(V, dtype=np.int64))
+    # 1. RCM relabel (bandwidth-minimizing => small halo windows); orders
+    #    are memoized by structure hash, so re-planning an isomorphic
+    #    graph (a serving session rebuilt after a data-only update) skips
+    #    the BFS
+    order = (rcm_order_cached(graph) if E
+             else np.arange(V, dtype=np.int64))
     inv = np.empty(V, dtype=np.int64)
     inv[order] = np.arange(V)
     node_perm = np.full(V_pad, -1, dtype=np.int64)

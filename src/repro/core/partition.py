@@ -17,6 +17,7 @@ endpoint, and boundary statistics for the roofline model.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import numpy as np
 
@@ -141,6 +142,75 @@ def rcm_order(src: np.ndarray, dst: np.ndarray, num_nodes: int,
             queue.extend(ns.tolist())
     assert pos == V
     return order[::-1].copy() if reverse else order
+
+
+# RCM orders keyed by graph structure hash: re-planning an isomorphic
+# graph (e.g. a serving session whose data changed but whose edges did
+# not) reuses the BFS result.  Bounded LRU so long-lived services with
+# many distinct structures don't grow without limit.
+_RCM_CACHE: "OrderedDict[tuple[str, bool], np.ndarray]" = OrderedDict()
+_RCM_CACHE_MAX = 128
+
+
+def rcm_order_cached(graph: EmpiricalGraph,
+                     reverse: bool = True) -> np.ndarray:
+    """:func:`rcm_order` memoized by ``graph.structure_hash()``."""
+    key = (graph.structure_hash(), reverse)
+    order = _RCM_CACHE.get(key)
+    if order is None:
+        order = rcm_order(np.asarray(graph.src, np.int64),
+                          np.asarray(graph.dst, np.int64),
+                          graph.num_nodes, reverse=reverse)
+        order.setflags(write=False)
+        _RCM_CACHE[key] = order
+        while len(_RCM_CACHE) > _RCM_CACHE_MAX:
+            _RCM_CACHE.popitem(last=False)
+    else:
+        _RCM_CACHE.move_to_end(key)
+    return order
+
+
+def transfer_edge_duals(old_graph: EmpiricalGraph,
+                        new_graph: EmpiricalGraph, u_old) -> np.ndarray:
+    """Map an (E_old, n) dual vector onto a patched graph's edge set.
+
+    The warm-start story for edge add/drop patches: edges are matched by
+    their *unordered* endpoint pair, surviving any relabeling the patch
+    caused.  A matched edge whose stored orientation differs between the
+    two graphs (src/dst swapped) has its dual row negated — u_e lives on
+    the oriented difference w_src - w_dst, so flipping the orientation
+    flips the sign.  Unmatched (added) edges start from the zero dual,
+    exactly the cold initialization; dropped edges' rows vanish.
+
+    Host-side (numpy): edge patches are host events in the serving
+    layer.  Returns an (E_new, n) float32 array.
+    """
+    u_old = np.asarray(u_old, np.float32)
+    o_src = np.asarray(old_graph.src, np.int64)
+    o_dst = np.asarray(old_graph.dst, np.int64)
+    n_src = np.asarray(new_graph.src, np.int64)
+    n_dst = np.asarray(new_graph.dst, np.int64)
+    u_new = np.zeros((len(n_src),) + u_old.shape[1:], np.float32)
+    if not len(o_src) or not len(n_src):
+        return u_new
+
+    base = np.int64(max(old_graph.num_nodes, new_graph.num_nodes))
+    key_o = np.minimum(o_src, o_dst) * base + np.maximum(o_src, o_dst)
+    key_n = np.minimum(n_src, n_dst) * base + np.maximum(n_src, n_dst)
+    # orientation relative to canonical (src < dst): +1 canonical, -1
+    # flipped.  relative flip old -> new = product of the two.
+    sign_o = np.where(o_src < o_dst, 1.0, -1.0).astype(np.float32)
+    sign_n = np.where(n_src < n_dst, 1.0, -1.0).astype(np.float32)
+
+    sorter = np.argsort(key_o, kind="stable")
+    idx = np.searchsorted(key_o, key_n, sorter=sorter)
+    idx_c = np.minimum(idx, len(key_o) - 1)
+    found = key_o[sorter[idx_c]] == key_n
+    match = sorter[idx_c[found]]
+    sign = (sign_o[match] * sign_n[found]).reshape(
+        (-1,) + (1,) * (u_old.ndim - 1))
+    u_new[found] = u_old[match] * sign
+    return u_new
 
 
 def plan_partition(graph: EmpiricalGraph, assign: np.ndarray,

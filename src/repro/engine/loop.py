@@ -68,7 +68,8 @@ def default_warm_lam(lam: float) -> float:
 
 def scan_solve(run_block: Callable, metrics: Callable, state0, *,
                num_iters: int, metric_every: int,
-               multi_iter_block: bool = False):
+               multi_iter_block: bool = False,
+               residual_fn: Callable | None = None):
     """Scan ``num_iters`` iterations, recording ``metrics`` on a cadence.
 
     ``run_block(state, iters)`` advances the solver state; ``metrics``
@@ -82,23 +83,48 @@ def scan_solve(run_block: Callable, metrics: Callable, state0, *,
       * otherwise                 — a ``fori_loop`` of single steps per
         scan step.
 
+    ``residual_fn(prev_state, new_state) -> scalar`` (optional) records
+    the eq.-11 fixed-point residual of each metric block's *closing*
+    iteration: the block's last step runs outside the fori/multi-iter
+    fusion so both of its endpoint states are in hand.  The ys then
+    become ``(metrics_ys, residual_ys)``.
+
     Returns ``(final_state, ys)`` like ``jax.lax.scan``.
     """
-    if metric_every == 1:
+    if residual_fn is None:
+        if metric_every == 1:
+            def step(state, _):
+                new = run_block(state, 1)
+                return new, metrics(new)
+            length = num_iters
+        elif multi_iter_block:
+            def step(state, _):
+                new = run_block(state, metric_every)
+                return new, metrics(new)
+            length = num_iters // metric_every
+        else:
+            def step(state, _):
+                new = jax.lax.fori_loop(0, metric_every,
+                                        lambda _, s: run_block(s, 1), state)
+                return new, metrics(new)
+            length = num_iters // metric_every
+    elif metric_every == 1:
         def step(state, _):
             new = run_block(state, 1)
-            return new, metrics(new)
+            return new, (metrics(new), residual_fn(state, new))
         length = num_iters
     elif multi_iter_block:
         def step(state, _):
-            new = run_block(state, metric_every)
-            return new, metrics(new)
+            mid = run_block(state, metric_every - 1)
+            new = run_block(mid, 1)
+            return new, (metrics(new), residual_fn(mid, new))
         length = num_iters // metric_every
     else:
         def step(state, _):
-            new = jax.lax.fori_loop(0, metric_every,
+            mid = jax.lax.fori_loop(0, metric_every - 1,
                                     lambda _, s: run_block(s, 1), state)
-            return new, metrics(new)
+            new = run_block(mid, 1)
+            return new, (metrics(new), residual_fn(mid, new))
         length = num_iters // metric_every
     return jax.lax.scan(step, state0, None, length=length)
 

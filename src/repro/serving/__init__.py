@@ -1,0 +1,40 @@
+"""Streaming multi-tenant solve service (serving layer).
+
+Public surface::
+
+    from repro.serving import SolveService, DataDelta, EdgePatch
+
+    svc = SolveService()
+    sid = svc.create_session("tenant-a", problem)
+    resp = svc.solve(sid)                     # cold: builds the plan
+    svc.update_session(sid, delta=DataDelta(nodes=(3,), y=new_rows))
+    resp = svc.solve(sid)                     # warm + plan-cache hit
+    assert resp.residual <= resp.tol
+
+See ``service.py`` for the request surface, ``cache.py`` for plan
+reuse, ``ledger.py`` for per-tenant accounting, and ``stream.py`` for
+the synthetic update-stream benchmark harness.
+"""
+from repro.serving.cache import Plan, PlanCache, PlanKey
+from repro.serving.ledger import ServiceLedger
+from repro.serving.service import (DEFAULT_CONFIG, DataDelta, EdgePatch,
+                                   Session, SolveResponse, SolveService)
+from repro.serving.stream import (StreamEvent, latency_stats, replay,
+                                  synthetic_stream)
+
+__all__ = [
+    "DEFAULT_CONFIG",
+    "DataDelta",
+    "EdgePatch",
+    "Plan",
+    "PlanCache",
+    "PlanKey",
+    "ServiceLedger",
+    "Session",
+    "SolveResponse",
+    "SolveService",
+    "StreamEvent",
+    "latency_stats",
+    "replay",
+    "synthetic_stream",
+]

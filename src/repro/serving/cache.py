@@ -1,0 +1,135 @@
+"""Plan/executable cache for the solve service.
+
+A *plan* is everything a solve reuses that is expensive to rebuild but
+independent of the node-local data: the RCM order (memoized in
+``core.partition``), the :class:`~repro.core.graph.EdgeBlockLayout` for
+the fused pallas engine, and — through XLA's own executable cache — the
+compiled solve chunks.  Plans are keyed by
+
+    (graph structure hash, loss, regularizer, backend, shape signature)
+
+so two tenants serving the same graph *structure* with different data
+share one plan, while any edge add/drop/reweight (new structure hash)
+builds a fresh one.
+
+Compile accounting rides the *executable signature* — the plan key minus
+the structure hash.  XLA caches jitted executables by static args and
+shapes, not by graph content, so a plan-cache miss only pays an XLA
+trace when its exec-sig is new too; ``PlanCache`` tracks both so the
+:class:`~repro.serving.ledger.ServiceLedger` can report honest compile
+counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable
+
+from repro.api.problem import Problem, SolverConfig
+from repro.core.graph import EdgeBlockLayout
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """Cache key: structure + templates + backend + shapes.
+
+    ``loss`` / ``regularizer`` are the template reprs (dataclass reprs
+    are stable and capture parameters like a lasso alpha); ``shape_sig``
+    is (V, E, m_max, n, max_degree) — the tuple that determines every
+    traced array shape of the solve.
+    """
+
+    structure_hash: str
+    loss: str
+    regularizer: str
+    backend: str
+    shape_sig: tuple[int, int, int, int, int]
+
+    @classmethod
+    def for_problem(cls, problem: Problem,
+                    config: SolverConfig) -> "PlanKey":
+        g, d = problem.graph, problem.data
+        return cls(
+            structure_hash=g.structure_hash(),
+            loss=repr(problem.loss),
+            regularizer=repr(problem.regularizer),
+            backend=config.backend,
+            shape_sig=(g.num_nodes, g.num_edges, int(d.x.shape[1]),
+                       int(d.x.shape[2]), g.max_degree),
+        )
+
+    @property
+    def exec_sig(self) -> tuple:
+        """The XLA-executable facet of the key (no structure hash)."""
+        return (self.loss, self.regularizer, self.backend, self.shape_sig)
+
+
+@dataclasses.dataclass
+class Plan:
+    """One cached solve plan.
+
+    ``layout`` is the pre-planned edge-blocked layout (pallas backend;
+    None for dense, whose only plan state is the memoized RCM order and
+    the XLA executable).  ``uses`` counts lookups that returned this
+    plan, hit or miss.
+    """
+
+    key: PlanKey
+    layout: EdgeBlockLayout | None = None
+    uses: int = 0
+
+
+class PlanCache:
+    """LRU cache of :class:`Plan` objects, capped at ``max_entries``.
+
+    ``get_or_build`` is the one entry point: it returns ``(plan, hit,
+    compiled)`` where ``hit`` is a plan-cache hit and ``compiled`` marks
+    a miss whose executable signature was also new (the solve will pay
+    an XLA trace).
+    """
+
+    def __init__(self, max_entries: int = 64):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = int(max_entries)
+        self._plans: OrderedDict[PlanKey, Plan] = OrderedDict()
+        self._compiled_sigs: set[tuple] = set()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key: PlanKey) -> bool:
+        return key in self._plans
+
+    def get_or_build(self, key: PlanKey,
+                     build: Callable[[], Plan]) -> tuple[Plan, bool, bool]:
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._plans.move_to_end(key)
+            self.hits += 1
+            plan.uses += 1
+            return plan, True, False
+        self.misses += 1
+        compiled = key.exec_sig not in self._compiled_sigs
+        self._compiled_sigs.add(key.exec_sig)
+        plan = build()
+        plan.uses += 1
+        self._plans[key] = plan
+        while len(self._plans) > self.max_entries:
+            self._plans.popitem(last=False)
+            self.evictions += 1
+        return plan, False, compiled
+
+    def summary(self) -> dict[str, float]:
+        total = self.hits + self.misses
+        return {
+            "entries": float(len(self._plans)),
+            "hits": float(self.hits),
+            "misses": float(self.misses),
+            "hit_rate": float(self.hits / total) if total else 0.0,
+            "evictions": float(self.evictions),
+            "compiled_sigs": float(len(self._compiled_sigs)),
+        }

@@ -1,0 +1,108 @@
+"""ServiceLedger: per-tenant request accounting for the solve service.
+
+The serving twin of the federated :class:`~repro.federated.ledger
+.CommLedger`: where the federated runtime meters what a run costs *on
+the wire*, the service ledger meters what a tenant's request stream
+costs *in compute* — requests by kind, plan-cache hits/misses, compile
+events, iterations spent, and the iterations the warm-start machinery
+saved against each session's own cold baseline.
+
+Counters are plain host-side integers (requests are host events, unlike
+the per-round device traces the CommLedger concatenates); ``summary()``
+returns the same JSON/CSV-ready flat float dict shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class ServiceLedger:
+    """Per-tenant request/compute meter.
+
+    Attributes:
+      requests:     every service call made by the tenant
+                    (create/update/solve/solve_path/close).
+      creates, updates, solves, path_points, closes: per-kind splits
+                    (``solves`` counts solve_path points too, so it is
+                    the number of SolveResponses produced).
+      cache_hits, cache_misses: plan-cache outcomes of those solves.
+      compiles:     solves whose executable signature (loss, regularizer,
+                    backend, shapes) was new to the service — each one
+                    paid an XLA trace.
+      iterations:   total solver iterations run for the tenant.
+      iterations_cold_ref: sum, over *warm-started* solves, of the owning
+                    session's cold-solve iteration count (the baseline
+                    those solves are measured against).
+      iterations_saved: sum of max(cold_ref - iterations, 0) over
+                    warm-started solves — iterations not run thanks to
+                    warm starts.
+    """
+
+    tenant: str
+    requests: int = 0
+    creates: int = 0
+    updates: int = 0
+    solves: int = 0
+    path_points: int = 0
+    closes: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    compiles: int = 0
+    iterations: int = 0
+    iterations_cold_ref: int = 0
+    iterations_saved: int = 0
+
+    # -- recording -----------------------------------------------------------
+    def record_solve(self, *, cache_hit: bool, compiled: bool,
+                     iterations: int, cold_ref: int | None) -> None:
+        """One SolveResponse produced: cache outcome + iteration cost.
+
+        ``cold_ref`` is the owning session's cold-iterations baseline
+        when this solve was warm-started, None when it *is* the cold
+        solve (nothing to save against yet).
+        """
+        self.solves += 1
+        if cache_hit:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+        if compiled:
+            self.compiles += 1
+        self.iterations += int(iterations)
+        if cold_ref is not None:
+            self.iterations_cold_ref += int(cold_ref)
+            self.iterations_saved += max(int(cold_ref) - int(iterations), 0)
+
+    # -- aggregates ----------------------------------------------------------
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    @property
+    def warm_iteration_ratio(self) -> float:
+        """iterations-run / cold-baseline over warm solves (lower is
+        better; 1.0 means warm starts saved nothing)."""
+        if not self.iterations_cold_ref:
+            return 1.0
+        warm_iters = self.iterations_cold_ref - self.iterations_saved
+        return warm_iters / self.iterations_cold_ref
+
+    def summary(self) -> dict[str, float]:
+        """Flat float dict (JSON/CSV-ready) of the tenant's totals."""
+        return {
+            "requests": float(self.requests),
+            "creates": float(self.creates),
+            "updates": float(self.updates),
+            "solves": float(self.solves),
+            "path_points": float(self.path_points),
+            "closes": float(self.closes),
+            "cache_hits": float(self.cache_hits),
+            "cache_misses": float(self.cache_misses),
+            "cache_hit_rate": float(self.cache_hit_rate),
+            "compiles": float(self.compiles),
+            "iterations": float(self.iterations),
+            "iterations_saved": float(self.iterations_saved),
+            "warm_iteration_ratio": float(self.warm_iteration_ratio),
+        }

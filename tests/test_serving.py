@@ -1,0 +1,372 @@
+"""The serving layer: sessions, plans, warm starts, certificates.
+
+Locks the PR's serving invariants:
+
+  * **session lifecycle** — create / update / solve / close round-trips,
+    unknown ids raise, per-tenant session keys never collide,
+  * **plan sharing** — two graphs with the same *structure* (regardless
+    of edge insertion order or node data) hash identically and share one
+    cached plan; structure changes re-plan without re-compiling unless
+    shapes changed too,
+  * **cache eviction** — the plan cache is a bounded LRU,
+  * **warm-start correctness** — the dual-transfer permute helper maps
+    duals across edge relabelings including orientation flips, and a
+    warm re-solve after a chain-graph edge patch reaches the cold
+    solution to tolerance in a fraction of the iterations,
+  * **certificates** — every SolveResponse carries a finite eq.-11
+    residual <= tol, read from the recorded residual trace
+    (``SolverConfig.record_residual``), not recomputed,
+  * **ledger exactness** — the per-tenant request/cache/iteration
+    accounting matches a hand count.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Problem, Solver, SolverConfig
+from repro.core.graph import build_graph, chain_graph
+from repro.core.losses import NodeData
+from repro.core.partition import rcm_order_cached, transfer_edge_duals
+from repro.serving import (DataDelta, EdgePatch, Plan, PlanCache, PlanKey,
+                           SolveService, replay, synthetic_stream)
+
+# metric_every=10: the residual-check cadence is also the warm-solve
+# iteration floor, and the small test chains go cold in ~100 iterations
+CFG = SolverConfig(num_iters=4000, rho=1.9, metric_every=10, tol=1e-3,
+                   record_residual=True, backend="dense")
+
+
+def _chain_problem(v=40, n=2, seed=0, lam=5e-2, labeled_frac=1.0):
+    """Small chain-graph regression instance (changepoint signal).
+
+    ``labeled_frac < 1`` makes the cold solve slow (estimates must
+    propagate along the chain to the unlabeled nodes), the regime where
+    warm starts pay off.
+    """
+    rng = np.random.default_rng(seed)
+    g = chain_graph(rng, v)
+    w_true = np.where(np.arange(v)[:, None] < v // 2, 1.0, -1.0)
+    w_true = np.broadcast_to(w_true, (v, n)).astype(np.float32)
+    x = rng.standard_normal((v, 4, n)).astype(np.float32)
+    y = np.einsum("vmn,vn->vm", x, w_true)
+    y += 0.01 * rng.standard_normal(y.shape).astype(np.float32)
+    labeled = np.ones(v, np.float32)
+    if labeled_frac < 1.0:
+        labeled[:] = 0.0
+        k = max(int(round(labeled_frac * v)), 2)
+        labeled[rng.choice(v, size=k, replace=False)] = 1.0
+    data = NodeData(x=jnp.asarray(x), y=jnp.asarray(y),
+                    sample_mask=jnp.ones((v, 4), jnp.float32),
+                    labeled_mask=jnp.asarray(labeled))
+    return Problem.create(g, data, lam=lam)
+
+
+# ---------------------------------------------------------------------------
+# Structure hashing + plan cache
+# ---------------------------------------------------------------------------
+
+def test_structure_hash_ignores_edge_order_and_data():
+    edges = np.array([[0, 1], [1, 2], [0, 3]])
+    w = np.ones(3, np.float32)
+    g1 = build_graph(edges, w, 4)
+    g2 = build_graph(edges[::-1], w, 4)          # same set, reversed input
+    assert g1.structure_hash() == g2.structure_hash()
+    # any structural difference changes the hash
+    g3 = build_graph(edges[:2], w[:2], 4)
+    g4 = build_graph(edges, np.array([1, 1, 2], np.float32), 4)
+    assert g3.structure_hash() != g1.structure_hash()
+    assert g4.structure_hash() != g1.structure_hash()
+
+
+def test_rcm_order_cached_shares_across_isomorphic_graphs():
+    edges = np.array([[0, 1], [1, 2], [2, 3], [3, 4]])
+    w = np.ones(4, np.float32)
+    o1 = rcm_order_cached(build_graph(edges, w, 5))
+    o2 = rcm_order_cached(build_graph(edges, w, 5))
+    assert o1 is o2                              # memoized by structure
+    assert not o1.flags.writeable               # shared -> frozen
+
+
+def test_plan_cache_hits_and_evicts():
+    cache = PlanCache(max_entries=2)
+
+    def key(i):
+        return PlanKey(structure_hash=f"h{i}", loss="sq", regularizer="tv",
+                       backend="dense", shape_sig=(4, 3, 2, 2, 2))
+
+    p0, hit, compiled = cache.get_or_build(key(0), lambda: Plan(key(0)))
+    assert (hit, compiled) == (False, True)      # first exec-sig compiles
+    _, hit, compiled = cache.get_or_build(key(0), lambda: Plan(key(0)))
+    assert (hit, compiled) == (True, False)
+    # same exec-sig, new structure: plan miss but no new compile
+    _, hit, compiled = cache.get_or_build(key(1), lambda: Plan(key(1)))
+    assert (hit, compiled) == (False, False)
+    # capacity 2: inserting a third evicts the LRU entry (key 0 was
+    # touched last via the hit, so key 1 goes)
+    cache.get_or_build(key(0), lambda: Plan(key(0)))
+    cache.get_or_build(key(2), lambda: Plan(key(2)))
+    assert cache.evictions == 1
+    assert key(1) not in cache and key(0) in cache and key(2) in cache
+    assert len(cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# Dual transfer across edge patches (permute-helper correctness)
+# ---------------------------------------------------------------------------
+
+def test_transfer_edge_duals_identity_and_zero_fill():
+    edges = np.array([[0, 1], [1, 2], [2, 3]])
+    w = np.ones(3, np.float32)
+    g = build_graph(edges, w, 4)
+    u = np.arange(6, dtype=np.float32).reshape(3, 2)
+    # identity patch: exact carry-over
+    np.testing.assert_array_equal(transfer_edge_duals(g, g, u), u)
+    # drop the middle edge, add a new one: survivors keep their rows,
+    # the new edge starts at zero
+    g2 = build_graph(np.array([[0, 1], [2, 3], [0, 3]]),
+                     np.ones(3, np.float32), 4)
+    u2 = transfer_edge_duals(g, g2, u)
+    src2 = np.stack([np.asarray(g2.src), np.asarray(g2.dst)], 1).tolist()
+    np.testing.assert_array_equal(u2[src2.index([0, 1])], u[0])
+    np.testing.assert_array_equal(u2[src2.index([2, 3])], u[2])
+    np.testing.assert_array_equal(u2[src2.index([0, 3])], [0.0, 0.0])
+
+
+def test_transfer_edge_duals_orientation_flip():
+    """Duals live on the oriented difference w_src - w_dst: an edge
+    stored with opposite orientations in the two graphs (src/dst
+    swapped, as layout relabelings produce) must negate its dual row."""
+    edges = np.array([[0, 1], [1, 2]])
+    w = np.ones(2, np.float32)
+    g = build_graph(edges, w, 3)                # canonical: src < dst
+    # the same edges stored in flipped orientation (src > dst), as a
+    # relabeled layout would hold them
+    g_flip = dataclasses.replace(g, src=g.dst, dst=g.src)
+    u = np.array([[1.0, 2.0], [3.0, -4.0]], np.float32)
+    # flipped -> canonical: every row negates
+    np.testing.assert_array_equal(transfer_edge_duals(g_flip, g, u), -u)
+    # canonical -> flipped: negates too; round trip is the identity
+    np.testing.assert_array_equal(
+        transfer_edge_duals(g, g_flip, transfer_edge_duals(g_flip, g, u)),
+        u)
+    # mixed orientations: only the flipped row changes sign
+    g_mixed = dataclasses.replace(
+        g, src=jnp.asarray([g.src[0], g.dst[1]]),
+        dst=jnp.asarray([g.dst[0], g.src[1]]))
+    out = transfer_edge_duals(g_mixed, g, u)
+    np.testing.assert_array_equal(out[0], u[0])
+    np.testing.assert_array_equal(out[1], -u[1])
+
+
+def test_transfer_matches_cold_solution_after_chain_patch():
+    """Chain-graph patch regression: warm re-solve from transferred
+    duals reaches the cold-solve solution to tolerance, in a fraction
+    of the iterations."""
+    problem = _chain_problem()
+    solver = Solver(CFG)
+    base = solver.run(problem)
+
+    # patch: cut the chain at the changepoint, bridge two other nodes
+    v = problem.graph.num_nodes
+    cut = (v // 2 - 1, v // 2)
+    patch_edges = np.stack([np.asarray(problem.graph.src),
+                            np.asarray(problem.graph.dst)], 1)
+    keep = ~np.all(patch_edges == np.asarray(cut), axis=1)
+    new_edges = np.concatenate([patch_edges[keep], [[5, 30]]])
+    g_new = build_graph(new_edges, np.ones(len(new_edges), np.float32), v)
+    patched = dataclasses.replace(problem, graph=g_new)
+
+    cold = solver.run(patched)
+    u_warm = jnp.asarray(transfer_edge_duals(problem.graph, g_new,
+                                             np.asarray(base.u)))
+    u_warm = patched.regularizer.project_dual(u_warm, g_new, patched.lam)
+    warm = solver.run(patched, w0=jnp.copy(base.w), u0=u_warm)
+
+    assert float(warm.residual[-1]) <= CFG.tol
+    np.testing.assert_allclose(np.asarray(warm.w), np.asarray(cold.w),
+                               atol=5e-3)
+    assert (warm.diagnostics["iterations"]
+            <= cold.diagnostics["iterations"])
+
+
+# ---------------------------------------------------------------------------
+# Residual-certified traces (satellite: record_residual)
+# ---------------------------------------------------------------------------
+
+def test_record_residual_trace_without_tol():
+    problem = _chain_problem()
+    cfg = SolverConfig(num_iters=200, rho=1.9, metric_every=25,
+                       record_residual=True)
+    res = Solver(cfg).run(problem)
+    assert res.residual is not None
+    assert res.residual.shape == (200 // 25,)
+    assert np.all(np.isfinite(np.asarray(res.residual)))
+    # the recorded trace is the per-iteration eq.-11 residual at each
+    # metric boundary: strictly positive early, decreasing overall
+    trace = np.asarray(res.residual)
+    assert trace[-1] < trace[0]
+    # and recording must not perturb the numerics
+    plain = Solver(dataclasses.replace(cfg,
+                                       record_residual=False)).run(problem)
+    np.testing.assert_array_equal(np.asarray(res.w), np.asarray(plain.w))
+
+
+def test_tol_runs_always_carry_residual_trace():
+    res = Solver(CFG).run(_chain_problem())
+    assert res.residual is not None
+    assert float(res.residual[-1]) <= CFG.tol
+
+
+# ---------------------------------------------------------------------------
+# SolveService: lifecycle, warm starts, certificates, ledger
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def service():
+    return SolveService(config=CFG)
+
+
+def test_session_lifecycle(service):
+    problem = _chain_problem()
+    sid = service.create_session("t", problem)
+    assert sid.startswith("t/")
+    # same tenant + same structure: distinct session ids
+    sid2 = service.create_session("t", problem)
+    assert sid2 != sid
+    resp = service.solve(sid)
+    assert resp.session_id == sid and not resp.warm
+    service.close(sid)
+    service.close(sid2)
+    with pytest.raises(KeyError):
+        service.solve(sid)
+    with pytest.raises(KeyError):
+        service.close(sid)
+    with pytest.raises(KeyError):
+        service.update_session("nope")
+
+
+def test_every_response_carries_certificate(service):
+    problem = _chain_problem()
+    sid = service.create_session("t", problem)
+    responses = [service.solve(sid)]
+    service.update_session(sid, delta=DataDelta(
+        nodes=(0, 1), y=np.zeros((2,) + problem.data.y.shape[1:],
+                                 np.float32)))
+    responses.append(service.solve(sid))
+    service.update_session(sid, patch=EdgePatch(drop=((0, 1),),
+                                                add=((0, 2, 1.0),)))
+    responses.append(service.solve(sid))
+    responses.extend(service.solve_path(sid, [1e-2, 5e-2]))
+    for resp in responses:
+        assert np.isfinite(resp.residual)
+        assert resp.residual <= CFG.tol
+        assert resp.meets_sla
+        assert np.isfinite(resp.certificate["dual_infeasibility"])
+
+
+def test_warm_restart_beats_cold_on_small_delta(service):
+    # a longer, sparsely labeled chain: cold-start iterations grow with
+    # the label-propagation distance while a small-delta warm start
+    # stays near the fixed point, so the 1/5 ratio has headroom above
+    # the metric_every iteration floor
+    problem = _chain_problem(v=120, labeled_frac=0.15)
+    sid = service.create_session("t", problem)
+    cold = service.solve(sid)
+    rng = np.random.default_rng(0)
+    y = np.asarray(problem.data.y)
+    nodes = (3, 17)
+    rows = y[list(nodes)] + 0.02 * rng.standard_normal(
+        (2,) + y.shape[1:]).astype(np.float32)
+    service.update_session(sid, delta=DataDelta(nodes=nodes, y=rows))
+    warm = service.solve(sid)
+    assert warm.warm and warm.cache_hit and not warm.compiled
+    assert warm.iterations <= cold.iterations / 5
+    assert warm.residual <= CFG.tol
+
+
+def test_warm_solution_matches_cold_solution(service):
+    """Warm and cold solves of the identical post-update problem agree
+    to tolerance (the warm path converges to the same fixed point)."""
+    problem = _chain_problem()
+    sid = service.create_session("t", problem)
+    service.solve(sid)
+    service.update_session(sid, patch=EdgePatch(drop=((10, 11),)))
+    warm = service.solve(sid)
+    cold = service.solve(sid, cold=True)
+    np.testing.assert_allclose(np.asarray(warm.w), np.asarray(cold.w),
+                               atol=5e-3)
+
+
+def test_same_structure_different_data_shares_plan(service):
+    p1 = _chain_problem(seed=0)
+    p2 = _chain_problem(seed=1)                 # new data, same chain
+    assert p1.graph.structure_hash() == p2.graph.structure_hash()
+    s1 = service.create_session("a", p1)
+    s2 = service.create_session("b", p2)
+    r1 = service.solve(s1)
+    r2 = service.solve(s2)
+    assert not r1.cache_hit and r1.compiled
+    assert r2.cache_hit and not r2.compiled
+    assert len(service.plans) == 1
+
+
+def test_plan_cache_eviction_under_cap():
+    service = SolveService(config=CFG, max_plans=2)
+    sids = []
+    for v in (24, 32, 40):                      # three structures
+        sids.append(service.create_session("t", _chain_problem(v=v)))
+        service.solve(sids[-1])
+    assert len(service.plans) == 2
+    assert service.plans.evictions == 1
+    # re-solving the evicted structure is a plan miss, not an error
+    hits_before = service.plans.hits
+    service.solve(sids[0])
+    assert service.plans.hits == hits_before    # warm solve, plan rebuilt
+    assert service.plans.misses == 4
+
+
+def test_ledger_exactness(service):
+    problem = _chain_problem()
+    sid = service.create_session("t", problem)
+    cold = service.solve(sid)
+    service.update_session(sid, delta=DataDelta(
+        nodes=(2,), y=np.asarray(problem.data.y)[[2]] + 0.01))
+    warm = service.solve(sid)
+    service.close(sid)
+    led = service.ledger("t")
+    assert led.requests == 5                    # create+solve+update+solve+close
+    assert (led.creates, led.updates, led.solves, led.closes) == (1, 1, 2, 1)
+    assert led.cache_misses == 1 and led.cache_hits == 1
+    assert led.compiles == 1
+    assert led.iterations == cold.iterations + warm.iterations
+    assert led.iterations_saved == cold.iterations - warm.iterations
+    assert led.summary()["warm_iteration_ratio"] == pytest.approx(
+        warm.iterations / cold.iterations)
+
+
+def test_lam_update_reprojects_duals(service):
+    """Retargeting lambda keeps the warm duals feasible (projection) and
+    the next response still certifies."""
+    sid = service.create_session("t", _chain_problem(lam=5e-2))
+    service.solve(sid)
+    service.update_session(sid, lam=1e-2)       # tighter dual box
+    resp = service.solve(sid)
+    assert resp.meets_sla and resp.lam == pytest.approx(1e-2)
+
+
+def test_synthetic_stream_replay(service):
+    problem = _chain_problem()
+    sid = service.create_session("t", problem)
+    service.solve(sid)
+    rng = np.random.default_rng(0)
+    events = synthetic_stream(rng, problem.data, problem.graph,
+                              num_steps=3, drift_fraction=0.1,
+                              drift_scale=0.05, churn_every=2)
+    records = replay(service, sid, events)
+    assert len(records) == 3
+    assert records[1]["structural"]             # churn fired at step 2
+    assert all(r["warm_meets_sla"] for r in records)
+    sess = service.session(sid)
+    assert sess.updates == 3 and sess.solves == 4
