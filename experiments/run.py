@@ -149,12 +149,16 @@ def run_scenario(name: str, backends: list[str], *, seed: int, smoke: bool,
 # Serving mode: warm-start payoff over update-stream intensities
 # ---------------------------------------------------------------------------
 
-SERVING_CSV_FIELDS = ("scenario", "drift_fraction", "drift_scale",
+SERVING_CSV_FIELDS = ("scenario", "mode", "drift_fraction", "drift_scale",
                       "churn_every", "steps", "lam", "tol",
                       "cold_start_iterations", "warm_cold_iter_ratio",
                       "latency_p50_ms", "latency_p99_ms",
                       "sla_met_fraction", "max_residual",
-                      "cache_hit_rate", "compiles", "seconds", "status")
+                      "cache_hit_rate", "compiles",
+                      "batch_sessions", "sequential_ms", "batched_ms",
+                      "throughput_gain", "queue_flushes", "queue_batched",
+                      "persistence_replans", "persistence_cache_hit",
+                      "seconds", "status")
 
 
 def run_serving_scenario(name: str, intensities, *, seed: int, smoke: bool,
@@ -192,7 +196,8 @@ def run_serving_scenario(name: str, intensities, *, seed: int, smoke: bool,
         stats = latency_stats(records)
         led = svc.ledger("sweep")
         rows.append({
-            "scenario": name, "drift_fraction": float(intensity),
+            "scenario": name, "mode": "stream",
+            "drift_fraction": float(intensity),
             "drift_scale": 2.0 * float(intensity),
             "churn_every": churn_every, "steps": steps,
             "lam": float(scenario.lam), "tol": svc.config.tol,
@@ -209,6 +214,83 @@ def run_serving_scenario(name: str, intensities, *, seed: int, smoke: bool,
             "seconds": seconds, "status": "ok",
         })
     return rows
+
+
+def run_serving_batched(name: str, *, seed: int, smoke: bool,
+                        batch_sessions: int, out_dir: str) -> dict:
+    """One batched-serving row: sequential vs vmapped warm throughput.
+
+    ``batch_sessions`` shape-matched sessions (same graph, re-seeded
+    labels) are answered warm both sequentially and as one queue-driven
+    ``solve_batch`` flush; the row also restarts the plan cache through
+    ``save_plans``/``load_plans`` and reports how many re-plans the
+    restarted service paid (expected: 0).
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.serving import ServingQueue, SolveService, solve_batch
+
+    scenario = get_scenario(name)
+    inst = scenario.build(seed=seed, smoke=smoke)
+    problem = inst.problem.with_lam(float(scenario.lam))
+
+    y0 = np.asarray(problem.data.y)
+    scale = 0.05 * (float(np.std(y0)) or 1.0)
+    svc = SolveService()
+    sids = []
+    for i in range(batch_sessions):
+        rng = np.random.default_rng(seed + 1000 + i)
+        y = y0 + scale * rng.standard_normal(y0.shape).astype(np.float32)
+        p = dataclasses.replace(
+            problem, data=dataclasses.replace(problem.data,
+                                              y=jnp.asarray(y)))
+        sids.append(svc.create_session(f"batch_{i}", p))
+
+    t0 = time.perf_counter()
+    for sid in sids:                      # cold: plans + compiles
+        svc.solve(sid)
+    for sid in sids:                      # settle the warm state
+        svc.solve(sid)
+    solve_batch(svc, sids)                # vmapped executable's compile
+    seq_times, batch_times = [], []
+    for _ in range(3):                    # interleaved best-of-3
+        t1 = time.perf_counter()
+        for sid in sids:
+            svc.solve(sid)
+        seq_times.append(time.perf_counter() - t1)
+        t1 = time.perf_counter()
+        solve_batch(svc, sids)
+        batch_times.append(time.perf_counter() - t1)
+    sequential_s, batched_s = min(seq_times), min(batch_times)
+
+    queue = ServingQueue(svc, max_batch=batch_sessions,
+                         max_wait_requests=4 * batch_sessions)
+    tickets = [queue.submit(sid) for sid in sids]
+    queue.drain()
+    assert all(t is not None and t.done for t in tickets)
+
+    plans_dir = os.path.join(out_dir, "serving_plans", name)
+    svc.save_plans(plans_dir)
+    restarted = SolveService()
+    restarted.load_plans(plans_dir)
+    rsid = restarted.create_session("restart", problem)
+    rresp = restarted.solve(rsid)
+
+    return {
+        "scenario": name, "mode": "batched",
+        "lam": float(scenario.lam), "tol": svc.config.tol,
+        "batch_sessions": batch_sessions,
+        "sequential_ms": sequential_s * 1e3,
+        "batched_ms": batched_s * 1e3,
+        "throughput_gain": (sequential_s / batched_s if batched_s
+                            else None),
+        "queue_flushes": queue.flushes, "queue_batched": queue.batched,
+        "persistence_replans": int(restarted.plans.misses),
+        "persistence_cache_hit": bool(rresp.cache_hit),
+        "seconds": time.perf_counter() - t0, "status": "ok",
+    }
 
 
 def run_serving_mode(args) -> int:
@@ -229,12 +311,22 @@ def run_serving_mode(args) -> int:
         all_rows.extend(rows)
         print(f"[{name}] {len(rows)} serving intensities "
               f"({time.perf_counter() - t0:.1f}s)")
+        if args.batch_sessions > 1:
+            row = run_serving_batched(
+                name, seed=args.seed, smoke=args.smoke,
+                batch_sessions=args.batch_sessions, out_dir=args.out)
+            all_rows.append(row)
+            print(f"[{name}] batched x{args.batch_sessions}: "
+                  f"gain={row['throughput_gain']:.2f} "
+                  f"re-plans={row['persistence_replans']} "
+                  f"({row['seconds']:.1f}s)")
 
     report = {
         "mode": "serving",
         "config": {"seed": args.seed, "smoke": args.smoke,
                    "scenarios": names, "intensities": intensities,
                    "steps": steps, "churn_every": args.churn_every,
+                   "batch_sessions": args.batch_sessions,
                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
                    "max_iters_env":
                        os.environ.get("REPRO_SOLVER_MAX_ITERS")},
@@ -426,6 +518,10 @@ def main(argv=None) -> int:
     ap.add_argument("--churn-every", type=int, default=0,
                     dest="churn_every",
                     help="serving mode: edge-churn cadence (0 disables)")
+    ap.add_argument("--batch-sessions", type=int, default=4,
+                    dest="batch_sessions",
+                    help="serving mode: shape-matched sessions for the "
+                         "batched (vmapped) solve row; <=1 disables")
     args = ap.parse_args(argv)
 
     if args.mode == "federated":

@@ -22,7 +22,7 @@ from repro.api.problem import Problem, SolveResult, SolverConfig
 from repro.api.regularizers import (REGULARIZERS, Regularizer, SquaredTV,
                                     TotalVariation, get_regularizer,
                                     register_regularizer)
-from repro.api.solver import Solver, solve, solve_path
+from repro.api.solver import Solver, solve, solve_many, solve_path
 
 __all__ = [
     "BACKENDS", "CallableLoss", "LOSSES", "LassoLoss", "LogisticLoss",
@@ -30,5 +30,5 @@ __all__ = [
     "Solver", "SolverConfig", "SquaredLoss", "SquaredTV", "TotalVariation",
     "certificate", "get_backend", "get_loss", "get_regularizer",
     "pd_iteration", "register_backend", "register_loss",
-    "register_regularizer", "solve", "solve_path",
+    "register_regularizer", "solve", "solve_many", "solve_path",
 ]

@@ -292,6 +292,122 @@ def _solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
                        lam=problem.lam, diagnostics=diag, residual=res)
 
 
+# ---------------------------------------------------------------------------
+# Batched dense engine: many shape-matched problems, one vmapped executable
+# ---------------------------------------------------------------------------
+
+def _batched_scan_impl(graph_b, data_b, lam_b, w0_b, u0_b, *, loss: Loss,
+                       reg: Regularizer, num_iters: int, rho: float,
+                       metric_every: int, clip_fn, affine_fn,
+                       record_residual: bool = False):
+    """``_dense_scan_impl`` vmapped over a leading batch axis.
+
+    ``graph_b`` is an :class:`EmpiricalGraph` whose array children carry
+    a leading batch axis (static aux — node count, template slots — is
+    shared), so problems with *different structures* batch together as
+    long as their shapes match: structure arrays are traced operands of
+    the dense engine, not compile-time constants.
+    """
+    def one(graph, data, lam, w0, u0):
+        return _dense_scan_impl(
+            graph, data, lam, w0, u0, None, loss=loss, reg=reg,
+            num_iters=num_iters, rho=rho, metric_every=metric_every,
+            clip_fn=clip_fn, affine_fn=affine_fn,
+            record_residual=record_residual)
+
+    return jax.vmap(one)(graph_b, data_b, lam_b, w0_b, u0_b)
+
+
+_batched_scan = _jit(_batched_scan_impl,
+                     static_argnames=("loss", "reg", "num_iters", "rho",
+                                      "metric_every", "clip_fn", "affine_fn",
+                                      "record_residual"),
+                     donate_argnums=(3, 4))
+
+
+def _batched_chunk_impl(graph_b, data_b, lam_b, w0_b, u0_b, params_b, *,
+                        loss: Loss, reg: Regularizer, rho: float,
+                        metric_every: int, clip_fn, affine_fn):
+    """One batched tol-mode chunk: per-problem metrics + residuals.
+
+    Traces come back transposed — (1, B) per chunk — so the chunk
+    driver's axis-0 concatenation stacks records, giving (T, B) overall.
+    """
+    def one(graph, data, lam, w0, u0, params):
+        return _dense_chunk_impl(
+            graph, data, lam, w0, u0, None, params, loss=loss, reg=reg,
+            rho=rho, metric_every=metric_every, clip_fn=clip_fn,
+            affine_fn=affine_fn)
+
+    w, u, obj, mse, res = jax.vmap(one)(graph_b, data_b, lam_b, w0_b,
+                                        u0_b, params_b)
+    return w, u, obj.T, mse.T, res
+
+
+_batched_chunk = _jit(_batched_chunk_impl,
+                      static_argnames=("loss", "reg", "rho", "metric_every",
+                                       "clip_fn", "affine_fn"),
+                      donate_argnums=(3, 4))
+
+
+def _batched_setup_impl(graph_b, data_b, *, loss: Loss):
+    def one(graph, data):
+        return loss.prox_setup(data, graph.primal_stepsizes())
+
+    return jax.vmap(one)(graph_b, data_b)
+
+
+# jitted: an eagerly-vmapped prox_setup costs more host dispatches than
+# the whole warm chunk it precomputes for
+_batched_setup = _jit(_batched_setup_impl, static_argnames=("loss",))
+
+
+def solve_dense_batched(problem_b: Problem, config: SolverConfig, w0_b,
+                        u0_b, *, clip_fn=None, affine_fn=None):
+    """Solve B stacked problems as one vmapped dense-engine run.
+
+    ``problem_b`` is a stacked Problem pytree (leading batch axis on
+    every array leaf; shared static aux) — see ``api.solver.solve_many``
+    for the stacking front-end.  Early stopping is batch-granular: with
+    ``tol`` set, the chunk loop stops when the *max* residual over the
+    batch certifies, so every problem runs the shared iteration count
+    and every returned certificate is individually valid.
+
+    Returns ``(w, u, obj, mse, res, iterations)`` with leading batch
+    axes ((B, T) traces; ``res`` None unless tracked).
+    """
+    _check_cadence(config)
+    if config.tol is None or config.num_iters == 0:
+        w, u, obj, mse, res = _batched_scan(
+            problem_b.graph, problem_b.data, problem_b.lam, w0_b, u0_b,
+            loss=problem_b.loss, reg=problem_b.regularizer,
+            num_iters=config.num_iters, rho=config.rho,
+            metric_every=config.metric_every, clip_fn=clip_fn,
+            affine_fn=affine_fn, record_residual=config.record_residual)
+        return w, u, obj, mse, res, config.num_iters
+
+    try:
+        params_b = _batched_setup(problem_b.graph, problem_b.data,
+                                  loss=problem_b.loss)
+    except NotImplementedError:
+        params_b = None
+
+    def run_chunk(state, r0, r1):
+        w_, u_, obj_, mse_, res_ = _batched_chunk(
+            problem_b.graph, problem_b.data, problem_b.lam, state[0],
+            state[1], params_b, loss=problem_b.loss,
+            reg=problem_b.regularizer, rho=config.rho,
+            metric_every=r1 - r0, clip_fn=clip_fn, affine_fn=affine_fn)
+        # stop when the whole batch certifies (max over problems); each
+        # problem's own residual column stays its certificate trace
+        return (w_, u_), (obj_, mse_, res_[None, :]), jnp.max(res_)
+
+    (w, u), (obj, mse, res), iterations, _ = run_chunked(
+        run_chunk, (w0_b, u0_b), total=config.num_iters,
+        chunk_size=config.metric_every, tol=config.tol)
+    return w, u, obj.T, mse.T, res.T, iterations
+
+
 def resolve_kernel_hooks(problem: Problem, config: SolverConfig,
                          use_pallas: bool):
     """(clip_fn, affine_fn) for a dense-engine run.

@@ -20,10 +20,11 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.backends import (_should_fuse, _solve_dense, _solve_fused,
                                 certificate, get_backend,
-                                resolve_kernel_hooks)
+                                resolve_kernel_hooks, solve_dense_batched)
 from repro.api.problem import Problem, SolveResult, SolverConfig
 from repro.engine import capped as _capped
 from repro.engine import default_warm_lam as _default_warm_lam
@@ -128,6 +129,115 @@ def solve_path(problem: Problem, lams, config: SolverConfig | None = None,
     return jax.vmap(solve_one)(lams)
 
 
+#: jitted batch certificate: Problem templates/graph statics are
+#: hashable static aux, so this caches one executable per exec-sig
+_batched_certificate = jax.jit(jax.vmap(certificate))
+
+
+def _batch_signature(problem: Problem) -> tuple:
+    """Everything two problems must share to stack into one vmapped
+    solve: template slots (they are static aux — mismatched treedefs
+    cannot stack) and every traced array shape."""
+    g, d = problem.graph, problem.data
+    return (repr(problem.loss), repr(problem.regularizer), g.num_nodes,
+            g.num_edges, g.max_degree, tuple(d.x.shape), tuple(d.y.shape),
+            tuple(d.sample_mask.shape), tuple(d.labeled_mask.shape))
+
+
+def solve_many(problems, config: SolverConfig | None = None, *,
+               w0s=None, u0s=None) -> list[SolveResult]:
+    """Solve many shape-matched problems as ONE vmapped engine run.
+
+    The multi-session serving fast path: problems whose loss/regularizer
+    templates and array shapes match (``PlanKey.exec_sig`` equality)
+    stack along a leading batch axis — graph structure arrays included,
+    since the dense engine treats them as traced operands — and run
+    under a single XLA executable.  ``w0s``/``u0s`` are optional
+    per-problem warm starts (None entries start from zeros; on TPU/GPU
+    the stacked buffers are donated).
+
+    With ``config.tol`` set, early stopping is batch-granular: the
+    chunk loop stops once *every* problem's residual certifies (max
+    over the batch), so all problems report the shared iteration count
+    and each per-problem certificate remains individually valid.
+
+    Returns one :class:`SolveResult` per problem, in order.
+    """
+    cfg = config if config is not None else SolverConfig(rho=1.9)
+    problems = list(problems)
+    if not problems:
+        return []
+    if cfg.backend not in ("dense", "pallas"):
+        raise NotImplementedError(
+            "solve_many vmaps the dense engine; backend must be 'dense' "
+            f"or 'pallas', got {cfg.backend!r}")
+    if cfg.continuation:
+        raise NotImplementedError(
+            "solve_many runs single-phase solves; disable continuation "
+            "and warm-start via w0s/u0s instead")
+    ref_sig = _batch_signature(problems[0])
+    for i, p in enumerate(problems[1:], start=1):
+        sig = _batch_signature(p)
+        if sig != ref_sig:
+            raise ValueError(
+                f"problems[{i}] does not shape-match problems[0]: "
+                f"{sig} vs {ref_sig}; batch only exec-sig-matched "
+                "problems (see serving.batch.group_requests)")
+
+    # strip layouts: they are static aux planned per structure, and the
+    # vmapped dense engine never reads them — mismatched layouts must
+    # not block stacking
+    stripped = [
+        dataclasses.replace(
+            p, graph=dataclasses.replace(p.graph, layout=None))
+        for p in problems]
+    problem_b = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *stripped)
+
+    V, n = problems[0].num_nodes, problems[0].num_features
+    E = problems[0].graph.num_edges
+
+    def stack_inits(inits, rows):
+        if inits is None:
+            inits = [None] * len(problems)
+        return jnp.stack([
+            jnp.zeros((rows, n), jnp.float32) if x0 is None
+            else jnp.asarray(x0, jnp.float32) for x0 in inits])
+
+    w0_b = stack_inits(w0s, V)
+    u0_b = stack_inits(u0s, E)
+
+    run_cfg = cfg.replace(num_iters=_capped(cfg.num_iters,
+                                            cfg.metric_every))
+    clip_fn, affine_fn = resolve_kernel_hooks(problems[0], run_cfg,
+                                              run_cfg.backend == "pallas")
+    w, u, obj, mse, res, iterations = solve_dense_batched(
+        problem_b, run_cfg, w0_b, u0_b, clip_fn=clip_fn,
+        affine_fn=affine_fn)
+
+    diag_b = {}
+    if cfg.compute_diagnostics:
+        # one jitted vmapped certificate evaluation for the whole batch:
+        # the per-problem eq.-11 diagnostics are pure jnp and stack like
+        # everything else, so B problems pay one dispatch, not B
+        diag_b = {k: np.asarray(v) for k, v in
+                  _batched_certificate(problem_b, w, u).items()}
+    # traces come back as host arrays: one transfer for the whole batch
+    # instead of a device sync per problem when callers read trace tails
+    obj = np.asarray(obj)
+    res = None if res is None else np.asarray(res)
+    results = []
+    for i, p in enumerate(problems):
+        diag = {k: v[i] for k, v in diag_b.items()}
+        if cfg.tol is not None:
+            diag["iterations"] = int(iterations)
+        results.append(SolveResult(
+            w=w[i], u=u[i], objective=obj[i], mse=None, lam=p.lam,
+            diagnostics=diag,
+            residual=None if res is None else res[i]))
+    return results
+
+
 def solve(problem: Problem, config: SolverConfig | None = None,
           **run_kwargs) -> SolveResult:
     """Functional convenience: ``Solver(config).run(problem, ...)``."""
@@ -135,4 +245,4 @@ def solve(problem: Problem, config: SolverConfig | None = None,
         problem, **run_kwargs)
 
 
-__all__ = ["Solver", "solve", "solve_path", "certificate"]
+__all__ = ["Solver", "solve", "solve_many", "solve_path", "certificate"]

@@ -170,6 +170,30 @@ def rcm_order_cached(graph: EmpiricalGraph,
     return order
 
 
+def export_rcm_orders(
+        structure_hashes: "set[str] | None" = None,
+) -> "dict[tuple[str, bool], np.ndarray]":
+    """Snapshot the memoized RCM orders, optionally filtered by hash.
+
+    Plan persistence (``serving.PlanCache.save``) exports the orders
+    behind its cached layouts so a restarted process skips the BFS too.
+    """
+    return {key: order for key, order in _RCM_CACHE.items()
+            if structure_hashes is None or key[0] in structure_hashes}
+
+
+def install_rcm_order(structure_hash: str, order: np.ndarray,
+                      reverse: bool = True) -> None:
+    """Seed the RCM memo with a deserialized order (restore path)."""
+    order = np.asarray(order, np.int64).copy()
+    order.setflags(write=False)
+    key = (structure_hash, bool(reverse))
+    _RCM_CACHE[key] = order
+    _RCM_CACHE.move_to_end(key)
+    while len(_RCM_CACHE) > _RCM_CACHE_MAX:
+        _RCM_CACHE.popitem(last=False)
+
+
 def transfer_edge_duals(old_graph: EmpiricalGraph,
                         new_graph: EmpiricalGraph, u_old) -> np.ndarray:
     """Map an (E_old, n) dual vector onto a patched graph's edge set.

@@ -40,14 +40,21 @@ def capped(num_iters: int, metric_every: int = 1) -> int:
     """Apply the env cap, keeping the metric cadence divisibility.
 
     Leaves ``num_iters`` untouched when no cap bites (so mismatched
-    cadences still error loudly in the backend).
+    cadences still error loudly in the backend).  When the cap bites,
+    the result is the largest multiple of ``metric_every`` that does
+    not exceed the cap — the env cap is a hard ceiling (CI relies on
+    it), so a cap that cannot fit even one metric block raises instead
+    of silently exceeding it.
     """
     cap = iter_cap()
     if num_iters <= cap:
         return num_iters
-    capped_iters = max(cap, metric_every)
-    if metric_every > 1:
-        return capped_iters - capped_iters % metric_every
+    capped_iters = cap - (cap % metric_every if metric_every > 1 else 0)
+    if capped_iters <= 0:
+        raise ValueError(
+            f"REPRO_SOLVER_MAX_ITERS={cap} cannot fit one metric block "
+            f"(metric_every={metric_every}); lower metric_every or raise "
+            "the cap")
     return capped_iters
 
 

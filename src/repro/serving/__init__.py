@@ -12,11 +12,17 @@ Public surface::
     assert resp.residual <= resp.tol
 
 See ``service.py`` for the request surface, ``cache.py`` for plan
-reuse, ``ledger.py`` for per-tenant accounting, and ``stream.py`` for
-the synthetic update-stream benchmark harness.
+reuse and cross-process persistence (``PlanCache.save/load``),
+``batch.py`` for vmapped multi-session solves, ``queue.py`` for the
+admission-controlled request loop, ``ledger.py`` for per-tenant
+accounting, and ``stream.py`` for the synthetic update-stream
+benchmark harness.
 """
-from repro.serving.cache import Plan, PlanCache, PlanKey
+from repro.serving.batch import SolveRequest, group_requests, solve_batch
+from repro.serving.cache import (Plan, PlanCache, PlanKey,
+                                 layout_structure_hash)
 from repro.serving.ledger import ServiceLedger
+from repro.serving.queue import ServingQueue, Ticket
 from repro.serving.service import (DEFAULT_CONFIG, DataDelta, EdgePatch,
                                    Session, SolveResponse, SolveService)
 from repro.serving.stream import (StreamEvent, latency_stats, replay,
@@ -30,11 +36,17 @@ __all__ = [
     "PlanCache",
     "PlanKey",
     "ServiceLedger",
+    "ServingQueue",
     "Session",
+    "SolveRequest",
     "SolveResponse",
     "SolveService",
     "StreamEvent",
+    "Ticket",
+    "group_requests",
     "latency_stats",
+    "layout_structure_hash",
     "replay",
+    "solve_batch",
     "synthetic_stream",
 ]

@@ -74,6 +74,27 @@ class ServiceLedger:
             self.iterations_cold_ref += int(cold_ref)
             self.iterations_saved += max(int(cold_ref) - int(iterations), 0)
 
+    def record_path(self, *, points: int, point_iterations: int,
+                    warm_iterations: int, cache_hit: bool,
+                    compiled: bool) -> None:
+        """One solve_path sweep producing ``points`` responses.
+
+        A sweep is a single plan lookup (hit/compile attributed once,
+        not once per point) plus one *shared* warm pre-solve
+        (``warm_iterations``, counted once per sweep) followed by
+        ``points`` vmapped final solves of ``point_iterations`` each.
+        """
+        self.solves += points
+        self.path_points += points
+        if cache_hit:
+            self.cache_hits += 1
+        else:
+            self.cache_misses += 1
+        if compiled:
+            self.compiles += 1
+        self.iterations += (int(warm_iterations)
+                            + int(points) * int(point_iterations))
+
     # -- aggregates ----------------------------------------------------------
     @property
     def cache_hit_rate(self) -> float:

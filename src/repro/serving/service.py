@@ -157,6 +157,20 @@ class SolveService:
         except KeyError:
             raise KeyError(f"unknown session {session_id!r}") from None
 
+    # -- plan persistence ----------------------------------------------------
+    def save_plans(self, path: str) -> dict[str, int]:
+        """Persist the plan cache (layouts + RCM orders) to ``path``.
+
+        A restarted service calls :meth:`load_plans` and skips
+        re-planning for every structure saved here (it still pays the
+        XLA traces — executables die with the process).
+        """
+        return self.plans.save(path)
+
+    def load_plans(self, path: str) -> dict[str, int]:
+        """Restore plans saved by :meth:`save_plans` (hash-validated)."""
+        return self.plans.load(path)
+
     # -- session lifecycle ---------------------------------------------------
     def create_session(self, tenant: str, problem: Problem,
                        config: SolverConfig | None = None) -> str:
@@ -204,6 +218,11 @@ class SolveService:
                                                graph=new_graph)
         if lam is not None:
             sess.problem = sess.problem.with_lam(float(lam))
+        if patch is not None or lam is not None:
+            # the cold baseline measured a *different* problem (other
+            # structure / other lambda); the next cold-reference solve
+            # re-establishes it, so warm_iteration_ratio never mixes
+            sess.cold_iterations = None
         sess.updates += 1
         led = self.ledger(sess.tenant)
         led.requests += 1
@@ -218,8 +237,8 @@ class SolveService:
         led.closes += 1
 
     # -- solving -------------------------------------------------------------
-    def _plan(self, problem: Problem,
-              config: SolverConfig) -> tuple[Plan, bool, bool]:
+    def _plan(self, problem: Problem, config: SolverConfig,
+              sig: tuple | None = None) -> tuple[Plan, bool, bool]:
         key = PlanKey.for_problem(problem, config)
 
         def build() -> Plan:
@@ -232,7 +251,7 @@ class SolveService:
                           else plan_edge_blocks(problem.graph))
             return Plan(key=key, layout=layout)
 
-        return self.plans.get_or_build(key, build)
+        return self.plans.get_or_build(key, build, sig=sig)
 
     def _with_plan(self, problem: Problem, plan: Plan) -> Problem:
         if plan.layout is None or problem.graph.layout is plan.layout:
@@ -272,7 +291,10 @@ class SolveService:
         sess.w, sess.u = result.w, result.u
         sess.solves += 1
         cold_ref = sess.cold_iterations if warm else None
-        if sess.cold_iterations is None or cold:
+        if not warm:
+            # only true from-zeros solves (first solve, forced cold,
+            # post-update-reset) may define the cold baseline — a warm
+            # solve standing in as baseline would fake the ratio
             sess.cold_iterations = iterations
 
         led = self.ledger(sess.tenant)
@@ -305,17 +327,17 @@ class SolveService:
         seconds = (time.perf_counter() - t0) / max(len(lams), 1)
 
         iters = _capped(cfg.final_iters, cfg.metric_every)
+        warm_iters = _capped(cfg.warm_iters, cfg.metric_every)
         led = self.ledger(sess.tenant)
         led.requests += 1
-        led.path_points += len(lams)
+        led.record_path(points=len(lams), point_iterations=iters,
+                        warm_iterations=warm_iters, cache_hit=hit,
+                        compiled=compiled)
         responses = []
         for i in range(len(lams)):
             point = jax.tree_util.tree_map(lambda a, i=i: a[i], result)
-            led.record_solve(cache_hit=hit if i == 0 else True,
-                             compiled=compiled if i == 0 else False,
-                             iterations=iters, cold_ref=None)
             responses.append(self._response(
-                sess, point, warm=False, cache_hit=hit if i == 0 else True,
+                sess, point, warm=False, cache_hit=hit,
                 compiled=compiled if i == 0 else False, iterations=iters,
                 seconds=seconds, tol=sess.config.tol))
         return responses
@@ -370,23 +392,38 @@ def _apply_delta(data, delta: DataDelta):
 
 
 def _apply_patch(graph, patch: EdgePatch):
-    """Rebuild the graph with ``patch`` applied (canonicalized edges)."""
-    src = np.asarray(graph.src, np.int64)
-    dst = np.asarray(graph.dst, np.int64)
-    wts = np.asarray(graph.weights, np.float32)
+    """Rebuild the graph with ``patch`` applied (canonicalized edges).
+
+    Drops first, then adds in patch order with *last-write-wins*
+    semantics: adding an edge that already exists (or was dropped and
+    re-added within the same patch) re-weights it.  ``build_graph``'s
+    stable dedupe keeps the first duplicate, so appending and rebuilding
+    would silently keep the stale weight instead.  Self-loop adds are
+    rejected here, naming the offending pair, rather than surfacing as
+    a late anonymous build_graph error.
+    """
     V = graph.num_nodes
-    keys = src * V + dst                      # src < dst already canonical
-    drop_keys = {min(i, j) * V + max(i, j) for i, j in patch.drop}
-    keep = np.asarray([k not in drop_keys for k in keys], bool) \
-        if len(keys) else np.zeros(0, bool)
-    src, dst, wts = src[keep], dst[keep], wts[keep]
+    edges: "dict[tuple[int, int], float]" = {
+        (int(s), int(d)): float(w)
+        for s, d, w in zip(np.asarray(graph.src, np.int64),
+                           np.asarray(graph.dst, np.int64),
+                           np.asarray(graph.weights, np.float32))}
+    for i, j in patch.drop:
+        edges.pop((min(i, j), max(i, j)), None)
     for i, j, w in patch.add:
+        if i == j:
+            raise ValueError(
+                f"EdgePatch.add contains the self-loop ({i}, {j}); the "
+                "empirical graph couples distinct local datasets")
         if not (0 <= i < V and 0 <= j < V):
             raise ValueError(f"edge ({i}, {j}) outside the node set "
                              f"[0, {V})")
-        src = np.append(src, min(i, j))
-        dst = np.append(dst, max(i, j))
-        wts = np.append(wts, np.float32(w))
-    edges = np.stack([src, dst], axis=1) if len(src) else \
-        np.zeros((0, 2), np.int64)
-    return build_graph(edges, wts, V)
+        edges[(min(i, j), max(i, j))] = float(w)
+    if edges:
+        items = sorted(edges.items())
+        pairs = np.asarray([k for k, _ in items], np.int64)
+        wts = np.asarray([w for _, w in items], np.float32)
+    else:
+        pairs = np.zeros((0, 2), np.int64)
+        wts = np.zeros((0,), np.float32)
+    return build_graph(pairs, wts, V)

@@ -218,3 +218,37 @@ def test_fused_matches_dense_on_nonsquared_losses(name):
     np.testing.assert_allclose(np.asarray(fused.objective),
                                np.asarray(dense.objective),
                                rtol=1e-4, atol=1e-6)
+
+# ---------------------------------------------------------------------------
+# REPRO_SOLVER_MAX_ITERS cap (engine.loop.capped)
+# ---------------------------------------------------------------------------
+
+def test_capped_uncapped_passthrough(monkeypatch):
+    from repro.engine import capped
+    monkeypatch.delenv("REPRO_SOLVER_MAX_ITERS", raising=False)
+    assert capped(500, 25) == 500
+    monkeypatch.setenv("REPRO_SOLVER_MAX_ITERS", "1000")
+    assert capped(500, 25) == 500           # under the cap: untouched
+
+
+def test_capped_clamps_to_metric_multiple(monkeypatch):
+    from repro.engine import capped
+    monkeypatch.setenv("REPRO_SOLVER_MAX_ITERS", "60")
+    # non-divisible cap: largest multiple of metric_every <= cap, never 0
+    assert capped(500, 25) == 50
+    assert capped(500, 60) == 60
+    assert capped(500, 1) == 60
+    monkeypatch.setenv("REPRO_SOLVER_MAX_ITERS", "10")
+    assert capped(500, 1) == 10             # the CI smoke setting
+
+
+def test_capped_raises_when_cap_below_metric_every(monkeypatch):
+    from repro.engine import capped
+    # cap < metric_every used to clamp to 0 iterations and return
+    # all-zero "solutions"; it must refuse loudly instead
+    monkeypatch.setenv("REPRO_SOLVER_MAX_ITERS", "10")
+    with pytest.raises(ValueError, match="metric_every"):
+        capped(500, 25)
+    monkeypatch.setenv("REPRO_SOLVER_MAX_ITERS", "24")
+    with pytest.raises(ValueError, match="metric_every"):
+        capped(500, 25)

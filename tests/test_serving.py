@@ -30,7 +30,8 @@ from repro.core.graph import build_graph, chain_graph
 from repro.core.losses import NodeData
 from repro.core.partition import rcm_order_cached, transfer_edge_duals
 from repro.serving import (DataDelta, EdgePatch, Plan, PlanCache, PlanKey,
-                           SolveService, replay, synthetic_stream)
+                           SolveService, layout_structure_hash, replay,
+                           synthetic_stream)
 
 # metric_every=10: the residual-check cadence is also the warm-solve
 # iteration floor, and the small test chains go cold in ~100 iterations
@@ -370,3 +371,212 @@ def test_synthetic_stream_replay(service):
     assert all(r["warm_meets_sla"] for r in records)
     sess = service.session(sid)
     assert sess.updates == 3 and sess.solves == 4
+
+
+# ---------------------------------------------------------------------------
+# Edge-patch semantics: last-write-wins reweights, self-loop rejection
+# ---------------------------------------------------------------------------
+
+def _edge_weight(graph, i, j):
+    lo, hi = min(i, j), max(i, j)
+    mask = (np.asarray(graph.src) == lo) & (np.asarray(graph.dst) == hi)
+    wts = np.asarray(graph.weights)[mask]
+    return float(wts[0]) if wts.size else None
+
+
+def test_patch_reweight_last_write_wins(service):
+    sid = service.create_session("t", _chain_problem())
+    g0 = service.session(sid).problem.graph
+    assert _edge_weight(g0, 0, 1) == pytest.approx(1.0)
+    # adding an existing edge (either orientation) re-weights it;
+    # build_graph's first-wins dedupe used to keep the stale 1.0 instead
+    service.update_session(sid, patch=EdgePatch(add=((1, 0, 3.5),)))
+    g1 = service.session(sid).problem.graph
+    assert _edge_weight(g1, 0, 1) == pytest.approx(3.5)
+    assert g1.num_edges == g0.num_edges          # reweighted, not duplicated
+    # duplicate adds within one patch: the last weight wins
+    service.update_session(sid, patch=EdgePatch(add=((0, 1, 2.0),
+                                                     (0, 1, 7.0))))
+    g2 = service.session(sid).problem.graph
+    assert _edge_weight(g2, 0, 1) == pytest.approx(7.0)
+    assert g2.num_edges == g0.num_edges
+
+
+def test_patch_drop_then_readd_same_patch(service):
+    sid = service.create_session("t", _chain_problem())
+    g0 = service.session(sid).problem.graph
+    service.update_session(sid, patch=EdgePatch(drop=((0, 1),),
+                                                add=((0, 1, 9.0),)))
+    g1 = service.session(sid).problem.graph
+    assert _edge_weight(g1, 0, 1) == pytest.approx(9.0)
+    assert g1.num_edges == g0.num_edges
+    assert service.solve(sid).meets_sla          # patched problem certifies
+
+
+def test_patch_self_loop_rejected(service):
+    sid = service.create_session("t", _chain_problem())
+    g0 = service.session(sid).problem.graph
+    with pytest.raises(ValueError, match=r"\(3, 3\)"):
+        service.update_session(sid, patch=EdgePatch(add=((3, 3, 1.0),)))
+    with pytest.raises(ValueError, match="outside the node set"):
+        service.update_session(sid, patch=EdgePatch(add=((0, 999, 1.0),)))
+    # rejected patches leave the session's graph untouched
+    assert service.session(sid).problem.graph is g0
+
+
+# ---------------------------------------------------------------------------
+# Cold-baseline hygiene: structure / lambda changes reset it
+# ---------------------------------------------------------------------------
+
+def test_cold_baseline_resets_on_structure_change(service):
+    sid = service.create_session("t", _chain_problem())
+    service.solve(sid)
+    sess = service.session(sid)
+    assert sess.cold_iterations is not None
+    service.update_session(sid, patch=EdgePatch(drop=((0, 1),),
+                                                add=((0, 2, 1.0),)))
+    # the old baseline measured a different structure — it must be gone
+    assert sess.cold_iterations is None
+    led = service.ledger("t")
+    service.solve(sid)                           # warm, but baseline-less
+    assert led.iterations_cold_ref == 0          # nothing mixed into the ratio
+    assert led.iterations_saved == 0
+    cold = service.solve(sid, cold=True)         # re-establishes the baseline
+    assert sess.cold_iterations == cold.iterations
+    service.solve(sid)
+    assert led.iterations_cold_ref == cold.iterations
+    # a lambda retarget is a different problem too
+    service.update_session(sid, lam=1e-2)
+    assert sess.cold_iterations is None
+    # data-only deltas keep the baseline (same structure, same lambda)
+    service.solve(sid, cold=True)
+    service.update_session(sid, delta=DataDelta(
+        nodes=(0,), y=np.zeros((1,) + np.asarray(sess.problem.data.y
+                                                 ).shape[1:], np.float32)))
+    assert sess.cold_iterations is not None
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache compile accounting
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_failing_build_does_not_mark_compiled():
+    cache = PlanCache(max_entries=4)
+    key = PlanKey(structure_hash="abc", loss="L", regularizer="R",
+                  backend="dense", shape_sig=(4, 3, 2, 1, 2))
+
+    def boom():
+        raise RuntimeError("planner exploded")
+
+    with pytest.raises(RuntimeError, match="planner exploded"):
+        cache.get_or_build(key, boom)
+    assert key not in cache
+    # the failed build must not have recorded its executable signature —
+    # the retry below really pays the XLA trace and must report it
+    plan, hit, compiled = cache.get_or_build(key, lambda: Plan(key=key))
+    assert not hit and compiled
+
+
+def test_plan_cache_compiled_sigs_bounded():
+    cache = PlanCache(max_entries=2)
+    assert cache.compiled_sigs_max == 64
+    for i in range(3 * cache.compiled_sigs_max):
+        assert cache.mark_compiled(("sig", i))
+    assert len(cache._compiled_sigs) == cache.compiled_sigs_max
+    # LRU: the most recent sig survived, the oldest was forgotten
+    assert not cache.mark_compiled(("sig", 3 * cache.compiled_sigs_max - 1))
+    assert cache.mark_compiled(("sig", 0))
+
+
+# ---------------------------------------------------------------------------
+# solve_path ledger exactness
+# ---------------------------------------------------------------------------
+
+def test_solve_path_ledger_exactness():
+    from repro.engine import capped
+    cfg = CFG.replace(warm_iters=200, final_iters=100)
+    service = SolveService(config=cfg)
+    sid = service.create_session("t", _chain_problem())
+    lams = [1e-2, 3e-2, 5e-2]
+    r1 = service.solve_path(sid, lams)
+    r2 = service.solve_path(sid, lams)
+    led = service.ledger("t")
+    finals = capped(100, cfg.metric_every)
+    warm = capped(200, cfg.metric_every)
+    assert led.requests == 3                     # create + 2 sweeps
+    assert led.solves == 6 and led.path_points == 6
+    # one plan lookup per *sweep*, not one per path point
+    assert led.cache_misses == 1 and led.cache_hits == 1
+    assert led.compiles == 1
+    # the shared warm pre-solve is counted once per sweep
+    assert led.iterations == 2 * (warm + 3 * finals)
+    # response attribution matches: the sweep's single compile rides the
+    # first point; every point shares the sweep's cache outcome
+    assert [r.compiled for r in r1] == [True, False, False]
+    assert [r.cache_hit for r in r1] == [False, False, False]
+    assert [r.compiled for r in r2] == [False, False, False]
+    assert [r.cache_hit for r in r2] == [True, True, True]
+
+
+# ---------------------------------------------------------------------------
+# Plan persistence: save / load across service processes
+# ---------------------------------------------------------------------------
+
+def test_service_plan_persistence_roundtrip(tmp_path):
+    svc = SolveService(config=CFG)
+    sid = svc.create_session("t", _chain_problem())
+    first = svc.solve(sid)
+    assert svc.save_plans(str(tmp_path / "plans"))["plans"] == 1
+
+    svc2 = SolveService(config=CFG)                # "restarted" process
+    assert svc2.load_plans(str(tmp_path / "plans"))["plans"] == 1
+    sid2 = svc2.create_session("t", _chain_problem())
+    resp = svc2.solve(sid2)
+    # restored plan: zero re-plans (a cache hit), but the new process
+    # still pays — and honestly reports — the XLA trace
+    assert resp.cache_hit and resp.compiled
+    assert svc2.plans.misses == 0 and svc2.plans.hits == 1
+    assert svc2.plans.loaded == 1
+    np.testing.assert_allclose(np.asarray(resp.w), np.asarray(first.w),
+                               rtol=0, atol=1e-6)
+
+
+def test_plan_cache_persistence_validates(tmp_path):
+    import json
+
+    from repro.core.graph import plan_edge_blocks, sbm_graph
+
+    rng = np.random.default_rng(0)
+    g, _ = sbm_graph(rng, (8, 8), p_in=0.6, p_out=0.1)
+    layout = plan_edge_blocks(g)
+    key = PlanKey(structure_hash=g.structure_hash(), loss="SquaredLoss()",
+                  regularizer="TotalVariation()", backend="pallas",
+                  shape_sig=(g.num_nodes, g.num_edges, 4, 2, g.max_degree))
+    cache = PlanCache()
+    cache.get_or_build(key, lambda: Plan(key=key, layout=layout))
+    path = str(tmp_path / "plans")
+    cache.save(path)
+
+    fresh = PlanCache()
+    assert fresh.load(path)["plans"] == 1
+    restored = fresh._plans[key].layout
+    for field in ("node_perm", "src", "dst", "edge_pos", "edge_flip"):
+        np.testing.assert_array_equal(np.asarray(getattr(restored, field)),
+                                      np.asarray(getattr(layout, field)))
+    # the deserialized layout reproduces the original structure hash
+    assert layout_structure_hash(restored) == g.structure_hash()
+
+    # a checkpoint claiming a different structure must be refused
+    meta_path = tmp_path / "plans" / "plans.json"
+    meta = json.loads(meta_path.read_text())
+    meta["plans"][0]["key"]["structure_hash"] = "0" * 32
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="stale"):
+        PlanCache().load(path)
+
+    # ... and a tampered payload reads as corruption
+    meta["plans"][0]["key"]["structure_hash"] = key.structure_hash
+    meta["plans"][0]["layout"]["payload_hash"] = "f" * 32
+    meta_path.write_text(json.dumps(meta))
+    with pytest.raises(ValueError, match="corrupt"):
+        PlanCache().load(path)
