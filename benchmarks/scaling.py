@@ -28,6 +28,21 @@ orders of magnitude, and compares four execution paths:
                                    bookkeeping), the overhead price of
                                    the federated execution model.
 
+Three device-resident-solve columns ride along (PR 8):
+
+  * ``fused_bf16``            — the fused path under the bf16 storage /
+                                f32 accumulation policy
+                                (``SolverConfig.dtype="bfloat16"``),
+  * ``tol_device_stop``       — a tol solve (``lax.while_loop`` over
+                                metric blocks, residual carried on
+                                device, one host transfer total) over
+                                the cadence-matched fixed-budget scan,
+  * ``path_masked_vs_dense``  — total iterations the masked-vmap
+                                ``solve_path`` executes over the
+                                unmasked fixed-budget sweep's
+                                ``L * budget`` (measured once at a
+                                fixed size; < 1 is the win).
+
 The full run lands in ``BENCH_scaling.json`` at the repo root (plus
 ``results/benchmarks/scaling.json``) so subsequent PRs have a perf
 trajectory to regress against; smoke runs write
@@ -51,6 +66,13 @@ SIZES = (250, 1000, 4000, 16000, 32000)
 SMOKE_SIZES = (250, 1000)
 ITERS = 200
 SMOKE_ITERS = 40
+# the masked-vs-dense lambda-path measurement runs once, at a fixed size
+PATH_SIZE = 4000
+SMOKE_PATH_SIZE = 250
+PATH_LAMS = (1e-1, 1e-3, 6)        # np.geomspace endpoints + count
+PATH_BUDGET = 4000
+SMOKE_PATH_BUDGET = 1000
+PATH_TOL = 5e-3
 # interpret-mode emulation is orders of magnitude slower; a handful of
 # iterations is plenty to time one (compile is still excluded)
 ITERS_INTERPRET = 4
@@ -73,7 +95,18 @@ METHODOLOGY = (
     "/ pallas_unfused (the post-PR unfused path). federated runs the "
     "message-passing runtime in synchronous full-participation mode (one "
     "engine step per round); federated_overhead = dense / federated, the "
-    "per-iteration price of the mailbox/mirror protocol."
+    "per-iteration price of the mailbox/mirror protocol. fused_bf16 runs "
+    "the fused path with SolverConfig.dtype='bfloat16' (bf16 storage, "
+    "f32 accumulation); fused_bf16_vs_unfused_fastpath is its fastpath "
+    "ratio. tol_device_stop = pallas_fused_tol / pallas_fused_cadence: "
+    "an unreachable-tol while_loop solve (residual computed on device "
+    "every metric block, one host transfer total) over the fixed-budget "
+    "scan at the same metric cadence — the pure overhead of the "
+    "device-resident stopping machinery. path_masked_vs_dense (top "
+    "level, fixed size) = total iterations the masked-vmap tol "
+    "solve_path executed / (num_lambdas * budget), the fraction of the "
+    "unmasked fixed-budget sweep the masked sweep pays. Each mode is "
+    "timed three times cache-hot and the best run is kept."
 )
 
 
@@ -99,15 +132,51 @@ def _make(v: int, seed: int):
     return g, data
 
 
-def _time_iters_per_s(problem, cfg) -> float:
+def _time_iters_per_s(problem, cfg, repeats: int = 3) -> float:
     from repro.api import Solver
 
     solver = Solver(cfg)
     solver.run(problem).w.block_until_ready()       # compile + warmup
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        solver.run(problem).w.block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return cfg.num_iters / best
+
+
+def _measure_masked_path(size: int, budget: int, seed: int) -> dict:
+    """Total iterations the masked tol solve_path executes vs the
+    unmasked fixed-budget sweep's L * budget (iteration counts, not
+    wall-clock: the masked win is *skipped work*)."""
+    import jax.numpy as jnp
+
+    from repro.api import Problem, SolverConfig
+    from repro.api.solver import solve_path
+    from repro.engine import capped
+
+    g, data = _make(size, seed)
+    problem = Problem.create(g, data, lam=1e-3)
+    lams = np.geomspace(*PATH_LAMS)
+    cfg = SolverConfig(final_iters=budget, metric_every=20, tol=PATH_TOL,
+                       rho=1.9)
     t0 = time.perf_counter()
-    solver.run(problem).w.block_until_ready()
-    dt = time.perf_counter() - t0
-    return cfg.num_iters / dt
+    res = solve_path(problem, jnp.asarray(lams, jnp.float32), cfg)
+    wall = time.perf_counter() - t0
+    iters = np.asarray(res.diagnostics["iterations"])
+    eff_budget = capped(cfg.final_iters, cfg.metric_every)
+    unmasked = int(len(lams) * eff_budget)
+    return {
+        "size": size,
+        "lams": [float(l) for l in lams],
+        "tol": PATH_TOL,
+        "budget": int(eff_budget),
+        "masked_iters": [int(i) for i in iters],
+        "masked_total": int(iters.sum()),
+        "unmasked_total": unmasked,
+        "ratio": float(iters.sum() / unmasked),
+        "wall_s": wall,
+    }
 
 
 def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
@@ -136,6 +205,10 @@ def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
             return SolverConfig(num_iters=num_iters,
                                 metric_every=num_iters, **kw)
 
+        # metric cadence for the tol-vs-scan pair: the while_loop tol
+        # engine evaluates metrics+residual per block, so its honest
+        # baseline is the scan at the same cadence, not metrics-once
+        me = max(iters // 10, 1)
         modes = {
             "dense": _time_iters_per_s(problem, cfg(iters)),
             "pallas_unfused": _time_iters_per_s(
@@ -145,6 +218,16 @@ def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
                              fused=False, **interp_hooks)),
             "pallas_fused": _time_iters_per_s(
                 problem, cfg(iters, backend="pallas", fused=True)),
+            "fused_bf16": _time_iters_per_s(
+                problem, cfg(iters, backend="pallas", fused=True,
+                             dtype="bfloat16")),
+            "pallas_fused_cadence": _time_iters_per_s(
+                problem, SolverConfig(num_iters=iters, metric_every=me,
+                                      backend="pallas", fused=True)),
+            "pallas_fused_tol": _time_iters_per_s(
+                problem, SolverConfig(num_iters=iters, metric_every=me,
+                                      backend="pallas", fused=True,
+                                      tol=0.0)),
             "federated": _time_iters_per_s(
                 problem, cfg(iters, backend="federated")),
         }
@@ -157,6 +240,12 @@ def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
                                  / modes["pallas_unfused_interpret"]),
             "fused_vs_unfused_fastpath": (modes["pallas_fused"]
                                           / modes["pallas_unfused"]),
+            "fused_bf16_vs_unfused_fastpath": (modes["fused_bf16"]
+                                               / modes["pallas_unfused"]),
+            "fused_bf16_vs_f32": (modes["fused_bf16"]
+                                  / modes["pallas_fused"]),
+            "tol_device_stop": (modes["pallas_fused_tol"]
+                                / modes["pallas_fused_cadence"]),
             "federated_overhead": modes["dense"] / modes["federated"],
         }
         if verbose:
@@ -165,11 +254,20 @@ def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
                   + " ".join(f"{k}={modes[k]:9.2f}it/s" for k in modes)
                   + f" fused_vs_unfused={r['fused_vs_unfused']:7.1f}x")
 
+    path = _measure_masked_path(
+        SMOKE_PATH_SIZE if smoke else PATH_SIZE,
+        SMOKE_PATH_BUDGET if smoke else PATH_BUDGET, seed)
+    if verbose:
+        print(f"path_masked_vs_dense @|V|={path['size']}: "
+              f"{path['masked_total']}/{path['unmasked_total']} iters "
+              f"(ratio {path['ratio']:.3f}, {path['wall_s']:.1f}s)")
+
     # near-linear gate: fused edge-throughput at the largest size within
     # 10x of its peak across sizes
     tps = [r["edge_iters_per_s"]["pallas_fused"] for r in rows.values()]
     payload = {
         "rows": rows,
+        "path_masked_vs_dense": path,
         "iters": iters,
         "iters_interpret": ITERS_INTERPRET,
         "smoke": bool(smoke),

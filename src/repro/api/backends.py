@@ -21,12 +21,18 @@ backend-specific executors, and returning one
                     compression, and a communication-cost ledger).
 
 ``SolverConfig.tol`` enables residual-based early stopping on every
-backend: the horizon is driven in ``metric_every``-sized compiled chunks
-(:func:`repro.engine.loop.run_chunked`) and the loop stops at the first
-metric boundary whose eq.-11 fixed-point residual
+backend: the horizon advances in ``metric_every``-sized metric blocks
+and stops at the first block whose eq.-11 fixed-point residual
 (:func:`repro.engine.step.pd_residual`) is <= tol.  Identical iterates
 produce identical residual streams, so dense and federated_sync stop at
-the same iteration.
+the same iteration.  The dense/fused/batched engines drive the blocks
+*on-device* (:func:`repro.engine.loop.device_loop`: one
+``lax.while_loop`` program, residual never leaves device memory, and the
+fused path computes it in-kernel) — a tol solve performs exactly one
+device->host transfer, the final fetch of the stopping iteration.  The
+federated backend keeps the host chunk loop
+(:func:`repro.engine.loop.run_chunked`): its checkpoint schedule is a
+Python hook that must fire between chunks.
 
 ``register_backend`` makes new execution strategies reachable from
 ``Solver.run`` without touching call sites.
@@ -46,8 +52,8 @@ from repro.api.regularizers import Regularizer, TotalVariation
 from repro.core.graph import graph_signal_mse
 from repro.core.losses import NodeData
 from repro.core.partition import gather_padded
-from repro.engine import (DenseExecutor, certificate, pd_residual,
-                          run_chunked, scan_solve)
+from repro.engine import (DenseExecutor, certificate, device_loop,
+                          pd_residual, scan_solve)
 from repro.engine import pd_step as engine_pd_step
 from repro.kernels import ops
 
@@ -122,6 +128,29 @@ def _check_cadence(config: SolverConfig) -> None:
         raise ValueError(
             f"metric_every={config.metric_every} must divide "
             f"num_iters={config.num_iters}")
+
+
+def _storage_dtype(config: SolverConfig, *, fused: bool) -> str:
+    """Validate ``SolverConfig.dtype`` for the chosen execution path.
+
+    Returns the canonical dtype name.  bf16 is a *fused-path* storage
+    policy (state stored bf16, accumulation f32 — see
+    ``kernels.ref.pd_window_step``); every other path runs f32 and
+    rejects a reduced dtype loudly instead of silently ignoring it.
+    """
+    dt = jnp.dtype(config.dtype)
+    if dt == jnp.dtype(jnp.float32):
+        return "float32"
+    if dt == jnp.dtype(jnp.bfloat16):
+        if not fused:
+            raise NotImplementedError(
+                "SolverConfig.dtype='bfloat16' is a storage policy of "
+                "the fused pallas path; this path runs float32 (use "
+                "backend='pallas' with fused=True, or dtype='float32')")
+        return "bfloat16"
+    raise ValueError(
+        f"unsupported SolverConfig.dtype {config.dtype!r}; use "
+        "'float32' or 'bfloat16'")
 
 
 def _with_iterations(diag: dict, config: SolverConfig,
@@ -205,15 +234,16 @@ _dense_scan = _jit(_dense_scan_impl,
                    donate_argnums=(3, 4))
 
 
-def _dense_chunk_impl(graph, data, lam, w0, u0, w_true, params, *,
-                      loss: Loss, reg: Regularizer, rho: float,
-                      metric_every: int, clip_fn, affine_fn):
-    """One tol-mode chunk: ``metric_every`` steps, metrics + residual.
+def _dense_block_fn(graph, data, lam, w_true, params, *, loss: Loss,
+                    reg: Regularizer, rho: float, metric_every: int,
+                    clip_fn, affine_fn):
+    """Build ``run_block(state)`` for the device-resident tol driver:
+    ``metric_every`` engine steps, metrics, and the block-max residual.
 
     ``params`` is the loss's prox parameter pytree, precomputed *once*
-    per solve by the caller (the chunk runs many times per solve and
+    per solve by the caller (the block runs many times per solve and
     must not redo the per-node setup — e.g. the squared loss's batched
-    matrix inverse — on every call); None falls back to ``make_prox``
+    matrix inverse — on every trip); None falls back to ``make_prox``
     for opaque losses without a ``prox_setup``.
     """
     tau = graph.primal_stepsizes()
@@ -232,22 +262,48 @@ def _dense_chunk_impl(graph, data, lam, w0, u0, w_true, params, *,
                              rho=rho, clip_fn=clip_fn)
         return new, pd_residual(tau, sigma, w, u, new[0], new[1])
 
-    (w, u), res = jax.lax.scan(step, (w0, u0), None, length=metric_every)
-    obj, mse = metrics(w)
-    # chunk-max residual: robust stopping signal (a single small step —
-    # e.g. an idle federated round — must not read as convergence)
-    return w, u, obj[None], mse[None], jnp.max(res)
+    def run_block(state):
+        state, res = jax.lax.scan(step, state, None, length=metric_every)
+        obj, mse = metrics(state[0])
+        # block-max residual: robust stopping signal (a single small
+        # step — e.g. an idle federated round — must not read as
+        # convergence); it doubles as the certificate trace entry
+        res = jnp.max(res)
+        return state, (obj, mse, res), res
+
+    return run_block
 
 
-_dense_chunk = _jit(_dense_chunk_impl,
-                    static_argnames=("loss", "reg", "rho", "metric_every",
-                                     "clip_fn", "affine_fn"),
-                    donate_argnums=(3, 4))
+def _dense_tol_impl(graph, data, lam, w0, u0, w_true, params, tol, *,
+                    loss: Loss, reg: Regularizer, num_iters: int,
+                    rho: float, metric_every: int, clip_fn, affine_fn):
+    """The jitted device-resident tol engine: one ``lax.while_loop``
+    program over metric blocks, the eq.-11 residual carried on device
+    (see :func:`repro.engine.loop.device_loop`).  ``tol`` is a traced
+    operand, so tolerances share one executable.  Returns
+    ``(w, u, obj, mse, res, iterations)`` with full-budget trace
+    buffers (zeros past the stop) and ``iterations`` a device scalar —
+    the caller's single fetch.
+    """
+    run_block = _dense_block_fn(
+        graph, data, lam, w_true, params, loss=loss, reg=reg, rho=rho,
+        metric_every=metric_every, clip_fn=clip_fn, affine_fn=affine_fn)
+    (w, u), (obj, mse, res), its = device_loop(
+        run_block, (w0, u0), num_iters=num_iters,
+        metric_every=metric_every, tol=tol)
+    return w, u, obj, mse, res, its
+
+
+_dense_tol = _jit(_dense_tol_impl,
+                  static_argnames=("loss", "reg", "num_iters", "rho",
+                                   "metric_every", "clip_fn", "affine_fn"),
+                  donate_argnums=(3, 4))
 
 
 def _solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
                  w_true=None, clip_fn=None, affine_fn=None) -> SolveResult:
     _check_cadence(config)
+    _storage_dtype(config, fused=False)
     V, n = problem.num_nodes, problem.num_features
     if w0 is None:
         w0 = jnp.zeros((V, n), jnp.float32)
@@ -265,26 +321,24 @@ def _solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
             record_residual=config.record_residual)
         iterations = config.num_iters
     else:
-        # per-solve prox setup happens once, not once per chunk
+        # per-solve prox setup happens once, not once per block
         try:
             params = problem.loss.prox_setup(
                 problem.data, problem.graph.primal_stepsizes())
         except NotImplementedError:
             params = None
-
-        def run_chunk(state, r0, r1):
-            w_, u_, obj_, mse_, res_ = _dense_chunk(
-                problem.graph, problem.data, problem.lam, state[0],
-                state[1], w_true, params, loss=problem.loss,
-                reg=problem.regularizer, rho=config.rho,
-                metric_every=r1 - r0, clip_fn=clip_fn,
-                affine_fn=affine_fn)
-            # the chunk-max residual doubles as the certificate trace
-            return (w_, u_), (obj_, mse_, res_[None]), res_
-
-        (w, u), (obj, mse, res), iterations, _ = run_chunked(
-            run_chunk, (w0, u0), total=config.num_iters,
-            chunk_size=config.metric_every, tol=config.tol)
+        w, u, obj, mse, res, its = _dense_tol(
+            problem.graph, problem.data, problem.lam, w0, u0, w_true,
+            params, config.tol, loss=problem.loss,
+            reg=problem.regularizer, num_iters=config.num_iters,
+            rho=config.rho, metric_every=config.metric_every,
+            clip_fn=clip_fn, affine_fn=affine_fn)
+        # the solve's single device->host transfer: the stopping
+        # iteration; the trace buffers truncate lazily from it
+        (iterations,) = jax.device_get((its,))
+        iterations = int(iterations)
+        nb = iterations // config.metric_every
+        obj, mse, res = obj[:nb], mse[:nb], res[:nb]
     diag = _with_iterations(_diagnostics(problem, w, u, config), config,
                             iterations)
     return SolveResult(w=w, u=u, objective=obj,
@@ -325,29 +379,41 @@ _batched_scan = _jit(_batched_scan_impl,
                      donate_argnums=(3, 4))
 
 
-def _batched_chunk_impl(graph_b, data_b, lam_b, w0_b, u0_b, params_b, *,
-                        loss: Loss, reg: Regularizer, rho: float,
-                        metric_every: int, clip_fn, affine_fn):
-    """One batched tol-mode chunk: per-problem metrics + residuals.
-
-    Traces come back transposed — (1, B) per chunk — so the chunk
-    driver's axis-0 concatenation stacks records, giving (T, B) overall.
+def _batched_tol_impl(graph_b, data_b, lam_b, w0_b, u0_b, params_b, tol, *,
+                      loss: Loss, reg: Regularizer, num_iters: int,
+                      rho: float, metric_every: int, clip_fn, affine_fn):
+    """Batched device-resident tol engine: one ``lax.while_loop`` trips
+    every problem through a metric block and stops when the *max*
+    residual over the batch certifies (batch-granular stopping, as
+    before — every problem runs the shared iteration count so every
+    returned certificate is individually valid).  Traces come back
+    (T, B); the caller transposes after truncating at the fetched
+    iteration count.
     """
-    def one(graph, data, lam, w0, u0, params):
-        return _dense_chunk_impl(
-            graph, data, lam, w0, u0, None, params, loss=loss, reg=reg,
-            rho=rho, metric_every=metric_every, clip_fn=clip_fn,
+    def one_block(graph, data, lam, params, state):
+        run_block = _dense_block_fn(
+            graph, data, lam, None, params, loss=loss, reg=reg, rho=rho,
+            metric_every=metric_every, clip_fn=clip_fn,
             affine_fn=affine_fn)
+        return run_block(state)
 
-    w, u, obj, mse, res = jax.vmap(one)(graph_b, data_b, lam_b, w0_b,
-                                        u0_b, params_b)
-    return w, u, obj.T, mse.T, res
+    def run_block(state):
+        state, (obj, mse, res), _ = jax.vmap(one_block, in_axes=(0, 0, 0,
+                                                                 0, 0))(
+            graph_b, data_b, lam_b, params_b, state)
+        return state, (obj, mse, res), jnp.max(res)
+
+    (w, u), (obj, mse, res), its = device_loop(
+        run_block, (w0_b, u0_b), num_iters=num_iters,
+        metric_every=metric_every, tol=tol)
+    return w, u, obj, mse, res, its
 
 
-_batched_chunk = _jit(_batched_chunk_impl,
-                      static_argnames=("loss", "reg", "rho", "metric_every",
-                                       "clip_fn", "affine_fn"),
-                      donate_argnums=(3, 4))
+_batched_tol = _jit(_batched_tol_impl,
+                    static_argnames=("loss", "reg", "num_iters", "rho",
+                                     "metric_every", "clip_fn",
+                                     "affine_fn"),
+                    donate_argnums=(3, 4))
 
 
 def _batched_setup_impl(graph_b, data_b, *, loss: Loss):
@@ -369,14 +435,15 @@ def solve_dense_batched(problem_b: Problem, config: SolverConfig, w0_b,
     ``problem_b`` is a stacked Problem pytree (leading batch axis on
     every array leaf; shared static aux) — see ``api.solver.solve_many``
     for the stacking front-end.  Early stopping is batch-granular: with
-    ``tol`` set, the chunk loop stops when the *max* residual over the
-    batch certifies, so every problem runs the shared iteration count
-    and every returned certificate is individually valid.
+    ``tol`` set, the on-device while loop stops when the *max* residual
+    over the batch certifies, so every problem runs the shared iteration
+    count and every returned certificate is individually valid.
 
     Returns ``(w, u, obj, mse, res, iterations)`` with leading batch
     axes ((B, T) traces; ``res`` None unless tracked).
     """
     _check_cadence(config)
+    _storage_dtype(config, fused=False)
     if config.tol is None or config.num_iters == 0:
         w, u, obj, mse, res = _batched_scan(
             problem_b.graph, problem_b.data, problem_b.lam, w0_b, u0_b,
@@ -392,20 +459,16 @@ def solve_dense_batched(problem_b: Problem, config: SolverConfig, w0_b,
     except NotImplementedError:
         params_b = None
 
-    def run_chunk(state, r0, r1):
-        w_, u_, obj_, mse_, res_ = _batched_chunk(
-            problem_b.graph, problem_b.data, problem_b.lam, state[0],
-            state[1], params_b, loss=problem_b.loss,
-            reg=problem_b.regularizer, rho=config.rho,
-            metric_every=r1 - r0, clip_fn=clip_fn, affine_fn=affine_fn)
-        # stop when the whole batch certifies (max over problems); each
-        # problem's own residual column stays its certificate trace
-        return (w_, u_), (obj_, mse_, res_[None, :]), jnp.max(res_)
-
-    (w, u), (obj, mse, res), iterations, _ = run_chunked(
-        run_chunk, (w0_b, u0_b), total=config.num_iters,
-        chunk_size=config.metric_every, tol=config.tol)
-    return w, u, obj.T, mse.T, res.T, iterations
+    w, u, obj, mse, res, its = _batched_tol(
+        problem_b.graph, problem_b.data, problem_b.lam, w0_b, u0_b,
+        params_b, config.tol, loss=problem_b.loss,
+        reg=problem_b.regularizer, num_iters=config.num_iters,
+        rho=config.rho, metric_every=config.metric_every,
+        clip_fn=clip_fn, affine_fn=affine_fn)
+    # the batch's single device->host transfer: the stopping iteration
+    (iterations,) = jax.device_get((its,))
+    nb = int(iterations) // config.metric_every
+    return (w, u, obj[:nb].T, mse[:nb].T, res[:nb].T, int(iterations))
 
 
 def resolve_kernel_hooks(problem: Problem, config: SolverConfig,
@@ -492,8 +555,15 @@ def _fused_window_cap() -> int:
     return (12 << 20) if jax.default_backend() == "tpu" else (1 << 62)
 
 
-def _fused_window_fits(problem: Problem) -> bool:
-    """Plan (or fetch) the graph's layout and check the VMEM window cap."""
+def _fused_window_fits(problem: Problem,
+                       config: SolverConfig | None = None) -> bool:
+    """Plan (or fetch) the graph's layout and check the VMEM window cap.
+
+    The estimate is dtype-aware: the storage policy's itemsize scales
+    the state/prox-parameter traffic (``EdgeBlockLayout.window_bytes``),
+    so bf16 roughly doubles the fusable window instead of falling back
+    to the unfused path early.
+    """
     lt = _graph_layout(problem.graph)
     try:
         param_floats = problem.loss.prox_param_floats(
@@ -502,24 +572,32 @@ def _fused_window_fits(problem: Problem) -> bool:
         # a custom loss with prox_setup but no VMEM estimate: fall back
         # to the unfused path rather than crash the dispatch gate
         return False
+    itemsize = 4 if config is None else jnp.dtype(config.dtype).itemsize
     return lt.window_bytes(
-        problem.num_features,
-        param_floats=param_floats) <= _fused_window_cap()
+        problem.num_features, param_floats=param_floats,
+        itemsize=itemsize) <= _fused_window_cap()
 
 
 def _should_fuse(problem: Problem, config: SolverConfig) -> bool:
     """The one fused-dispatch gate, shared by solve_pallas and
     solve_path so the two can never route differently."""
     return (_fused_enabled(config) and _fused_supported(problem, config)
-            and _fused_window_fits(problem))
+            and _fused_window_fits(problem, config))
 
 
 def _fused_setup(graph, data, lam, w_true, layout_arrays, *, loss, reg,
-                 layout):
-    """Shared per-solve prep for the fused scan/chunk engines: layout
-    padding, stepsizes, windowed prox parameters, and the metric fn."""
+                 layout, dtype: str = "float32"):
+    """Shared per-solve prep for the fused scan/tol engines: layout
+    padding, stepsizes, windowed prox parameters, and the metric fn.
+
+    ``dtype`` is the storage policy: float prox-parameter stores are
+    cast to it (bf16 halves their HBM<->VMEM traffic) while the
+    step/index tensors (tau, sigma, src/dst, la) stay f32 and the
+    metric fn always evaluates in f32.
+    """
     lt = layout
     (node_perm, node_inv, src_l, dst_l, weights_l, edge_pos) = layout_arrays
+    store_dt = jnp.dtype(dtype)
 
     # the paper-eq.-13 stepsizes come from the one source of truth
     # (EmpiricalGraph), gathered into layout order (pad nodes: tau 1)
@@ -535,7 +613,11 @@ def _fused_setup(graph, data, lam, w_true, layout_arrays, *, loss, reg,
                       labeled_mask=gather_nodes(data.labeled_mask))
     params = loss.prox_setup(data_l, tau_l)
     pkeys = tuple(sorted(params))
-    params_s = tuple(lt.pad_node_store(params[k]) for k in pkeys)
+    params_s = tuple(
+        lt.pad_node_store(params[k]).astype(store_dt)
+        if jnp.issubdtype(params[k].dtype, jnp.floating)
+        else lt.pad_node_store(params[k])
+        for k in pkeys)
     tau_s = lt.pad_node_store(tau_l[:, None])
     src2, dst2 = src_l[:, None], dst_l[:, None]
     sig2 = sig_l[:, None]
@@ -543,7 +625,7 @@ def _fused_setup(graph, data, lam, w_true, layout_arrays, *, loss, reg,
     unlabeled = 1.0 - data.labeled_mask
 
     def metrics(w_l):
-        w = jnp.take(w_l, node_inv, axis=0)
+        w = jnp.take(w_l, node_inv, axis=0).astype(jnp.float32)
         obj = loss.empirical_error(data, w) + reg.value(graph, w, lam)
         if w_true is None:
             mse = jnp.float32(0.0)
@@ -556,27 +638,38 @@ def _fused_setup(graph, data, lam, w_true, layout_arrays, *, loss, reg,
 
 
 def _fused_run_iters(lt, inc_e, inc_s, params_s, pkeys, tau_s, src2, dst2,
-                     sig2, la2, *, loss, reg, rho, use_kernel):
+                     sig2, la2, *, loss, reg, rho, use_kernel,
+                     compute_residual: bool = False):
     """Build ``run_iters(state, iters)`` advancing the padded stores.
 
     The scan carries the *padded* stores: the halo padding rows are
     never written, so writing each step's owned output back with a
     dynamic_update_slice (in-place under XLA's loop aliasing) avoids
     re-materializing the padded tensors every iteration.
+
+    With ``compute_residual`` each call also returns the f32 eq.-11
+    residual scalar the kernel accumulated in-kernel (max over blocks
+    and, for ``iters > 1``, over iterations):
+    ``run_iters(state, iters) -> (state, residual)``.
     """
     bv, eb = lt.block_nodes, lt.block_edges
     kn, klo, khi = lt.kn, lt.klo, lt.khi
 
     def run_iters(state, iters):
         w_store, u_store = state
-        w_new, u_new = ops.pd_step(
+        out = ops.pd_step(
             w_store, u_store, inc_e, inc_s, params_s, tau_s, src2, dst2,
             sig2, la2, loss=loss, reg=reg, pkeys=pkeys, block_nodes=bv,
             block_edges=eb, kn=kn, klo=klo, khi=khi, rho=rho, iters=iters,
-            use_kernel=use_kernel)
-        return (jax.lax.dynamic_update_slice(w_store, w_new, (0, 0)),
-                jax.lax.dynamic_update_slice(u_store, u_new,
-                                             (klo * eb, 0)))
+            compute_residual=compute_residual, use_kernel=use_kernel)
+        if compute_residual:
+            w_new, u_new, res = out
+        else:
+            w_new, u_new = out
+        new = (jax.lax.dynamic_update_slice(w_store, w_new, (0, 0)),
+               jax.lax.dynamic_update_slice(u_store, u_new,
+                                            (klo * eb, 0)))
+        return (new, res) if compute_residual else new
 
     return run_iters
 
@@ -584,20 +677,27 @@ def _fused_run_iters(lt, inc_e, inc_s, params_s, pkeys, tau_s, src2, dst2,
 def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, layout_arrays,
                      inc_arrays, *, loss: Loss, reg: Regularizer,
                      layout, num_iters: int, rho: float, metric_every: int,
-                     use_kernel: bool, record_residual: bool = False):
+                     use_kernel: bool, record_residual: bool = False,
+                     dtype: str = "float32"):
     """Jitted fused engine: scan the fused PD step over the edge-blocked
     layout, recording metrics (in original node order, exactly the dense
     engine's formulas) on the cadence.
 
     ``layout`` is static (block extents); the layout's arrays come in as
     the traced ``layout_arrays``/``inc_arrays`` tuples so they stay
-    device buffers rather than jaxpr constants.
+    device buffers rather than jaxpr constants.  ``dtype`` is the
+    storage policy for the scanned state and prox parameters (bf16
+    halves the window traffic; accumulation stays f32 — see
+    ``kernels.ref.pd_window_step``); returned ``w``/``u`` and all
+    traces are f32 regardless.
     """
     lt = layout
+    store_dt = jnp.dtype(dtype)
+    w0_l, u0_l = w0_l.astype(store_dt), u0_l.astype(store_dt)
     inc_e, inc_s = inc_arrays
     (params_s, pkeys, tau_l, tau_s, sig_l, sig2, src2, dst2, la2,
      metrics) = _fused_setup(graph, data, lam, w_true, layout_arrays,
-                             loss=loss, reg=reg, layout=lt)
+                             loss=loss, reg=reg, layout=lt, dtype=dtype)
 
     run_iters = _fused_run_iters(
         lt, lt.pad_node_store(inc_e), lt.pad_node_store(inc_s), params_s,
@@ -617,7 +717,11 @@ def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, layout_arrays,
         def residual_fn(prev, new):
             w_p, u_p = owned(prev)
             w_n, u_n = owned(new)
-            return pd_residual(tau_l, sig_l, w_p, u_p, w_n, u_n)
+            # f32 accumulation regardless of the storage policy
+            return pd_residual(tau_l, sig_l, w_p.astype(jnp.float32),
+                               u_p.astype(jnp.float32),
+                               w_n.astype(jnp.float32),
+                               u_n.astype(jnp.float32))
 
     w_store0 = lt.pad_node_store(w0_l)
     u_store0 = jnp.pad(u0_l, ((klo * eb, khi * eb), (0, 0)))
@@ -630,71 +734,86 @@ def _fused_scan_impl(graph, data, w0_l, u0_l, lam, w_true, layout_arrays,
     else:
         (obj_trace, mse_trace), res_trace = traces, None
     w_l, u_l = owned((w_store, u_store))
-    return w_l, u_l, obj_trace, mse_trace, res_trace
+    return (w_l.astype(jnp.float32), u_l.astype(jnp.float32), obj_trace,
+            mse_trace, res_trace)
 
 
 _fused_scan = _jit(_fused_scan_impl,
                    static_argnames=("loss", "reg", "layout", "num_iters",
                                     "rho", "metric_every", "use_kernel",
-                                    "record_residual"),
+                                    "record_residual", "dtype"),
                    donate_argnums=(2, 3))
 
 
-def _fused_chunk_impl(graph, data, w_store0, u_store0, lam, w_true,
-                      node_inv, inc_stores, params_s, tau_ls, sig_ls,
-                      edge_cols, *, loss: Loss, reg: Regularizer, layout,
-                      pkeys, rho: float, metric_every: int,
-                      use_kernel: bool):
-    """One tol-mode fused chunk: single-step scans with the residual
-    evaluated on the owned (non-halo) store regions each iteration.
+def _fused_tol_impl(graph, data, w_store0, u_store0, lam, w_true,
+                    node_inv, inc_stores, params_s, tau_s, sig2,
+                    edge_cols, tol, *, loss: Loss, reg: Regularizer,
+                    layout, pkeys, num_iters: int, rho: float,
+                    metric_every: int, use_kernel: bool):
+    """Device-resident fused tol engine: the ``lax.while_loop`` driver
+    over metric blocks with the eq.-11 residual computed *in-kernel*
+    (``kernels/pd_step.py``) — the stopping signal is born on device and
+    never leaves it; the caller's single fetch of the iteration count is
+    the solve's one device->host transfer.
 
     All per-solve setup (layout gathers, prox parameters, padded
     stepsizes) is precomputed once by the caller and arrives as traced
-    operands — the chunk runs many times per solve and only advances
-    the padded stores.
+    operands.  When the whole graph is one VMEM block, each metric
+    block is a *single* kernel launch (``iters=metric_every``) whose
+    running-max residual rides the VMEM carry; otherwise the block
+    scans single launches, each returning its per-launch residual max.
     """
     lt = layout
     inc_e_s, inc_s_s = inc_stores
-    tau_l, tau_s = tau_ls
-    sig_l, sig2 = sig_ls
     src2, dst2, la2 = edge_cols
 
     run_iters = _fused_run_iters(
         lt, inc_e_s, inc_s_s, params_s, pkeys, tau_s, src2, dst2, sig2,
-        la2, loss=loss, reg=reg, rho=rho, use_kernel=use_kernel)
+        la2, loss=loss, reg=reg, rho=rho, use_kernel=use_kernel,
+        compute_residual=True)
 
     eb, klo = lt.block_edges, lt.klo
+    metrics = make_metrics_fn(loss, reg, graph, data, lam, w_true)
 
-    def owned(state):
-        w_store, u_store = state
-        return (jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad),
-                jax.lax.slice_in_dim(u_store, klo * eb,
-                                     klo * eb + lt.edges_pad))
+    def block_metrics(w_store):
+        w_l = jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad)
+        w = jnp.take(w_l, node_inv, axis=0).astype(jnp.float32)
+        return metrics(w)
 
-    def step(state, _):
-        new = run_iters(state, 1)
-        w_p, u_p = owned(state)
-        w_n, u_n = owned(new)
-        return new, pd_residual(tau_l, sig_l, w_p, u_p, w_n, u_n)
+    if lt.num_blocks == 1:
+        def run_block(state):
+            state, res = run_iters(state, metric_every)
+            obj, mse = block_metrics(state[0])
+            return state, (obj, mse, res), res
+    else:
+        def run_block(state):
+            def step(st, _):
+                return run_iters(st, 1)
+            state, res = jax.lax.scan(step, state, None,
+                                      length=metric_every)
+            res = jnp.max(res)
+            obj, mse = block_metrics(state[0])
+            return state, (obj, mse, res), res
 
-    (w_store, u_store), res = jax.lax.scan(
-        step, (w_store0, u_store0), None, length=metric_every)
-    w_l, _ = owned((w_store, u_store))
-    w = jnp.take(w_l, node_inv, axis=0)
-    obj, mse = make_metrics_fn(loss, reg, graph, data, lam, w_true)(w)
-    return w_store, u_store, obj[None], mse[None], jnp.max(res)
+    (w_store, u_store), (obj, mse, res), its = device_loop(
+        run_block, (w_store0, u_store0), num_iters=num_iters,
+        metric_every=metric_every, tol=tol)
+    return w_store, u_store, obj, mse, res, its
 
 
-_fused_chunk = _jit(_fused_chunk_impl,
-                    static_argnames=("loss", "reg", "layout", "pkeys",
-                                     "rho", "metric_every", "use_kernel"),
-                    donate_argnums=(2, 3))
+_fused_tol = _jit(_fused_tol_impl,
+                  static_argnames=("loss", "reg", "layout", "pkeys",
+                                   "num_iters", "rho", "metric_every",
+                                   "use_kernel"),
+                  donate_argnums=(2, 3))
 
 
 def _solve_fused(problem: Problem, config: SolverConfig, *, w0=None,
                  u0=None, w_true=None) -> SolveResult:
     """Solve via the fused PD kernel on the edge-blocked graph layout."""
     _check_cadence(config)
+    dtype = _storage_dtype(config, fused=True)
+    store_dt = jnp.dtype(dtype)
     lt = _graph_layout(problem.graph)
     n = problem.num_features
     data = problem.data
@@ -716,47 +835,49 @@ def _solve_fused(problem: Problem, config: SolverConfig, *, w0=None,
     inc_arrays = (lt.inc_edges, lt.inc_signs)
     use_kernel = ops._use_kernel_default()
     if config.tol is None or config.num_iters == 0:
-        # 0-iteration budget: degenerate 0-length scan, no chunk loop
+        # 0-iteration budget: degenerate 0-length scan, no while loop
         w_l, u_l, obj, mse, res = _fused_scan(
             problem.graph, data, w0_l, u0_l, problem.lam, w_true,
             layout_arrays, inc_arrays, loss=problem.loss,
             reg=problem.regularizer, layout=lt,
             num_iters=config.num_iters, rho=config.rho,
             metric_every=config.metric_every, use_kernel=use_kernel,
-            record_residual=config.record_residual)
+            record_residual=config.record_residual, dtype=dtype)
         iterations = config.num_iters
     else:
         # per-solve setup (layout gathers, prox params, padded
-        # stepsizes) runs once, eagerly; chunks advance padded stores
+        # stepsizes) runs once, eagerly; the while loop advances the
+        # padded stores in the storage dtype
         (params_s, pkeys, tau_l, tau_s, sig_l, sig2, src2, dst2, la2,
          _metrics) = _fused_setup(
             problem.graph, data, problem.lam, w_true, layout_arrays,
-            loss=problem.loss, reg=problem.regularizer, layout=lt)
+            loss=problem.loss, reg=problem.regularizer, layout=lt,
+            dtype=dtype)
         eb, klo = lt.block_edges, lt.klo
         inc_stores = (lt.pad_node_store(lt.inc_edges),
                       lt.pad_node_store(lt.inc_signs))
-        store0 = (lt.pad_node_store(w0_l),
-                  jnp.pad(u0_l, ((klo * eb, lt.khi * eb), (0, 0))))
-
-        def run_chunk(state, r0, r1):
-            w_s, u_s, obj_, mse_, res_ = _fused_chunk(
-                problem.graph, data, state[0], state[1], problem.lam,
-                w_true, lt.node_inv, inc_stores, params_s,
-                (tau_l, tau_s), (sig_l, sig2), (src2, dst2, la2),
-                loss=problem.loss, reg=problem.regularizer, layout=lt,
-                pkeys=pkeys, rho=config.rho, metric_every=r1 - r0,
-                use_kernel=use_kernel)
-            # the chunk-max residual doubles as the certificate trace
-            return (w_s, u_s), (obj_, mse_, res_[None]), res_
-
-        ((w_store, u_store), (obj, mse, res), iterations, _) = run_chunked(
-            run_chunk, store0, total=config.num_iters,
-            chunk_size=config.metric_every, tol=config.tol)
+        store0 = (lt.pad_node_store(w0_l).astype(store_dt),
+                  jnp.pad(u0_l, ((klo * eb, lt.khi * eb),
+                                 (0, 0))).astype(store_dt))
+        w_store, u_store, obj, mse, res, its = _fused_tol(
+            problem.graph, data, store0[0], store0[1], problem.lam,
+            w_true, lt.node_inv, inc_stores, params_s, tau_s, sig2,
+            (src2, dst2, la2), config.tol, loss=problem.loss,
+            reg=problem.regularizer, layout=lt, pkeys=pkeys,
+            num_iters=config.num_iters, rho=config.rho,
+            metric_every=config.metric_every, use_kernel=use_kernel)
+        # the solve's single device->host transfer: the stopping
+        # iteration; the trace buffers truncate lazily from it
+        (iterations,) = jax.device_get((its,))
+        iterations = int(iterations)
+        nb = iterations // config.metric_every
+        obj, mse, res = obj[:nb], mse[:nb], res[:nb]
         w_l = jax.lax.slice_in_dim(w_store, 0, lt.nodes_pad)
         u_l = jax.lax.slice_in_dim(u_store, klo * eb,
                                    klo * eb + lt.edges_pad)
-    w = jnp.take(w_l, lt.node_inv, axis=0)
-    u = jnp.take(u_l, lt.edge_pos, axis=0) * lt.edge_flip[:, None]
+    w = jnp.take(w_l, lt.node_inv, axis=0).astype(jnp.float32)
+    u = (jnp.take(u_l, lt.edge_pos, axis=0)
+         * lt.edge_flip[:, None]).astype(jnp.float32)
     diag = _with_iterations(_diagnostics(problem, w, u, config), config,
                             iterations)
     return SolveResult(w=w, u=u, objective=obj,
@@ -805,6 +926,7 @@ def solve_federated(problem: Problem, config: SolverConfig, *, w0=None,
     participation — the dense oracle mode the conformance suite locks
     down.
     """
+    _storage_dtype(config, fused=False)
     # local import: repro.federated layers on this module (lazy both ways)
     import dataclasses as _dc
 
@@ -834,6 +956,7 @@ def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
     sharded loop carries prox parameters, not raw node data), so the traces
     have length 1.
     """
+    _storage_dtype(config, fused=False)
     # local imports: core.distributed is a peer of the api package and
     # delegates its own front-end back here (lazy on both sides).
     from repro.core.distributed import shard_problem, solve_nlasso_sharded

@@ -25,8 +25,10 @@ Implemented losses (paper §4.1-4.3):
 
 Losses are small frozen dataclasses, so they are hashable and ride through
 ``jax.jit`` as static arguments.  ``kernel_safe`` marks losses whose
-``prox_apply`` lowers inside a Pallas TPU kernel (the logistic Newton
-loop needs ``jnp.linalg.solve``, which does not).  Registering a new loss
+``prox_apply`` lowers inside a Pallas TPU kernel — all three stock
+losses qualify (the logistic Newton system is solved by an explicit
+unrolled small-n Cholesky instead of ``jnp.linalg.solve``, which has no
+Pallas lowering).  Registering a new loss
 makes it reachable from every backend via ``Problem.create(...,
 loss="<name>")`` — the model-agnostic plug-in point of *Towards
 Model-Agnostic Federated Learning over Networks*.
@@ -76,6 +78,43 @@ def get_loss(spec, **kwargs) -> "Loss":
 
 def _soft_threshold(z: jnp.ndarray, t) -> jnp.ndarray:
     return jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
+
+
+def _chol_solve(a: jnp.ndarray, rhs: jnp.ndarray) -> jnp.ndarray:
+    """Batched SPD solve via an explicit unrolled Cholesky factorization.
+
+    ``a`` (V, n, n) symmetric positive definite, ``rhs`` (V, n) ->
+    (V, n) solving ``a @ z = rhs`` per node.  The feature count n is
+    small and static, so the Cholesky-Banachiewicz recurrence and the
+    two triangular substitutions unroll at trace time into pure
+    elementwise arithmetic over the node axis — no ``jnp.linalg``
+    primitives, which is what lets callers (the logistic Newton step)
+    lower inside a Pallas TPU kernel where LU / triangular-solve ops
+    have no mosaic lowering.
+    """
+    n = a.shape[-1]
+    lo = [[None] * n for _ in range(n)]
+    for i in range(n):
+        for j in range(i + 1):
+            s = a[..., i, j]
+            for k in range(j):
+                s = s - lo[i][k] * lo[j][k]
+            lo[i][j] = jnp.sqrt(s) if i == j else s / lo[j][j]
+    # forward substitution  L c = rhs
+    c = [None] * n
+    for i in range(n):
+        s = rhs[..., i]
+        for k in range(i):
+            s = s - lo[i][k] * c[k]
+        c[i] = s / lo[i][i]
+    # back substitution  L^T z = c
+    z = [None] * n
+    for i in reversed(range(n)):
+        s = c[i]
+        for k in range(i + 1, n):
+            s = s - lo[k][i] * z[k]
+        z[i] = s / lo[i][i]
+    return jnp.stack(z, axis=-1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -231,13 +270,16 @@ class LogisticLoss(Loss):
     The objective  L_i(z) + (1/(2 tau_i))||z - v||^2  is smooth and
     strongly convex; n is small, so a handful of exact Newton steps
     converge to machine precision (the paper's remark that the updates
-    are robust to inexact resolvent evaluation).  ``kernel_safe`` is
-    False: the Newton solve needs ``jnp.linalg.solve``, which has no
-    Pallas lowering — the fused backend runs this loss through the
-    bit-comparable jnp reference instead of the TPU kernel.
+    are robust to inexact resolvent evaluation).  The Newton system is
+    solved by the explicit small-n Cholesky (:func:`_chol_solve` —
+    exact, and the regularized Hessian ``H + I/tau`` is SPD by
+    construction) rather than ``jnp.linalg.solve``, so ``kernel_safe``
+    is True and logistic rides the fused Pallas kernel on real TPU.
     """
 
     num_inner: int = 8
+
+    kernel_safe: ClassVar[bool] = True
 
     def node_values(self, data, w):
         logits = jnp.einsum("vmn,vn->vm", data.x, w)
@@ -266,8 +308,7 @@ class LogisticLoss(Loss):
             hess = jnp.einsum("vm,vmn,vmk->vnk", d, x, x) / m[..., None]
             n = z.shape[1]
             hess = hess + jnp.eye(n, dtype=z.dtype)[None] / tau[..., None]
-            delta = jnp.linalg.solve(hess, grad[..., None])[..., 0]
-            return z - delta
+            return z - _chol_solve(hess, grad)
 
         z = jax.lax.fori_loop(0, self.num_inner, body, v)
         return jnp.where(params["labeled"] > 0, z, v)

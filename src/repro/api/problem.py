@@ -144,6 +144,21 @@ class SolverConfig:
                    backend fills unset hooks with the stock TPU kernels).
                    Prefer ``backend="pallas"`` unless you need a
                    non-standard kernel.
+
+    Precision policy:
+      dtype:       storage dtype for the iteration state on the fused
+                   pallas path: "float32" (default) or "bfloat16".
+                   bf16 stores ``w`` / ``u`` and the prox parameters at
+                   2 bytes — halving the HBM<->VMEM window traffic and
+                   roughly doubling the fusable graph size — while every
+                   gather-sum, prox solve, and dual resolvent still
+                   *accumulates* in f32 (upcast at the VMEM window
+                   boundary, see ``kernels.ref.pd_window_step``).
+                   Returned ``w`` / ``u`` and all traces are f32.  Note
+                   bf16 quantizes each iterate, so residuals floor near
+                   bf16 resolution (~3e-3 relative): pair bf16 with a
+                   ``tol`` no tighter than that.  Backends other than
+                   the fused pallas path reject non-f32 dtypes.
     """
 
     num_iters: int = 500
@@ -173,6 +188,9 @@ class SolverConfig:
     # eq.-11 certificate on the result (disabled internally for
     # warm-phase solves whose result is discarded)
     compute_diagnostics: bool = True
+    # storage dtype for the fused-path iteration state ("float32" or
+    # "bfloat16"); accumulation is always f32
+    dtype: str = "float32"
 
     def replace(self, **kw) -> "SolverConfig":
         return dataclasses.replace(self, **kw)

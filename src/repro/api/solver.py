@@ -22,12 +22,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.backends import (_should_fuse, _solve_dense, _solve_fused,
-                                certificate, get_backend,
+from repro.api.backends import (_jit, _should_fuse, _solve_dense,
+                                _solve_fused, certificate, get_backend,
                                 resolve_kernel_hooks, solve_dense_batched)
 from repro.api.problem import Problem, SolveResult, SolverConfig
+from repro.core.graph import graph_signal_mse
+from repro.engine import DenseExecutor, pd_residual
 from repro.engine import capped as _capped
 from repro.engine import default_warm_lam as _default_warm_lam
+from repro.engine import pd_step as engine_pd_step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +71,213 @@ class Solver:
                        w_true=w_true)
 
 
+# ---------------------------------------------------------------------------
+# Masked-vmap tol sweep: every lambda stops on its own residual
+# ---------------------------------------------------------------------------
+
+def _path_lane_fns(graph, data, w_true, params, *, loss, reg, rho: float,
+                   metric_every: int, clip_fn, affine_fn):
+    """Per-lambda lane machinery for the masked sweep: ``advance(lam,
+    state)`` runs one metric block at one lambda and returns the new
+    state plus the block-max eq.-11 residual; ``lane_metrics(lam, w)``
+    evaluates the dense engine's trace formulas at that lambda."""
+    tau = graph.primal_stepsizes()
+    sigma = graph.dual_stepsizes()
+    if params is None:
+        prox = loss.make_prox(data, tau, affine_fn=affine_fn)
+    else:
+        def prox(v):
+            return loss.prox_apply(params, v, affine_fn=affine_fn)
+    executor = DenseExecutor(graph)
+    unlabeled = 1.0 - data.labeled_mask
+
+    def advance(lam, state):
+        def step(st, _):
+            w, u = st
+            new = engine_pd_step(executor, prox, reg, lam, tau, sigma, w,
+                                 u, rho=rho, clip_fn=clip_fn)
+            return new, pd_residual(tau, sigma, w, u, new[0], new[1])
+
+        st, res = jax.lax.scan(step, state, None, length=metric_every)
+        return st, jnp.max(res)
+
+    def lane_metrics(lam, w):
+        obj = loss.empirical_error(data, w) + reg.value(graph, w, lam)
+        if w_true is None:
+            mse = jnp.float32(0.0)
+        else:
+            mse = graph_signal_mse(w, w_true, unlabeled)
+        return obj, mse
+
+    return advance, lane_metrics
+
+
+def _cascade_impl(graph, data, lams_desc, w_warm, u_warm, params, trigger,
+                  *, loss, reg, rho: float, metric_every: int, clip_fn,
+                  affine_fn):
+    """Residual-triggered neighbor continuation cascade.
+
+    Scans the lambda path in *descending* order carrying one state: at
+    each lambda the carried duals are re-projected onto that lambda's
+    feasible set, and — only while the carried residual is still above
+    ``trigger`` (``lax.cond``, so converged carries skip the work) —
+    one metric block runs before the state is emitted as that lambda's
+    warm start.  Each lambda therefore starts from its larger
+    neighbor's iterate (nLasso continuation, cf. 1903.11178) instead of
+    from the single shared warm solve.  Returns per-lambda ``(w, u)``
+    inits stacked in path order (descending).
+    """
+    advance, _ = _path_lane_fns(
+        graph, data, None, params, loss=loss, reg=reg, rho=rho,
+        metric_every=metric_every, clip_fn=clip_fn, affine_fn=affine_fn)
+
+    def step(carry, lam):
+        w, u, res = carry
+        u = reg.project_dual(u, graph, lam)
+        (w, u), res = jax.lax.cond(
+            res > trigger,
+            lambda st: advance(lam, st),
+            lambda st: (st, res),
+            (w, u))
+        return (w, u, res), (w, u)
+
+    _, (w_b, u_b) = jax.lax.scan(
+        step, (w_warm, u_warm, jnp.float32(jnp.inf)), lams_desc)
+    return w_b, u_b
+
+
+_cascade = _jit(_cascade_impl,
+                static_argnames=("loss", "reg", "rho", "metric_every",
+                                 "clip_fn", "affine_fn"))
+
+
+def _masked_sweep_impl(graph, data, lams, w0_b, u0_b, w_true, params, tol,
+                       *, loss, reg, num_iters: int, rho: float,
+                       metric_every: int, clip_fn, affine_fn):
+    """The masked-vmap tol sweep: one ``lax.while_loop`` whose body
+    trips every lambda lane through a metric block, with a per-lambda
+    ``done`` mask.
+
+    Converged lanes are *frozen* — the post-block select on the mask
+    keeps their state fixed, so each lane's iterate stream is exactly
+    the stream a single tol solve from the same init would produce, and
+    its stopping iteration (the first block whose block-max residual is
+    <= tol) matches the single solve's.  The loop exits when every lane
+    is done or the budget is exhausted.  Frozen lanes record residual 0
+    and their frozen metrics.
+
+    Returns ``(w_b, u_b, (obj, mse, res) trace buffers (num_blocks, L),
+    per-lane iterations (L,) int32, blocks_run)`` — the last two are
+    device scalars/arrays; one fetch converts both.
+    """
+    advance, lane_metrics = _path_lane_fns(
+        graph, data, w_true, params, loss=loss, reg=reg, rho=rho,
+        metric_every=metric_every, clip_fn=clip_fn, affine_fn=affine_fn)
+    num_blocks = num_iters // metric_every
+    tol = jnp.asarray(tol, jnp.float32)
+    vadv = jax.vmap(advance, in_axes=(0, 0))
+    vmet = jax.vmap(lane_metrics, in_axes=(0, 0))
+
+    def freeze(new, old, done):
+        d = done.reshape(done.shape + (1,) * (new.ndim - 1))
+        return jnp.where(d, old, new)
+
+    def run_block(state_b, done, iters_b):
+        new_b, res_b = vadv(lams, state_b)
+        # converged lanes are frozen: select the old state on the mask
+        state_b = jax.tree_util.tree_map(
+            lambda nw, od: freeze(nw, od, done), new_b, state_b)
+        iters_b = iters_b + jnp.where(done, 0, metric_every).astype(
+            jnp.int32)
+        res_b = jnp.where(done, 0.0, res_b)
+        done = jnp.logical_or(done, res_b <= tol)
+        obj_b, mse_b = vmet(lams, state_b[0])
+        return state_b, done, iters_b, (obj_b, mse_b, res_b)
+
+    # block 0 runs unconditionally (as in every tol engine) and sizes
+    # the preallocated trace buffers
+    L = lams.shape[0]
+    state_b, done, iters_b, rec0 = run_block(
+        (w0_b, u0_b), jnp.zeros((L,), bool), jnp.zeros((L,), jnp.int32))
+    traces = jax.tree_util.tree_map(
+        lambda r: jnp.zeros((num_blocks,) + r.shape,
+                            r.dtype).at[0].set(r), rec0)
+
+    def cond(c):
+        _, done, _, k, _ = c
+        return jnp.logical_and(k < num_blocks,
+                               jnp.logical_not(jnp.all(done)))
+
+    def body(c):
+        state_b, done, iters_b, k, traces = c
+        state_b, done, iters_b, rec = run_block(state_b, done, iters_b)
+        traces = jax.tree_util.tree_map(
+            lambda t, r: jax.lax.dynamic_update_index_in_dim(t, r, k, 0),
+            traces, rec)
+        return state_b, done, iters_b, k + 1, traces
+
+    state_b, done, iters_b, k, traces = jax.lax.while_loop(
+        cond, body, (state_b, done, iters_b, jnp.int32(1), traces))
+    return state_b[0], state_b[1], traces, iters_b, k
+
+
+_masked_sweep = _jit(_masked_sweep_impl,
+                     static_argnames=("loss", "reg", "num_iters", "rho",
+                                      "metric_every", "clip_fn",
+                                      "affine_fn"),
+                     donate_argnums=(3, 4))
+
+#: cascade trigger: a lambda inherits its neighbor's state untouched
+#: when that carry is already within TRIGGER_SCALE * tol
+_CASCADE_TRIGGER_SCALE = 10.0
+
+
+def _solve_path_masked(problem: Problem, lams, cfg: SolverConfig, warm,
+                       *, w_true=None) -> SolveResult:
+    """tol-mode ``solve_path``: neighbor cascade + masked-vmap sweep."""
+    clip_fn, affine_fn = resolve_kernel_hooks(problem, cfg,
+                                              cfg.backend == "pallas")
+    try:
+        params = problem.loss.prox_setup(
+            problem.data, problem.graph.primal_stepsizes())
+    except NotImplementedError:
+        params = None
+    order = jnp.argsort(-lams)           # descending: large lambda first
+    inv_order = jnp.argsort(order)
+    u_warm = problem.regularizer.project_dual(warm.u, problem.graph,
+                                              jnp.max(lams))
+    w_desc, u_desc = _cascade(
+        problem.graph, problem.data, lams[order], warm.w, u_warm, params,
+        _CASCADE_TRIGGER_SCALE * cfg.tol, loss=problem.loss,
+        reg=problem.regularizer, rho=cfg.rho,
+        metric_every=cfg.metric_every, clip_fn=clip_fn,
+        affine_fn=affine_fn)
+    w0_b = jnp.take(w_desc, inv_order, axis=0)
+    u0_b = jax.vmap(problem.regularizer.project_dual,
+                    in_axes=(0, None, 0))(
+        jnp.take(u_desc, inv_order, axis=0), problem.graph, lams)
+
+    budget = _capped(cfg.final_iters, cfg.metric_every)
+    w_b, u_b, (obj, mse, res), iters_b, k = _masked_sweep(
+        problem.graph, problem.data, lams, w0_b, u0_b, w_true, params,
+        cfg.tol, loss=problem.loss, reg=problem.regularizer,
+        num_iters=budget, rho=cfg.rho, metric_every=cfg.metric_every,
+        clip_fn=clip_fn, affine_fn=affine_fn)
+    # one fetch for the sweep's host-side facts: the global block count
+    # and the per-lambda stopping iterations
+    blocks, iters_np = jax.device_get((k, iters_b))
+    obj, mse, res = (t[:int(blocks)].T for t in (obj, mse, res))
+
+    diag = {}
+    if cfg.compute_diagnostics:
+        diag = dict(jax.vmap(lambda lam, w, u: certificate(
+            problem.with_lam(lam), w, u))(lams, w_b, u_b))
+    diag["iterations"] = np.asarray(iters_np)
+    return SolveResult(w=w_b, u=u_b, objective=obj,
+                       mse=None if w_true is None else mse, lam=lams,
+                       diagnostics=diag, residual=res)
+
+
 def solve_path(problem: Problem, lams, config: SolverConfig | None = None,
                *, w_true=None) -> SolveResult:
     """Solve one problem along a whole lambda path (hyperparameter sweep).
@@ -77,18 +287,23 @@ def solve_path(problem: Problem, lams, config: SolverConfig | None = None,
     the sweep compiles once and runs batched.  Returns a SolveResult whose
     leaves carry a leading ``len(lams)`` axis (``result.lam`` recovers the
     path).  Dense/pallas backends only.
+
+    With ``config.tol`` set, the sweep is *masked*: a residual-triggered
+    continuation cascade warm-starts every lambda from its larger
+    neighbor, then one vmapped while loop advances all lambdas with a
+    per-lambda ``done`` mask — each lane freezes the moment its own
+    eq.-11 residual certifies, and the loop exits when every lane has
+    (``diagnostics["iterations"]`` reports the per-lambda stopping
+    iterations; ``final_iters`` is the per-lambda budget ceiling).
+    Converged lambdas stop paying iterations, so a sweep whose easy
+    lambdas converge early executes far fewer total iterations than the
+    fixed-length vmap.
     """
     cfg = config if config is not None else SolverConfig(rho=1.9)
     if cfg.backend not in ("dense", "pallas"):
         raise NotImplementedError(
             "solve_path vmaps the dense engine; backend must be "
             f"'dense' or 'pallas', got {cfg.backend!r}")
-    if cfg.tol is not None:
-        raise NotImplementedError(
-            "solve_path vmaps a fixed-length scan over the lambda path; "
-            "per-lambda early stopping (tol) needs per-lambda solves — "
-            "run Solver(config).run(problem.with_lam(lam)) per point "
-            "(experiments/run.py --tol does exactly that)")
     lams = jnp.asarray(lams, jnp.float32)
     if lams.ndim != 1 or lams.shape[0] == 0:
         raise ValueError("lams must be a non-empty 1-D array")
@@ -100,6 +315,13 @@ def solve_path(problem: Problem, lams, config: SolverConfig | None = None,
         record_residual=False,
         num_iters=_capped(cfg.warm_iters, cfg.metric_every))
     warm = get_backend(cfg.backend)(problem.with_lam(warm_lam), warm_cfg)
+
+    if cfg.tol is not None:
+        # masked tol sweep on the dense engine: every lambda stops on
+        # its own residual (the fused kernel stays a per-solve engine;
+        # the sweep's win is skipped iterations, not fusion)
+        return _solve_path_masked(problem, lams, cfg, warm,
+                                  w_true=w_true)
 
     final_cfg = cfg.replace(
         continuation=False,

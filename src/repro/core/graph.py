@@ -108,22 +108,28 @@ class EdgeBlockLayout:
         return jnp.pad(a, ((0, ext),) + ((0, 0),) * (a.ndim - 1))
 
     def window_bytes(self, num_features: int,
-                     param_floats: int | None = None) -> int:
-        """fp32 VMEM footprint of one grid step's resident window.
+                     param_floats: int | None = None,
+                     itemsize: int = 4) -> int:
+        """VMEM footprint of one grid step's resident window.
 
         ``param_floats`` is the per-node float count of the loss's prox
         parameters (``Loss.prox_param_floats``); defaults to the squared
-        loss's affine map (P, b).
+        loss's affine map (P, b).  ``itemsize`` is the *storage* dtype's
+        byte width (4 for f32, 2 for bf16) — it scales the state and
+        prox-parameter traffic, so bf16 storage roughly doubles the
+        fusable window.  Index/step tensors (incidence ids+signs, tau,
+        src/dst/sigma/la) stay 4-byte regardless of the storage policy.
         """
         n = num_features
         if param_floats is None:
             param_floats = n * n + n                          # P, b
         nw = self.kn * self.block_nodes
         ew = (self.klo + 1 + self.khi) * self.block_edges
-        per_node = n + param_floats + 1 + 2 * self.max_degree  # w, prox, tau, inc
-        per_edge = n                                           # u window
-        owned = self.block_edges * (n + 4)                     # u+, src/dst/sig/la
-        return 4 * (nw * per_node + ew * per_edge + owned)
+        state = nw * (n + param_floats) + ew * n              # w, prox, u window
+        state += self.block_edges * n                         # u+ (owned)
+        index = nw * (1 + 2 * self.max_degree)                # tau, inc ids+signs
+        index += self.block_edges * 4                         # src/dst/sig/la
+        return itemsize * state + 4 * index
 
 
 @jax.tree_util.register_pytree_node_class

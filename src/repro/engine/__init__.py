@@ -20,14 +20,14 @@ drivers over this layer.
 from repro.engine.executors import (DenseExecutor, HaloExecutor,
                                     MailboxExecutor, WindowExecutor)
 from repro.engine.loop import (capped, chunk_bounds, concat_traces,
-                               default_warm_lam, iter_cap, run_chunked,
-                               scan_solve)
+                               default_warm_lam, device_loop, iter_cap,
+                               run_chunked, scan_solve)
 from repro.engine.step import (GraphExecutor, certificate, ensure_column,
                                pd_residual, pd_step)
 
 __all__ = [
     "DenseExecutor", "GraphExecutor", "HaloExecutor", "MailboxExecutor",
     "WindowExecutor", "capped", "certificate", "chunk_bounds",
-    "concat_traces", "default_warm_lam", "ensure_column", "iter_cap",
-    "pd_residual", "pd_step", "run_chunked", "scan_solve",
+    "concat_traces", "default_warm_lam", "device_loop", "ensure_column",
+    "iter_cap", "pd_residual", "pd_step", "run_chunked", "scan_solve",
 ]

@@ -60,6 +60,11 @@ class WindowExecutor:
     lambda-scaled clip levels ``lam * A_e`` for the owned edges (the
     kernel precomputes them once per solve), so the canonical step is
     invoked with ``lam = 1.0``.
+
+    Precision policy: the window adapter (``kernels.ref.pd_window_step``)
+    upcasts a reduced-storage (bf16) window to f32 *before* building this
+    executor's state, so every gather-sum and incidence reduction here
+    accumulates in f32 regardless of what dtype the state was stored in.
     """
 
     inc_local: jnp.ndarray      # (NW, max_deg) window-relative edge ids

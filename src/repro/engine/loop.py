@@ -8,13 +8,17 @@ Everything the backends used to reimplement separately lives here once:
   * **metric cadence** — traces are recorded every ``metric_every``
     iterations by construction of the scan,
   * **chunked driving** — :func:`run_chunked` is the host-side chunk
-    loop shared by residual-based early stopping and the federated
-    checkpoint schedule (both split the horizon into identical compiled
-    chunks; a straight run and a resumed run execute the same chunk
-    sequence, which is what keeps resume bitwise),
-  * **early stopping** — ``SolverConfig.tol`` compares the eq.-11
-    fixed-point residual (:func:`repro.engine.step.pd_residual`)
-    against ``tol`` at every metric boundary and stops the chunk loop,
+    loop used where a Python hook must fire between chunks (the
+    federated checkpoint schedule; both a straight run and a resumed
+    run execute the same chunk sequence, which is what keeps resume
+    bitwise),
+  * **device-resident early stopping** — :func:`device_loop` is the
+    on-device counterpart of ``run_chunked``: a ``lax.while_loop`` over
+    metric-cadence blocks carrying the eq.-11 residual
+    (:func:`repro.engine.step.pd_residual`) in device memory, so a
+    ``SolverConfig.tol`` solve never syncs the host inside the loop —
+    the dense/fused/batched engines fetch ``iterations`` once, after
+    convergence (one device->host transfer per solve),
   * **iteration caps and warm starts** — the ``REPRO_SOLVER_MAX_ITERS``
     env cap and the continuation warm-lambda default used by
     ``Solver.run`` / ``solve_path`` / the federated runtime.
@@ -137,7 +141,64 @@ def scan_solve(run_block: Callable, metrics: Callable, state0, *,
 
 
 # ---------------------------------------------------------------------------
-# The host-side chunk driver (early stopping + checkpoint schedules)
+# The device-resident tol driver (dense / fused / batched engines)
+# ---------------------------------------------------------------------------
+
+def device_loop(run_block: Callable, state0, *, num_iters: int,
+                metric_every: int, tol):
+    """Drive a tol solve entirely on-device: ``lax.while_loop`` over
+    metric-cadence blocks, residual carried in device memory.
+
+    ``run_block(state) -> (state, records, residual)`` advances
+    ``metric_every`` iterations and returns its per-record trace pytree
+    (scalar leaves — or ``(B,)`` leaves for the batched engine — one
+    record per block) plus the block's stopping residual (the max
+    per-iteration eq.-11 residual over the block; scalar).  ``tol`` is a
+    *traced* operand, so different tolerances share one executable.
+
+    Trace buffers are preallocated at the full budget
+    (``num_iters // metric_every`` records) and written in place at the
+    block index; entries past the stopping block are zero — callers
+    truncate host-side after fetching the iteration count.  Must be
+    called under ``jit``: the whole loop then compiles to one program
+    with no host round-trips, and the only device->host transfer of a
+    tol solve is the caller's single fetch of ``iterations``.
+
+    Stopping matches :func:`run_chunked` exactly: block 0 always runs,
+    and the loop exits at the first block whose residual is <= tol (or
+    when the budget is exhausted).  Returns
+    ``(state, traces, iterations)`` with ``iterations`` a device scalar.
+    """
+    num_blocks = num_iters // metric_every
+    tol = jnp.asarray(tol, jnp.float32)
+
+    # block 0 runs unconditionally (as in run_chunked) and sizes the
+    # preallocated trace buffers from its record shapes
+    state, rec0, res0 = run_block(state0)
+    traces = jax.tree_util.tree_map(
+        lambda r: jnp.zeros((num_blocks,) + jnp.shape(r),
+                            jnp.result_type(r)).at[0].set(r), rec0)
+
+    def cond(carry):
+        _, k, res, _ = carry
+        return jnp.logical_and(k < num_blocks, res > tol)
+
+    def body(carry):
+        state, k, _, traces = carry
+        state, rec, res = run_block(state)
+        traces = jax.tree_util.tree_map(
+            lambda t, r: jax.lax.dynamic_update_index_in_dim(t, r, k, 0),
+            traces, rec)
+        return state, k + 1, res, traces
+
+    state, k, _, traces = jax.lax.while_loop(
+        cond, body, (state, jnp.int32(1), jnp.asarray(res0, jnp.float32),
+                     traces))
+    return state, traces, k * metric_every
+
+
+# ---------------------------------------------------------------------------
+# The host-side chunk driver (checkpoint schedules + federated stopping)
 # ---------------------------------------------------------------------------
 
 def chunk_bounds(start: int, total: int, size: int) -> list[tuple[int, int]]:
@@ -165,6 +226,14 @@ def run_chunked(run_chunk: Callable, state, *, total: int, start: int = 0,
     identical residual stream, so dense and federated_sync stop at the
     same iteration.
 
+    Transfer contract: the per-chunk ``float(residual)`` device sync is
+    the price of host-side stopping and is paid *only* when ``tol`` is
+    set.  A ``tol=None`` run that merely records the residual trace
+    (``record_residual``) must never touch ``residual`` here — the
+    trace converts to host once, after the loop, wherever the caller
+    reads it.  (Backends without host hooks use :func:`device_loop`
+    instead and avoid even the tol sync.)
+
     Returns ``(state, traces, iterations_run, stopped_early)``.
     """
     parts = []
@@ -176,8 +245,9 @@ def run_chunked(run_chunk: Callable, state, *, total: int, start: int = 0,
         iterations = r1
         if on_chunk is not None:
             on_chunk(state, r1, parts)
-        if (tol is not None and residual is not None
-                and float(residual) <= tol):
+        if tol is None:
+            continue                    # residual stays on device
+        if residual is not None and float(residual) <= tol:
             stopped = True
             break
     traces = concat_traces(parts) if parts else None

@@ -68,18 +68,21 @@ def batched_affine(p: jnp.ndarray, v: jnp.ndarray, *,
 
 def pd_step(w_store, u_store, inc_edges, inc_signs, params, tau, src, dst,
             sigma, la, *, loss, reg, pkeys, block_nodes, block_edges, kn,
-            klo, khi, rho=1.0, iters=1, use_kernel: bool | None = None):
+            klo, khi, rho=1.0, iters=1, compute_residual=False,
+            use_kernel: bool | None = None):
     """Fused primal-dual step over an edge-blocked layout (Algorithm 1
     body in one pass): Pallas kernel on TPU, the bit-comparable jnp
     reference elsewhere.  ``params`` is the tuple of ``loss.prox_setup``
     leaves in ``pkeys`` (sorted-key) order; shapes per
-    ``kernels.ref.fused_pd_step_ref``."""
+    ``kernels.ref.fused_pd_step_ref``.  With ``compute_residual`` the
+    return gains the call's f32 eq.-11 residual scalar (computed
+    in-kernel on the kernel path)."""
     if use_kernel is None:
         use_kernel = _use_kernel_default()
     fn = _fused_pd_step if use_kernel else _ref.fused_pd_step_ref
     kw = dict(loss=loss, reg=reg, pkeys=pkeys, block_nodes=block_nodes,
               block_edges=block_edges, kn=kn, klo=klo, khi=khi, rho=rho,
-              iters=iters)
+              iters=iters, compute_residual=compute_residual)
     if use_kernel:
         kw["interpret"] = _interpret()
     return fn(w_store, u_store, inc_edges, inc_signs, params, tau, src,

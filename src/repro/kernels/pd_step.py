@@ -35,7 +35,11 @@ layout pass aligns every block's halo window to exactly ``i * BV`` /
 
 When the whole graph fits one block (``nb == 1``), ``iters > 1`` runs a
 ``fori_loop`` *inside* the kernel — multi-iteration fusion with the
-``(w, u)`` carry never leaving VMEM.
+``(w, u)`` carry never leaving VMEM.  The carry accumulates in f32
+regardless of the storage dtype: bf16 is the HBM storage policy, so a
+reduced-precision round happens once per launch (the single write-back),
+mirroring the one-HBM-round-trip-per-iteration rounding of the
+multi-block grid path.
 """
 from __future__ import annotations
 
@@ -50,7 +54,7 @@ from repro.kernels import ref as _ref
 
 def _make_kernel(bv: int, eb: int, kn: int, ktot: int, klo: int,
                  num_params: int, loss, reg, pkeys: tuple, rho: float,
-                 iters: int):
+                 iters: int, compute_residual: bool):
     """Build the grid-step kernel for fixed layout extents."""
 
     def cat(refs):
@@ -69,7 +73,8 @@ def _make_kernel(bv: int, eb: int, kn: int, ktot: int, klo: int,
         pos += num_params * kn
         tau_refs = refs[pos:pos + kn]; pos += kn
         src_ref, dst_ref, sig_ref, la_ref = refs[pos:pos + 4]; pos += 4
-        w_out_ref, u_out_ref = refs[pos:pos + 2]
+        w_out_ref, u_out_ref = refs[pos:pos + 2]; pos += 2
+        res_ref = refs[pos] if compute_residual else None
 
         i = pl.program_id(0)
         w_win = cat(w_refs)                      # (NW, n)
@@ -94,19 +99,48 @@ def _make_kernel(bv: int, eb: int, kn: int, ktot: int, klo: int,
             w_o, u_o = one(w_win, u_win)
             w_out_ref[...] = w_o[:bv]
             u_out_ref[...] = u_o
+            if compute_residual:
+                # owned dual rows sit at window offset klo*EB
+                u_owned = u_win[klo * eb:(klo + 1) * eb]
+                res_ref[...] = _ref.window_residual(
+                    w_win[:bv], u_owned, w_o[:bv], u_o, tau_win[:bv],
+                    sg).reshape(1, 1)
+        elif compute_residual:
+            # single-block fusion with the eq.-11 residual accumulated
+            # in-kernel: the running max over iterations rides the VMEM
+            # carry, so a tol solve reads back one scalar per launch.
+            # bf16 is the *HBM* storage dtype — the VMEM-resident carry
+            # accumulates in f32 (upcast once per launch, downcast on
+            # the single write-back), matching the per-launch rounding
+            # of the multi-block grid path's one HBM round-trip.
+            def body(_, c):
+                w_, u_, r_ = c
+                w_n, u_n = one(w_, u_)
+                r_n = _ref.window_residual(w_[:bv], u_, w_n[:bv], u_n,
+                                           tau_win[:bv], sg)
+                return w_n, u_n, jnp.maximum(r_, r_n)
+            w_o, u_o, res = jax.lax.fori_loop(
+                0, iters, body, (w_win.astype(jnp.float32),
+                                 u_win.astype(jnp.float32),
+                                 jnp.float32(0.0)))
+            w_out_ref[...] = w_o.astype(w_win.dtype)
+            u_out_ref[...] = u_o.astype(u_win.dtype)
+            res_ref[...] = res.reshape(1, 1)
         else:
-            # single-block multi-iteration fusion: carry stays in VMEM
+            # single-block multi-iteration fusion: carry stays in VMEM,
+            # in f32 (see above); storage rounding once per launch
             w_o, u_o = jax.lax.fori_loop(
-                0, iters, lambda _, c: one(*c), (w_win, u_win))
-            w_out_ref[...] = w_o
-            u_out_ref[...] = u_o
+                0, iters, lambda _, c: one(*c),
+                (w_win.astype(jnp.float32), u_win.astype(jnp.float32)))
+            w_out_ref[...] = w_o.astype(w_win.dtype)
+            u_out_ref[...] = u_o.astype(u_win.dtype)
 
     return kernel
 
 
 @functools.partial(jax.jit, static_argnames=(
     "loss", "reg", "pkeys", "block_nodes", "block_edges", "kn", "klo",
-    "khi", "rho", "iters", "interpret"))
+    "khi", "rho", "iters", "compute_residual", "interpret"))
 def fused_pd_step(w_store: jnp.ndarray, u_store: jnp.ndarray,
                   inc_edges: jnp.ndarray, inc_signs: jnp.ndarray,
                   params: tuple, tau: jnp.ndarray,
@@ -114,10 +148,14 @@ def fused_pd_step(w_store: jnp.ndarray, u_store: jnp.ndarray,
                   la: jnp.ndarray, *, loss, reg, pkeys: tuple,
                   block_nodes: int, block_edges: int,
                   kn: int, klo: int, khi: int, rho: float = 1.0,
-                  iters: int = 1, interpret: bool = False):
+                  iters: int = 1, compute_residual: bool = False,
+                  interpret: bool = False):
     """Fused PD step over the edge-blocked layout (storage shapes as
     ``kernels.ref.fused_pd_step_ref``).  Returns (w_new (nb*BV, n),
-    u_new (nb*EB, n))."""
+    u_new (nb*EB, n)); with ``compute_residual`` also the f32 scalar
+    eq.-11 residual of the call (max over blocks, and over iterations
+    when ``iters > 1``), computed in-kernel so a tol solve never reads
+    the state back to form its stopping criterion."""
     bv, eb = block_nodes, block_edges
     ktot = klo + 1 + khi
     nb = src.shape[0] // eb
@@ -147,6 +185,9 @@ def fused_pd_step(w_store: jnp.ndarray, u_store: jnp.ndarray,
                  pl.BlockSpec((eb, n), nmap(0))]
     out_shape = [jax.ShapeDtypeStruct((nb * bv, n), w_store.dtype),
                  jax.ShapeDtypeStruct((nb * eb, n), u_store.dtype)]
+    if compute_residual:
+        out_specs.append(pl.BlockSpec((1, 1), nmap(0)))
+        out_shape.append(jax.ShapeDtypeStruct((nb, 1), jnp.float32))
 
     operands = (
         [w_store] * kn + [u_store] * ktot + [inc_edges] * kn
@@ -154,13 +195,17 @@ def fused_pd_step(w_store: jnp.ndarray, u_store: jnp.ndarray,
         + [leaf for leaf in params for _ in range(kn)]
         + [tau] * kn + [src, dst, sigma, la]
     )
-    w_new, u_new = pl.pallas_call(
+    outs = pl.pallas_call(
         _make_kernel(bv, eb, kn, ktot, klo, len(params), loss, reg,
-                     pkeys, rho, iters),
+                     pkeys, rho, iters, compute_residual),
         grid=(nb,),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
     )(*operands)
+    if compute_residual:
+        w_new, u_new, res = outs
+        return w_new, u_new, jnp.max(res)
+    w_new, u_new = outs
     return w_new, u_new

@@ -51,6 +51,13 @@ def pd_window_step(w_win: jnp.ndarray, u_win: jnp.ndarray,
     window, so interpret-mode kernel output is bit-comparable to the jnp
     reference (:func:`fused_pd_step_ref`).
 
+    Precision policy: ``w_win`` / ``u_win`` and the prox parameter
+    windows may arrive in a reduced *storage* dtype (bf16) — HBM<->VMEM
+    traffic then moves half the bytes — while the gather-sums, prox
+    solves, and dual resolvent always *accumulate* in f32: the window is
+    upcast on entry and the outputs are cast back to the storage dtype.
+    f32 storage is the identity path (bitwise unchanged).
+
     Window shapes (see ``core.graph.EdgeBlockLayout``): ``w_win`` (NW, n),
     ``u_win`` (EW, n), ``inc_local`` / ``inc_signs`` (NW, max_deg) with
     edge ids already relative to the window (pre-clipped), ``params_win``
@@ -59,18 +66,46 @@ def pd_window_step(w_win: jnp.ndarray, u_win: jnp.ndarray,
     ``tau_win`` (NW, 1), and per *owned* edge ``src_local`` /
     ``dst_local`` (EB,), ``sigma`` / ``la`` (EB, 1) with ``la`` the
     pre-scaled ``lam * A_e`` (the canonical step runs at ``lam = 1``).
-    Returns (w_relaxed_window (NW, n), u_new_owned (EB, n)).
+    Returns (w_relaxed_window (NW, n), u_new_owned (EB, n)) in the
+    storage dtype.
     """
+    store = w_win.dtype
+    f32 = jnp.float32
     executor = WindowExecutor(
         inc_local=inc_local, inc_signs=inc_signs, src_local=src_local,
         dst_local=dst_local, weights=la, klo=klo, block_edges=block_edges)
-    params = dict(zip(pkeys, params_win))
+    params = dict(zip(
+        pkeys,
+        (p.astype(f32) if jnp.issubdtype(p.dtype, jnp.floating) else p
+         for p in params_win)))
 
     def prox(v):
         return loss.prox_apply(params, v)
 
-    return _engine_pd_step(executor, prox, reg, 1.0, tau_win, sigma,
-                           w_win, u_win, rho=rho)
+    w_new, u_new = _engine_pd_step(executor, prox, reg, 1.0, tau_win,
+                                   sigma, w_win.astype(f32),
+                                   u_win.astype(f32), rho=rho)
+    return w_new.astype(store), u_new.astype(store)
+
+
+def window_residual(w_old: jnp.ndarray, u_old: jnp.ndarray,
+                    w_new: jnp.ndarray, u_new: jnp.ndarray,
+                    tau_owned: jnp.ndarray, sigma: jnp.ndarray):
+    """eq.-11 block residual over one window's *owned* rows (f32).
+
+    The in-kernel statement of :func:`repro.engine.step.pd_residual` for
+    a VMEM window: callers pass the owned node rows (BV, n) before/after
+    and the owned dual rows (EB, n) before/after, with ``tau_owned``
+    (BV, 1) / ``sigma`` (EB, 1).  Always accumulates in f32 so bf16
+    storage runs report an honest residual.  Layout padding rows are
+    inert (their state never moves), so they contribute 0.
+    """
+    f32 = jnp.float32
+    rp = jnp.max(jnp.abs(w_new.astype(f32) - w_old.astype(f32))
+                 / tau_owned.astype(f32))
+    rd = jnp.max(jnp.abs(u_new.astype(f32) - u_old.astype(f32))
+                 / sigma.astype(f32))
+    return jnp.maximum(rp, rd)
 
 
 def fused_pd_step_ref(w_store: jnp.ndarray, u_store: jnp.ndarray,
@@ -80,7 +115,7 @@ def fused_pd_step_ref(w_store: jnp.ndarray, u_store: jnp.ndarray,
                       sigma: jnp.ndarray, la: jnp.ndarray, *, loss, reg,
                       pkeys: tuple, block_nodes: int, block_edges: int,
                       kn: int, klo: int, khi: int, rho: float = 1.0,
-                      iters: int = 1):
+                      iters: int = 1, compute_residual: bool = False):
     """jnp oracle for the fused PD kernel: vmap of the window step.
 
     Storage shapes (layout order, see ``EdgeBlockLayout``):
@@ -89,6 +124,18 @@ def fused_pd_step_ref(w_store: jnp.ndarray, u_store: jnp.ndarray,
       same node-store rows, src/dst/sigma/la (nb*EB, 1).
     Returns (w_new (nb*BV, n), u_new (nb*EB, n)).  ``iters > 1`` (the
     whole-graph-in-VMEM multi-iteration fusion) requires nb == 1.
+
+    With ``compute_residual`` the return gains a third element: the f32
+    scalar eq.-11 residual of the call (max :func:`window_residual` over
+    blocks; for ``iters > 1`` the running max over iterations), matching
+    what the Pallas kernel accumulates in-kernel.
+
+    Precision: on the ``iters > 1`` path the loop carry runs in f32 and
+    the storage dtype is applied once at the end — bf16 is the *HBM*
+    storage policy, and this path models a kernel whose carry never
+    leaves VMEM (one storage-rounded write-back per launch).  The
+    ``nb > 1`` grid path stores every iteration's output, so there the
+    rounding is per iteration by construction.
     """
     bv, eb = block_nodes, block_edges
     nb = src.shape[0] // eb
@@ -108,7 +155,14 @@ def fused_pd_step_ref(w_store: jnp.ndarray, u_store: jnp.ndarray,
         u_win = jax.lax.dynamic_slice(u_store, (e0, 0), (ew, n))
         ie = jax.lax.dynamic_slice(inc_edges, (n0, 0), (nw, max_deg))
         isg = jax.lax.dynamic_slice(inc_signs, (n0, 0), (nw, max_deg))
-        params_win = tuple(node_slice(a, n0) for a in params)
+        # prox parameters are read-only across iterations: upcast a bf16
+        # store once here instead of per pd_window_step call (the cast
+        # inside is then a no-op) — identical values, ~params/state fewer
+        # casts per fused iteration
+        params_win = tuple(
+            a.astype(jnp.float32)
+            if jnp.issubdtype(a.dtype, jnp.floating) else a
+            for a in (node_slice(a, n0) for a in params))
         tau_win = jax.lax.dynamic_slice(tau, (n0, 0), (nw, 1))
         sv = jax.lax.dynamic_slice(src, (e0, 0), (eb, 1))[:, 0]
         dv = jax.lax.dynamic_slice(dst, (e0, 0), (eb, 1))[:, 0]
@@ -124,18 +178,47 @@ def fused_pd_step_ref(w_store: jnp.ndarray, u_store: jnp.ndarray,
                                   reg=reg, pkeys=pkeys, klo=klo,
                                   block_edges=eb, rho=rho)
 
+        u_owned_lo = klo * eb
         if iters == 1:
             w_o, u_o = one(w_win, u_win)
+            if compute_residual:
+                res = window_residual(
+                    w_win[:bv],
+                    jax.lax.dynamic_slice(u_win, (u_owned_lo, 0), (eb, n)),
+                    w_o[:bv], u_o, tau_win[:bv], sg)
+                return w_o[:bv], u_o, res
         else:
             # nb == 1: the window is the whole graph, so the relaxed
-            # window output feeds straight back in (VMEM-resident loop)
+            # window output feeds straight back in (VMEM-resident loop).
+            # bf16 is the *HBM* storage dtype: the loop carry runs in
+            # f32 (one upcast per launch, one storage-rounded
+            # write-back), exactly as the kernel keeps its VMEM carry
+            store = w_win.dtype
+            w_c, u_c = (w_win.astype(jnp.float32),
+                        u_win.astype(jnp.float32))
+            if compute_residual:
+                def body(_, c):
+                    w_, u_, r_ = c
+                    w_n, u_n = one(w_, u_)
+                    r_n = window_residual(w_[:bv], u_, w_n[:bv], u_n,
+                                          tau_win[:bv], sg)
+                    # kn == 1 here, so the owned dual rows are the window
+                    return w_n, u_n, jnp.maximum(r_, r_n)
+                w_o, u_o, res = jax.lax.fori_loop(
+                    0, iters, body, (w_c, u_c, jnp.float32(0.0)))
+                return w_o[:bv].astype(store), u_o.astype(store), res
             w_o, u_o = jax.lax.fori_loop(
-                0, iters, lambda _, c: one(*c), (w_win, u_win))
+                0, iters, lambda _, c: one(*c), (w_c, u_c))
+            w_o, u_o = w_o.astype(store), u_o.astype(store)
         return w_o[:bv], u_o
 
     if nb == 1:
         # single whole-graph block: skip the vmap wrapper (a size-1 batch
         # axis defeats XLA gather fusion) — the slices fold away at i=0
         return block(0)
+    if compute_residual:
+        w_new, u_new, res = jax.vmap(block)(jnp.arange(nb))
+        return (w_new.reshape(nb * bv, n), u_new.reshape(nb * eb, n),
+                jnp.max(res))
     w_new, u_new = jax.vmap(block)(jnp.arange(nb))
     return w_new.reshape(nb * bv, n), u_new.reshape(nb * eb, n)
