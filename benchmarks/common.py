@@ -3,10 +3,54 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def best_of(k: int, fn, *, warmup: int = 0) -> tuple[float, object]:
+    """Best-of-``k`` wall clock of ``fn()`` via ``time.perf_counter``.
+
+    The one timing idiom every benchmark here uses: ``warmup`` untimed
+    calls (compile + cache warm), then ``k`` timed calls, reporting the
+    *minimum* — the run least disturbed by the host.  ``fn`` must block
+    until its device work is done (``jax.block_until_ready``).  Returns
+    ``(best_seconds, last_result)``.
+    """
+    if k < 1:
+        raise ValueError("best_of needs k >= 1")
+    result = None
+    for _ in range(warmup):
+        result = fn()
+    best = float("inf")
+    for _ in range(k):
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def interleaved_best_of(k: int, fn_a, fn_b) -> tuple[float, float]:
+    """Best-of-``k`` for two variants, alternating a/b each round.
+
+    Interleaving exposes both variants to the same thermal / scheduler
+    drift, so their *ratio* is meaningful even when absolute times are
+    not (the machine-relative comparisons the CI gates use).  Callers
+    warm both variants up first.  Returns ``(best_a, best_b)``.
+    """
+    if k < 1:
+        raise ValueError("interleaved_best_of needs k >= 1")
+    best_a = best_b = float("inf")
+    for _ in range(k):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
 
 
 def save_result(name: str, payload: dict) -> str:

@@ -60,7 +60,7 @@ from functools import partial
 
 import numpy as np
 
-from benchmarks.common import save_result
+from benchmarks.common import best_of, interleaved_best_of, save_result
 
 SIZES = (250, 1000, 4000, 16000, 32000)
 SMOKE_SIZES = (250, 1000)
@@ -106,7 +106,12 @@ METHODOLOGY = (
     "level, fixed size) = total iterations the masked-vmap tol "
     "solve_path executed / (num_lambdas * budget), the fraction of the "
     "unmasked fixed-budget sweep the masked sweep pays. Each mode is "
-    "timed three times cache-hot and the best run is kept."
+    "timed three times cache-hot and the best run is kept "
+    "(benchmarks.common.best_of). obs_overhead interleaves the largest "
+    "dense solve with REPRO_OBS telemetry enabled and disabled "
+    "(benchmarks.common.interleaved_best_of) and reports the on/off "
+    "ratio — a machine-relative gate (<= 1.02) on the telemetry stack's "
+    "when-off cost; absolute seconds are never compared across machines."
 )
 
 
@@ -136,13 +141,42 @@ def _time_iters_per_s(problem, cfg, repeats: int = 3) -> float:
     from repro.api import Solver
 
     solver = Solver(cfg)
-    solver.run(problem).w.block_until_ready()       # compile + warmup
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
+
+    def once():
         solver.run(problem).w.block_until_ready()
-        best = min(best, time.perf_counter() - t0)
+
+    best, _ = best_of(repeats, once, warmup=1)   # warmup = compile
     return cfg.num_iters / best
+
+
+def _measure_obs_overhead(problem, cfg, repeats: int = 5) -> dict:
+    """Telemetry-on vs telemetry-off wall clock of the identical dense
+    solve, interleaved so the *ratio* is machine-relative — the CI
+    overhead gate reads ``ratio`` (<= 1.02 required), never absolute
+    seconds."""
+    from repro import obs
+    from repro.api import Solver
+
+    solver = Solver(cfg)
+
+    def once():
+        solver.run(problem).w.block_until_ready()
+
+    def with_obs():
+        obs.enable()
+        try:
+            once()
+        finally:
+            obs.disable()
+
+    was_enabled = obs.enabled()
+    obs.disable()
+    try:
+        once()                       # compile shared by both variants
+        on_s, off_s = interleaved_best_of(repeats, with_obs, once)
+    finally:
+        (obs.enable if was_enabled else obs.disable)()
+    return {"on_s": on_s, "off_s": off_s, "ratio": on_s / off_s}
 
 
 def _measure_masked_path(size: int, budget: int, seed: int) -> dict:
@@ -262,12 +296,24 @@ def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
               f"{path['masked_total']}/{path['unmasked_total']} iters "
               f"(ratio {path['ratio']:.3f}, {path['wall_s']:.1f}s)")
 
+    # telemetry-overhead gate: the instrumented dense solve, obs on vs
+    # off, at the largest size measured (problem still bound from the
+    # loop above)
+    obs_overhead = _measure_obs_overhead(problem, cfg(iters))
+    obs_overhead["size"] = int(sizes[-1])
+    obs_overhead["ok"] = bool(obs_overhead["ratio"] <= 1.02)
+    if verbose:
+        print(f"obs_overhead @|V|={sizes[-1]}: on/off ratio "
+              f"{obs_overhead['ratio']:.4f} "
+              f"({'PASS' if obs_overhead['ok'] else 'FAIL'})")
+
     # near-linear gate: fused edge-throughput at the largest size within
     # 10x of its peak across sizes
     tps = [r["edge_iters_per_s"]["pallas_fused"] for r in rows.values()]
     payload = {
         "rows": rows,
         "path_masked_vs_dense": path,
+        "obs_overhead": obs_overhead,
         "iters": iters,
         "iters_interpret": ITERS_INTERPRET,
         "smoke": bool(smoke),

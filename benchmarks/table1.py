@@ -20,33 +20,34 @@ paper's 1.7e-6; the continuation solver gets there in ~4k.
 """
 from __future__ import annotations
 
-import time
+import jax
 
 from repro.core import Problem, Solver, SolverConfig, baselines
 from repro.data.synthetic import make_sbm_regression
 
-from benchmarks.common import prediction_mse, save_result
+from benchmarks.common import best_of, prediction_mse, save_result
+
+
+def _timed_solve(cfg: SolverConfig, problem, w_true):
+    def solve():
+        result = Solver(cfg).run(problem, w_true=w_true)
+        jax.block_until_ready(result.w)
+        return result
+
+    return best_of(1, solve)
 
 
 def run(seed: int = 0, verbose: bool = True) -> dict:
     ds = make_sbm_regression(seed=seed)   # defaults == paper §5
     problem = Problem.create(ds.graph, ds.data, lam=1e-3)
 
-    t0 = time.time()
-    faithful = Solver(SolverConfig(num_iters=500)).run(problem,
-                                                       w_true=ds.w_true)
-    t_faithful = time.time() - t0
-
-    t0 = time.time()
-    faithful_20k = Solver(SolverConfig(num_iters=20_000)).run(
-        problem, w_true=ds.w_true)
-    t_faithful_20k = time.time() - t0
-
-    t0 = time.time()
-    ours = Solver(SolverConfig(continuation=True, rho=1.9, warm_iters=3000,
-                               final_iters=1000)).run(problem,
-                                                      w_true=ds.w_true)
-    t_ours = time.time() - t0
+    t_faithful, faithful = _timed_solve(
+        SolverConfig(num_iters=500), problem, ds.w_true)
+    t_faithful_20k, faithful_20k = _timed_solve(
+        SolverConfig(num_iters=20_000), problem, ds.w_true)
+    t_ours, ours = _timed_solve(
+        SolverConfig(continuation=True, rho=1.9, warm_iters=3000,
+                     final_iters=1000), problem, ds.w_true)
 
     w_pool = baselines.pooled_linear_regression(ds.data)
 

@@ -56,6 +56,7 @@ from repro.engine import (DenseExecutor, certificate, device_loop,
                           pd_residual, scan_solve)
 from repro.engine import pd_step as engine_pd_step
 from repro.kernels import ops
+from repro.obs import device_fetch
 
 BACKENDS: dict[str, Callable] = {}
 
@@ -335,7 +336,7 @@ def _solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
             clip_fn=clip_fn, affine_fn=affine_fn)
         # the solve's single device->host transfer: the stopping
         # iteration; the trace buffers truncate lazily from it
-        (iterations,) = jax.device_get((its,))
+        (iterations,) = device_fetch((its,))
         iterations = int(iterations)
         nb = iterations // config.metric_every
         obj, mse, res = obj[:nb], mse[:nb], res[:nb]
@@ -466,7 +467,7 @@ def solve_dense_batched(problem_b: Problem, config: SolverConfig, w0_b,
         rho=config.rho, metric_every=config.metric_every,
         clip_fn=clip_fn, affine_fn=affine_fn)
     # the batch's single device->host transfer: the stopping iteration
-    (iterations,) = jax.device_get((its,))
+    (iterations,) = device_fetch((its,))
     nb = int(iterations) // config.metric_every
     return (w, u, obj[:nb].T, mse[:nb].T, res[:nb].T, int(iterations))
 
@@ -868,7 +869,7 @@ def _solve_fused(problem: Problem, config: SolverConfig, *, w0=None,
             metric_every=config.metric_every, use_kernel=use_kernel)
         # the solve's single device->host transfer: the stopping
         # iteration; the trace buffers truncate lazily from it
-        (iterations,) = jax.device_get((its,))
+        (iterations,) = device_fetch((its,))
         iterations = int(iterations)
         nb = iterations // config.metric_every
         obj, mse, res = obj[:nb], mse[:nb], res[:nb]

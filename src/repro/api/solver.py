@@ -31,6 +31,8 @@ from repro.engine import DenseExecutor, pd_residual
 from repro.engine import capped as _capped
 from repro.engine import default_warm_lam as _default_warm_lam
 from repro.engine import pd_step as engine_pd_step
+from repro import obs
+from repro.obs import device_fetch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,26 +51,34 @@ class Solver:
         """
         cfg = self.config
         backend = get_backend(cfg.backend)
-        if not cfg.continuation:
-            run_cfg = cfg.replace(
-                num_iters=_capped(cfg.num_iters, cfg.metric_every))
-            return backend(problem, run_cfg, w0=w0, u0=u0, w_true=w_true)
+        if obs.enabled():
+            obs.counter("repro_solves_total",
+                        help="solver runs by backend",
+                        backend=cfg.backend).inc()
+        with obs.span("solver_run", backend=cfg.backend):
+            if not cfg.continuation:
+                run_cfg = cfg.replace(
+                    num_iters=_capped(cfg.num_iters, cfg.metric_every))
+                return backend(problem, run_cfg, w0=w0, u0=u0,
+                               w_true=w_true)
 
-        warm_lam = (cfg.warm_lam if cfg.warm_lam is not None
-                    else _default_warm_lam(float(problem.lam)))
-        warm_cfg = cfg.replace(
-            continuation=False, compute_diagnostics=False,
-            record_residual=False,
-            num_iters=_capped(cfg.warm_iters, cfg.metric_every))
-        warm = backend(problem.with_lam(warm_lam), warm_cfg, w0=w0, u0=u0)
-        # re-project the warm duals onto the target feasible set and debias
-        u_warm = problem.regularizer.project_dual(warm.u, problem.graph,
-                                                  problem.lam)
-        final_cfg = cfg.replace(
-            continuation=False,
-            num_iters=_capped(cfg.final_iters, cfg.metric_every))
-        return backend(problem, final_cfg, w0=warm.w, u0=u_warm,
-                       w_true=w_true)
+            warm_lam = (cfg.warm_lam if cfg.warm_lam is not None
+                        else _default_warm_lam(float(problem.lam)))
+            warm_cfg = cfg.replace(
+                continuation=False, compute_diagnostics=False,
+                record_residual=False,
+                num_iters=_capped(cfg.warm_iters, cfg.metric_every))
+            warm = backend(problem.with_lam(warm_lam), warm_cfg, w0=w0,
+                           u0=u0)
+            # re-project the warm duals onto the target feasible set and
+            # debias
+            u_warm = problem.regularizer.project_dual(
+                warm.u, problem.graph, problem.lam)
+            final_cfg = cfg.replace(
+                continuation=False,
+                num_iters=_capped(cfg.final_iters, cfg.metric_every))
+            return backend(problem, final_cfg, w0=warm.w, u0=u_warm,
+                           w_true=w_true)
 
 
 # ---------------------------------------------------------------------------
@@ -265,7 +275,7 @@ def _solve_path_masked(problem: Problem, lams, cfg: SolverConfig, warm,
         clip_fn=clip_fn, affine_fn=affine_fn)
     # one fetch for the sweep's host-side facts: the global block count
     # and the per-lambda stopping iterations
-    blocks, iters_np = jax.device_get((k, iters_b))
+    blocks, iters_np = device_fetch((k, iters_b))
     obj, mse, res = (t[:int(blocks)].T for t in (obj, mse, res))
 
     diag = {}

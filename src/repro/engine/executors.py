@@ -26,6 +26,9 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.obs import profile as _prof
+from repro.obs.profile import annotate as _scope
+
 
 @dataclasses.dataclass(frozen=True)
 class DenseExecutor:
@@ -114,39 +117,44 @@ class HaloExecutor:
 
     def gather_duals(self, u_loc: jnp.ndarray) -> jnp.ndarray:
         """All-shards-summed D^T u, returning the local (vp, n) block."""
-        vp, n = self.vp, u_loc.shape[1]
-        acc = jnp.zeros((self.v_pad, n), u_loc.dtype)
-        acc = acc.at[self.src].add(u_loc)
-        acc = acc.at[self.dst].add(-u_loc)
-        if self.comm == "dense":
-            tot = jax.lax.psum(acc, self.axis)
-        else:
-            # shard-internal part stays local; only boundary rows summed
-            local_rows = jax.lax.dynamic_slice(acc, (self.base, 0),
-                                               (vp, n))
-            bacc = acc * self.send_full[:, None]
-            tot_b = jax.lax.psum(bacc, self.axis)
-            tot = jax.lax.dynamic_update_slice(
-                jnp.zeros_like(acc), local_rows, (self.base, 0))
-            # rows that are boundary take the global sum instead
-            tot = jnp.where(self.send_full[:, None] > 0, tot_b, tot)
-        return jax.lax.dynamic_slice(tot, (self.base, 0), (vp, n))
+        with _scope(_prof.PHASE_HALO_GATHER):
+            vp, n = self.vp, u_loc.shape[1]
+            acc = jnp.zeros((self.v_pad, n), u_loc.dtype)
+            acc = acc.at[self.src].add(u_loc)
+            acc = acc.at[self.dst].add(-u_loc)
+            if self.comm == "dense":
+                tot = jax.lax.psum(acc, self.axis)
+            else:
+                # shard-internal part stays local; only boundary rows
+                # summed
+                local_rows = jax.lax.dynamic_slice(acc, (self.base, 0),
+                                                   (vp, n))
+                bacc = acc * self.send_full[:, None]
+                tot_b = jax.lax.psum(bacc, self.axis)
+                tot = jax.lax.dynamic_update_slice(
+                    jnp.zeros_like(acc), local_rows, (self.base, 0))
+                # rows that are boundary take the global sum instead
+                tot = jnp.where(self.send_full[:, None] > 0, tot_b, tot)
+            return jax.lax.dynamic_slice(tot, (self.base, 0), (vp, n))
 
     def edge_diff(self, z_loc: jnp.ndarray) -> jnp.ndarray:
-        n = z_loc.shape[1]
-        if self.comm == "dense":
-            zg = jax.lax.all_gather(z_loc, self.axis, tiled=True)
-        else:
-            # boundary mode: exchange only rows marked in `send`; local
-            # rows come from the local block, remote non-boundary rows
-            # are never read (their edges are shard-internal elsewhere).
-            contrib = jnp.zeros((self.v_pad, n), z_loc.dtype)
-            contrib = jax.lax.dynamic_update_slice(
-                contrib, z_loc * self.send[:, None], (self.base, 0))
-            zg = jax.lax.psum(contrib, self.axis)
-            # overwrite own block with exact local values
-            zg = jax.lax.dynamic_update_slice(zg, z_loc, (self.base, 0))
-        return zg[self.src] - zg[self.dst]
+        with _scope(_prof.PHASE_HALO_DIFF):
+            n = z_loc.shape[1]
+            if self.comm == "dense":
+                zg = jax.lax.all_gather(z_loc, self.axis, tiled=True)
+            else:
+                # boundary mode: exchange only rows marked in `send`;
+                # local rows come from the local block, remote
+                # non-boundary rows are never read (their edges are
+                # shard-internal elsewhere).
+                contrib = jnp.zeros((self.v_pad, n), z_loc.dtype)
+                contrib = jax.lax.dynamic_update_slice(
+                    contrib, z_loc * self.send[:, None], (self.base, 0))
+                zg = jax.lax.psum(contrib, self.axis)
+                # overwrite own block with exact local values
+                zg = jax.lax.dynamic_update_slice(zg, z_loc,
+                                                  (self.base, 0))
+            return zg[self.src] - zg[self.dst]
 
     def owned_duals(self, u: jnp.ndarray) -> jnp.ndarray:
         return u
@@ -185,10 +193,12 @@ class MailboxExecutor:
         return jnp.einsum("vd,vdn->vn", g.inc_signs, gathered)
 
     def edge_diff(self, z: jnp.ndarray) -> jnp.ndarray:
-        g = self.graph
-        self.z_recv_new = jnp.where(self.active_dst,
-                                    self.compress(z[g.dst]), self.z_recv)
-        return z[g.src] - self.z_recv_new
+        with _scope(_prof.PHASE_MAILBOX_DIFF):
+            g = self.graph
+            self.z_recv_new = jnp.where(self.active_dst,
+                                        self.compress(z[g.dst]),
+                                        self.z_recv)
+            return z[g.src] - self.z_recv_new
 
     def owned_duals(self, u: jnp.ndarray) -> jnp.ndarray:
         return u

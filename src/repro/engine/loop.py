@@ -31,6 +31,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.obs import profile as _prof
+from repro.obs.profile import annotate as _scope
+
 
 # ---------------------------------------------------------------------------
 # Iteration caps + continuation defaults (one implementation, no drift)
@@ -102,6 +105,13 @@ def scan_solve(run_block: Callable, metrics: Callable, state0, *,
 
     Returns ``(final_state, ys)`` like ``jax.lax.scan``.
     """
+    inner_metrics = metrics
+
+    def metrics(state):
+        # trace-time phase annotation only (repro.obs.profile)
+        with _scope(_prof.PHASE_METRICS):
+            return inner_metrics(state)
+
     if residual_fn is None:
         if metric_every == 1:
             def step(state, _):
@@ -171,6 +181,12 @@ def device_loop(run_block: Callable, state0, *, num_iters: int,
     """
     num_blocks = num_iters // metric_every
     tol = jnp.asarray(tol, jnp.float32)
+
+    inner_block = run_block
+
+    def run_block(state):
+        with _scope(_prof.PHASE_METRIC_BLOCK):
+            return inner_block(state)
 
     # block 0 runs unconditionally (as in run_chunked) and sizes the
     # preallocated trace buffers from its record shapes

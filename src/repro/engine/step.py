@@ -31,6 +31,9 @@ from typing import Callable, Protocol, runtime_checkable
 
 import jax.numpy as jnp
 
+from repro.obs import profile as _prof
+from repro.obs.profile import annotate as _scope
+
 
 def ensure_column(x):
     """(N,) -> (N, 1); scalars and already-columned arrays pass through.
@@ -94,19 +97,26 @@ def pd_step(executor: GraphExecutor, prox: Callable, regularizer, lam,
     """
     tau_c = _col(tau)
     sigma_c = _col(sigma)
-    dtu = executor.gather_duals(u)
-    if primal_update is None:
-        w_new = prox(w - tau_c * dtu)
-    else:
-        w_new = primal_update(prox, w, dtu, tau)
-    dw = executor.edge_diff(2.0 * w_new - w)
-    u_own = executor.owned_duals(u)
-    u_new = regularizer.dual_prox(u_own + sigma_c * dw, executor, lam,
-                                  sigma, clip_fn=clip_fn)
+    # named scopes map device profiles onto the paper phases
+    # (repro.obs.profile); they cost nothing at runtime
+    with _scope(_prof.PHASE_GATHER):
+        dtu = executor.gather_duals(u)
+    with _scope(_prof.PHASE_PRIMAL):
+        if primal_update is None:
+            w_new = prox(w - tau_c * dtu)
+        else:
+            w_new = primal_update(prox, w, dtu, tau)
+    with _scope(_prof.PHASE_EDGE_DIFF):
+        dw = executor.edge_diff(2.0 * w_new - w)
+    with _scope(_prof.PHASE_DUAL):
+        u_own = executor.owned_duals(u)
+        u_new = regularizer.dual_prox(u_own + sigma_c * dw, executor, lam,
+                                      sigma, clip_fn=clip_fn)
     if rho != 1.0:
-        w_new = w + rho * (w_new - w)
-        u_new = regularizer.project_dual(u_own + rho * (u_new - u_own),
-                                         executor, lam)
+        with _scope(_prof.PHASE_RELAX):
+            w_new = w + rho * (w_new - w)
+            u_new = regularizer.project_dual(
+                u_own + rho * (u_new - u_own), executor, lam)
     return w_new, u_new
 
 
@@ -120,9 +130,10 @@ def pd_residual(tau, sigma, w, u, w_new, u_new) -> jnp.ndarray:
     order-independent, so every backend computes the identical residual
     from identical iterates regardless of its node/edge layout.
     """
-    rp = jnp.max(jnp.abs(w_new - w) / _col(tau))
-    rd = jnp.max(jnp.abs(u_new - u) / _col(sigma))
-    return jnp.maximum(rp, rd)
+    with _scope(_prof.PHASE_RESIDUAL):
+        rp = jnp.max(jnp.abs(w_new - w) / _col(tau))
+        rd = jnp.max(jnp.abs(u_new - u) / _col(sigma))
+        return jnp.maximum(rp, rd)
 
 
 def certificate(problem, w: jnp.ndarray, u: jnp.ndarray) -> dict:

@@ -559,6 +559,7 @@ def run_federated(problem: Problem, config: FederatedConfig | None = None,
     mse_tr = (jnp.concatenate(mse_parts) if mse_parts
               else jnp.zeros((0,), jnp.float32))
     ledger = CommLedger.concat(ledger_parts)
+    ledger.export_obs()
     state = FederatedState(w=w, u=u, u_recv=u_recv, z_recv=z_recv)
 
     diagnostics = (certificate(problem, w, u) if cfg.compute_diagnostics

@@ -86,6 +86,35 @@ class CommLedger:
         per_round = np.asarray(self.up_bytes) + np.asarray(self.down_bytes)
         return np.cumsum(per_round)
 
+    def export_obs(self) -> None:
+        """Mirror the run's wire totals into the obs registry.
+
+        All values are finite even for a zero-round ledger:
+        ``summary()`` already defines ``bytes_per_round`` as 0.0 when
+        no rounds ran, and the cumulative gauge falls back to 0.0 when
+        ``cumulative_bytes()`` is empty.
+        """
+        from repro import obs
+        if not obs.enabled():
+            return
+        s = self.summary()
+        obs.counter("repro_federated_rounds_total",
+                    help="federated communication rounds run"
+                    ).inc(s["rounds"])
+        obs.counter("repro_federated_up_bytes_total",
+                    help="client->owner primal message bytes"
+                    ).inc(s["up_bytes"])
+        obs.counter("repro_federated_down_bytes_total",
+                    help="owner->client dual broadcast bytes"
+                    ).inc(s["down_bytes"])
+        obs.gauge("repro_federated_bytes_per_round",
+                  help="mean wire bytes per round of the last run"
+                  ).set(s["bytes_per_round"])
+        cum = self.cumulative_bytes()
+        obs.gauge("repro_federated_cumulative_bytes",
+                  help="total wire bytes of the last run"
+                  ).set(float(cum[-1]) if cum.size else 0.0)
+
     def summary(self) -> dict[str, float]:
         """Flat float dict (JSON/CSV-ready) of the run's totals."""
         return {

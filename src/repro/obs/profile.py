@@ -1,0 +1,58 @@
+"""Device-profile hooks: named phases + a jax.profiler wrapper.
+
+The engine annotates the four primitives of Algorithm 1 (and the
+residual / exchange machinery around them) with ``jax.named_scope``
+under the phase names below, so a ``jax.profiler`` device trace groups
+XLA ops by *paper* phase — "where did the milliseconds go" answers in
+terms of eq. 14/15/11, not fused HLO soup.
+
+``jax.named_scope`` only manipulates the trace-time name stack: it adds
+zero runtime work and cannot change numerics, so the annotations are
+unconditional (no REPRO_OBS gate needed) and safe inside every trace
+context the engine runs under — jit, vmap, shard_map, and the Pallas
+kernel body.
+
+:func:`trace` wraps ``jax.profiler.trace`` for the explicit "profile
+this block" ask; view the result with TensorBoard or Perfetto
+(``tensorboard --logdir <dir>``).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+#: Paper-phase scope names (engine/step.py): eqs. 14-15 split into the
+#: four primitives plus the KM relaxation.
+PHASE_GATHER = "alg1_gather_duals"        # D^T u
+PHASE_PRIMAL = "alg1_primal_prox"         # eq. 17 / eq. 14
+PHASE_EDGE_DIFF = "alg1_edge_diff"        # D (2 w+ - w)
+PHASE_DUAL = "alg1_dual_prox"             # step 10 / eq. 15
+PHASE_RELAX = "alg1_km_relaxation"
+PHASE_RESIDUAL = "alg1_eq11_residual"     # stopping certificate
+#: Exchange scopes (engine/executors.py).
+PHASE_HALO_GATHER = "halo_exchange_gather"
+PHASE_HALO_DIFF = "halo_exchange_diff"
+PHASE_MAILBOX_DIFF = "mailbox_exchange_diff"
+#: Loop scopes (engine/loop.py).
+PHASE_METRIC_BLOCK = "solve_metric_block"
+PHASE_METRICS = "solve_metrics"
+
+
+def annotate(name: str):
+    """``jax.named_scope`` under a stable phase name (trace-time only)."""
+    return jax.named_scope(name)
+
+
+@contextlib.contextmanager
+def trace(logdir: str, **kwargs):
+    """Capture a device profile of the enclosed block into ``logdir``.
+
+    Thin wrapper over ``jax.profiler.trace`` that creates the directory
+    and keeps the call site independent of the profiler API surface;
+    extra kwargs (e.g. ``create_perfetto_link``) pass through.
+    """
+    os.makedirs(logdir, exist_ok=True)
+    with jax.profiler.trace(logdir, **kwargs):
+        yield logdir

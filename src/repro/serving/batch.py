@@ -34,10 +34,16 @@ from repro.serving.service import SolveResponse, SolveService
 
 @dataclasses.dataclass(frozen=True)
 class SolveRequest:
-    """One pending solve: a session id plus the cold-start flag."""
+    """One pending solve: a session id plus the cold-start flag.
+
+    ``queue_wait`` is the number of submissions the request sat behind
+    in the serving queue (the queue's count-based clock; 0 for direct
+    calls) — carried through to the response and its request event.
+    """
 
     session_id: str
     cold: bool = False
+    queue_wait: int = 0
 
 
 def _as_request(req) -> SolveRequest:
@@ -83,7 +89,8 @@ def solve_batch(service: SolveService, requests,
         if len(idxs) == 1:
             req = requests[idxs[0]]
             responses[idxs[0]] = service.solve(req.session_id,
-                                               cold=req.cold)
+                                               cold=req.cold,
+                                               queue_wait=req.queue_wait)
         else:
             group = [requests[i] for i in idxs]
             for i, resp in zip(idxs, _solve_group(service, group)):
@@ -107,31 +114,49 @@ def _solve_group(service: SolveService,
     lookups = [service._plan(sess.problem, cfg, sig=batch_sig)
                for sess in sessions]
 
-    problems, w0s, u0s, warms = [], [], [], []
+    problems, warms = [], []
     for sess, req in zip(sessions, group):
-        problem = sess.problem
-        warm = sess.w is not None and not req.cold
-        if warm:
-            # copies: the stacked buffers are donated on TPU/GPU
-            w0s.append(jnp.copy(sess.w))
-            u0s.append(problem.regularizer.project_dual(
-                jnp.copy(sess.u), problem.graph, problem.lam))
-        else:
-            w0s.append(None)
-            u0s.append(None)
-        warms.append(warm)
-        problems.append(problem)
+        warms.append(sess.w is not None and not req.cold)
+        problems.append(sess.problem)
 
+    def warm_starts():
+        # fresh copies per run: the stacked buffers are donated on
+        # TPU/GPU, and the compile/execute split below runs twice
+        w0s, u0s = [], []
+        for sess, problem, warm in zip(sessions, problems, warms):
+            if warm:
+                w0s.append(jnp.copy(sess.w))
+                u0s.append(problem.regularizer.project_dual(
+                    jnp.copy(sess.u), problem.graph, problem.lam))
+            else:
+                w0s.append(None)
+                u0s.append(None)
+        return w0s, u0s
+
+    w0s, u0s = warm_starts()
     t0 = time.perf_counter()
     results = solve_many(problems, cfg, w0s=w0s, u0s=u0s)
     jax.block_until_ready(results[-1].w)
-    seconds = (time.perf_counter() - t0) / B   # amortized per session
+    total = time.perf_counter() - t0
+    seconds = total / B                        # amortized per session
+    solve_seconds, compile_seconds = seconds, 0.0
+    if any(compiled for _, _, compiled in lookups):
+        # the group shares one vmapped executable; re-execute it warm
+        # to split the XLA trace out of the per-session timing (as in
+        # SolveService.solve — deterministic, second result returned)
+        w0s, u0s = warm_starts()
+        t1 = time.perf_counter()
+        results = solve_many(problems, cfg, w0s=w0s, u0s=u0s)
+        jax.block_until_ready(results[-1].w)
+        exec_total = time.perf_counter() - t1
+        solve_seconds = exec_total / B
+        compile_seconds = max(total - exec_total, 0.0) / B
 
     iterations = int(results[0].diagnostics.get(
         "iterations", _capped(cfg.num_iters, cfg.metric_every)))
     responses = []
-    for sess, result, warm, (plan, hit, compiled) in zip(
-            sessions, results, warms, lookups):
+    for sess, req, result, warm, (plan, hit, compiled) in zip(
+            sessions, group, results, warms, lookups):
         sess.w, sess.u = result.w, result.u
         sess.solves += 1
         cold_ref = sess.cold_iterations if warm else None
@@ -143,5 +168,8 @@ def _solve_group(service: SolveService,
                          iterations=iterations, cold_ref=cold_ref)
         responses.append(service._response(
             sess, result, warm=warm, cache_hit=hit, compiled=compiled,
-            iterations=iterations, seconds=seconds))
+            iterations=iterations, seconds=seconds,
+            solve_seconds=solve_seconds,
+            compile_seconds=compile_seconds if compiled else 0.0,
+            queue_wait=req.queue_wait, batch_width=B))
     return responses

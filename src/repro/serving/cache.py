@@ -31,6 +31,7 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.api.problem import Problem, SolverConfig
 from repro.core.graph import EdgeBlockLayout
 
@@ -176,6 +177,9 @@ class PlanCache:
         self._compiled_sigs[sig] = None
         while len(self._compiled_sigs) > self.compiled_sigs_max:
             self._compiled_sigs.popitem(last=False)
+        if obs.enabled():
+            obs.counter("repro_plan_compiles_total",
+                        help="executable signatures newly traced").inc()
         return True
 
     def get_or_build(self, key: PlanKey, build: Callable[[], Plan],
@@ -193,6 +197,8 @@ class PlanCache:
             self._plans.move_to_end(key)
             self.hits += 1
             plan.uses += 1
+            if obs.enabled():
+                self._export_obs(hit=True)
             # restored plans (cross-process load) hit here without this
             # process ever having traced the executable — still a compile
             return plan, True, self.mark_compiled(sig)
@@ -206,7 +212,17 @@ class PlanCache:
         while len(self._plans) > self.max_entries:
             self._plans.popitem(last=False)
             self.evictions += 1
+        if obs.enabled():
+            self._export_obs(hit=False)
         return plan, False, compiled
+
+    def _export_obs(self, *, hit: bool) -> None:
+        outcome = "hit" if hit else "miss"
+        obs.counter("repro_plan_cache_lookups_total",
+                    help="plan-cache lookups by outcome",
+                    outcome=outcome).inc()
+        obs.gauge("repro_plan_cache_entries",
+                  help="plans currently cached").set(len(self._plans))
 
     # -- cross-process persistence ------------------------------------------
     def save(self, path: str) -> dict[str, int]:

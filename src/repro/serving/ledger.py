@@ -110,6 +110,36 @@ class ServiceLedger:
         warm_iters = self.iterations_cold_ref - self.iterations_saved
         return warm_iters / self.iterations_cold_ref
 
+    def export_obs(self) -> None:
+        """Mirror the tenant's aggregates into the obs registry.
+
+        Every exported value is guarded finite by construction:
+        ``cache_hit_rate`` and ``warm_iteration_ratio`` both define an
+        empty ledger as 0.0 / 1.0 rather than 0/0, so a zero-request
+        tenant still exports clean gauges (no NaN ever reaches a
+        snapshot — ``export_json`` would refuse to serialize it).
+        """
+        from repro import obs
+        if not obs.enabled():
+            return
+        labels = {"tenant": self.tenant}
+        obs.gauge("repro_tenant_requests",
+                  help="service calls by tenant", **labels
+                  ).set(float(self.requests))
+        obs.gauge("repro_tenant_solves",
+                  help="solve responses produced by tenant", **labels
+                  ).set(float(self.solves))
+        obs.gauge("repro_tenant_iterations",
+                  help="solver iterations spent by tenant", **labels
+                  ).set(float(self.iterations))
+        obs.gauge("repro_tenant_cache_hit_rate",
+                  help="plan-cache hit rate by tenant", **labels
+                  ).set(float(self.cache_hit_rate))
+        obs.gauge("repro_tenant_warm_iteration_ratio",
+                  help="warm iterations / cold baseline by tenant "
+                       "(1.0 = warm starts saved nothing)", **labels
+                  ).set(float(self.warm_iteration_ratio))
+
     def summary(self) -> dict[str, float]:
         """Flat float dict (JSON/CSV-ready) of the tenant's totals."""
         return {

@@ -17,18 +17,25 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro import obs
 from repro.serving.batch import SolveRequest, solve_batch
 from repro.serving.service import SolveResponse, SolveService
 
 
 @dataclasses.dataclass
 class Ticket:
-    """One admitted request; ``response`` is filled at flush time."""
+    """One admitted request; ``response`` is filled at flush time.
+
+    ``submit_at`` pins the admission-clock reading (total submit
+    attempts) at admission; the flush measures the ticket's queue wait
+    as the number of submissions that arrived after it.
+    """
 
     request_id: int
     session_id: str
     tenant: str
     cold: bool = False
+    submit_at: int = 0
     response: SolveResponse | None = None
 
     @property
@@ -96,19 +103,23 @@ class ServingQueue:
         self._submits += 1
         if len(self._pending) >= self.max_pending:
             self.rejected_full += 1
+            self._count_submit("rejected_full")
             self._maybe_flush()
             return None
         if self.inflight(sess.tenant) >= self.max_inflight_per_tenant:
             self.rejected_tenant += 1
+            self._count_submit("rejected_tenant")
             self._maybe_flush()
             return None
         ticket = Ticket(request_id=self._next_id, session_id=session_id,
-                        tenant=sess.tenant, cold=cold)
+                        tenant=sess.tenant, cold=cold,
+                        submit_at=self._submits)
         self._next_id += 1
         self.submitted += 1
         if self._oldest_submit is None:
             self._oldest_submit = self._submits
         self._pending.append(ticket)
+        self._count_submit("admitted")
         self._maybe_flush()
         return ticket
 
@@ -132,10 +143,22 @@ class ServingQueue:
             self.singletons += 1
         else:
             self.batched += len(window)
-        reqs = [SolveRequest(t.session_id, cold=t.cold) for t in window]
+        reqs = [SolveRequest(t.session_id, cold=t.cold,
+                             queue_wait=self._submits - t.submit_at)
+                for t in window]
         for ticket, resp in zip(window, solve_batch(self.service, reqs)):
             ticket.response = resp
         return window
+
+    def _count_submit(self, outcome: str) -> None:
+        if not obs.enabled():
+            return
+        obs.counter("repro_queue_submits_total",
+                    help="queue submissions by admission outcome",
+                    outcome=outcome).inc()
+        obs.gauge("repro_queue_pending",
+                  help="requests waiting in the serving queue"
+                  ).set(float(len(self._pending)))
 
     def drain(self) -> list[Ticket]:
         """Alias for :meth:`flush` — end-of-stream convenience."""

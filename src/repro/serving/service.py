@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.api.backends import _should_fuse
 from repro.api.problem import Problem, SolverConfig
 from repro.api.solver import Solver, solve_path as _solve_path
@@ -103,6 +104,15 @@ class SolveResponse:
     trace (the optimality certificate the SLA is stated in);
     ``certificate`` carries the eq.-11 dual-infeasibility /
     stationarity diagnostics; ``meets_sla`` is residual <= tol.
+
+    Timing is split: ``seconds`` is the wall clock of the request's
+    first run, ``solve_seconds`` the pure-execution cost (a compiled
+    request is re-executed once so the XLA trace can be attributed to
+    ``compile_seconds = seconds - solve_seconds``; for an already-warm
+    executable ``solve_seconds == seconds`` and ``compile_seconds`` is
+    0).  ``queue_wait`` counts *submissions* (not wall time) the
+    request sat behind in the serving queue; ``batch_width`` is the
+    number of sessions solved by the same batched executable.
     """
 
     session_id: str
@@ -118,6 +128,10 @@ class SolveResponse:
     compiled: bool
     seconds: float
     meets_sla: bool
+    solve_seconds: float = 0.0
+    compile_seconds: float = 0.0
+    queue_wait: int = 0
+    batch_width: int = 1
 
 
 class SolveService:
@@ -260,13 +274,16 @@ class SolveService:
             problem,
             graph=dataclasses.replace(problem.graph, layout=plan.layout))
 
-    def solve(self, session_id: str, *, w_true=None,
-              cold: bool = False) -> SolveResponse:
+    def solve(self, session_id: str, *, w_true=None, cold: bool = False,
+              queue_wait: int = 0) -> SolveResponse:
         """Solve the session's problem, warm-starting from cached state.
 
         ``cold=True`` forces a from-zeros solve (benchmark baseline);
         warm starts re-project the cached duals onto the current
         lambda's feasible box, so a lambda retarget stays feasible.
+        ``queue_wait`` is forwarded verbatim into the response and the
+        request event (the serving queue passes each ticket's measured
+        wait; direct callers leave it 0).
         """
         sess = self.session(session_id)
         cfg = sess.config
@@ -274,17 +291,34 @@ class SolveService:
         problem = self._with_plan(sess.problem, plan)
 
         warm = sess.w is not None and not cold
-        w0 = u0 = None
-        if warm:
+
+        def warm_state():
+            if not warm:
+                return None, None
             # copies: backends donate warm-start buffers on TPU/GPU
             w0 = jnp.copy(sess.w)
             u0 = problem.regularizer.project_dual(
                 jnp.copy(sess.u), problem.graph, problem.lam)
+            return w0, u0
 
+        w0, u0 = warm_state()
         t0 = time.perf_counter()
         result = Solver(cfg).run(problem, w0=w0, u0=u0, w_true=w_true)
         jax.block_until_ready(result.w)
         seconds = time.perf_counter() - t0
+        solve_seconds, compile_seconds = seconds, 0.0
+        if compiled:
+            # the executable is warm now: one re-execution isolates the
+            # pure run cost, attributing the remainder to the XLA trace
+            # (the solve is deterministic, so the re-run's result is the
+            # one returned)
+            w0, u0 = warm_state()
+            t1 = time.perf_counter()
+            result = Solver(cfg).run(problem, w0=w0, u0=u0,
+                                     w_true=w_true)
+            jax.block_until_ready(result.w)
+            solve_seconds = time.perf_counter() - t1
+            compile_seconds = max(seconds - solve_seconds, 0.0)
 
         iterations = int(result.diagnostics.get(
             "iterations", _capped(cfg.num_iters, cfg.metric_every)))
@@ -303,7 +337,10 @@ class SolveService:
                          iterations=iterations, cold_ref=cold_ref)
         return self._response(sess, result, warm=warm, cache_hit=hit,
                               compiled=compiled, iterations=iterations,
-                              seconds=seconds)
+                              seconds=seconds,
+                              solve_seconds=solve_seconds,
+                              compile_seconds=compile_seconds,
+                              queue_wait=queue_wait)
 
     def solve_path(self, session_id: str, lams,
                    *, w_true=None) -> list[SolveResponse]:
@@ -324,7 +361,19 @@ class SolveService:
         t0 = time.perf_counter()
         result = _solve_path(problem, lams, cfg, w_true=w_true)
         jax.block_until_ready(result.w)
-        seconds = (time.perf_counter() - t0) / max(len(lams), 1)
+        total = time.perf_counter() - t0
+        npts = max(len(lams), 1)
+        seconds = total / npts
+        solve_seconds, compile_seconds = seconds, 0.0
+        if compiled:
+            # as in solve(): re-execute the warm executable to split the
+            # XLA trace out of the per-point timing
+            t1 = time.perf_counter()
+            result = _solve_path(problem, lams, cfg, w_true=w_true)
+            jax.block_until_ready(result.w)
+            exec_total = time.perf_counter() - t1
+            solve_seconds = exec_total / npts
+            compile_seconds = max(total - exec_total, 0.0) / npts
 
         iters = _capped(cfg.final_iters, cfg.metric_every)
         warm_iters = _capped(cfg.warm_iters, cfg.metric_every)
@@ -339,20 +388,26 @@ class SolveService:
             responses.append(self._response(
                 sess, point, warm=False, cache_hit=hit,
                 compiled=compiled if i == 0 else False, iterations=iters,
-                seconds=seconds, tol=sess.config.tol))
+                seconds=seconds, tol=sess.config.tol,
+                solve_seconds=solve_seconds,
+                compile_seconds=compile_seconds if i == 0 else 0.0,
+                kind="path"))
         return responses
 
     def _response(self, sess: Session, result, *, warm: bool,
                   cache_hit: bool, compiled: bool, iterations: int,
-                  seconds: float,
-                  tol: float | None = ...) -> SolveResponse:
+                  seconds: float, tol: float | None = ...,
+                  solve_seconds: float | None = None,
+                  compile_seconds: float = 0.0, queue_wait: int = 0,
+                  batch_width: int = 1,
+                  kind: str = "solve") -> SolveResponse:
         tol = sess.config.tol if tol is ... else tol
         residual = (float(result.residual[-1])
                     if result.residual is not None else float("nan"))
         certificate = {k: float(v)
                        for k, v in result.diagnostics.items()
                        if k != "iterations" and np.ndim(v) == 0}
-        return SolveResponse(
+        resp = SolveResponse(
             session_id=sess.session_id,
             w=result.w,
             objective=float(result.objective[-1]),
@@ -366,7 +421,56 @@ class SolveService:
             compiled=compiled,
             seconds=seconds,
             meets_sla=bool(tol is not None and residual <= tol),
+            solve_seconds=(seconds if solve_seconds is None
+                           else solve_seconds),
+            compile_seconds=compile_seconds,
+            queue_wait=queue_wait,
+            batch_width=batch_width,
         )
+        if obs.enabled():
+            self._record_obs(sess, resp, kind=kind)
+        return resp
+
+    def _record_obs(self, sess: Session, resp: SolveResponse, *,
+                    kind: str) -> None:
+        """Meter one response into the obs registry + event log."""
+        obs.counter("repro_serving_requests_total",
+                    help="solve responses by tenant and kind",
+                    tenant=sess.tenant, kind=kind).inc()
+        obs.histogram("repro_serving_request_seconds",
+                      help="request wall clock (compile included)"
+                      ).observe(resp.seconds)
+        obs.histogram("repro_serving_execute_seconds",
+                      help="pure-execution solve seconds"
+                      ).observe(resp.solve_seconds)
+        if resp.compile_seconds:
+            obs.counter("repro_serving_compile_seconds_total",
+                        help="seconds spent in XLA traces"
+                        ).inc(resp.compile_seconds)
+        obs.histogram("repro_serving_queue_wait",
+                      help="submissions a request waited behind",
+                      buckets=obs.COUNT_BUCKETS
+                      ).observe(float(resp.queue_wait))
+        obs.histogram("repro_serving_batch_width",
+                      help="sessions per batched executable",
+                      buckets=obs.COUNT_BUCKETS
+                      ).observe(float(resp.batch_width))
+        obs.counter("repro_serving_sla_total",
+                    help="responses by SLA outcome",
+                    outcome="met" if resp.meets_sla else "missed").inc()
+        obs.counter("repro_serving_iterations_total",
+                    help="solver iterations run by the service"
+                    ).inc(float(resp.iterations))
+        self.ledger(sess.tenant).export_obs()
+        obs.events.record_request(
+            event=kind, tenant=sess.tenant, session=sess.session_id,
+            queue_wait=resp.queue_wait, batch_width=resp.batch_width,
+            warm=resp.warm, cache_hit=resp.cache_hit,
+            compiled=resp.compiled, iterations=resp.iterations,
+            residual=resp.residual, meets_sla=resp.meets_sla,
+            seconds=resp.seconds, solve_seconds=resp.solve_seconds,
+            compile_seconds=resp.compile_seconds, lam=resp.lam,
+            tol=resp.tol)
 
 
 # ---------------------------------------------------------------------------

@@ -109,6 +109,8 @@ def replay(service: SolveService, session_id: str,
 def _flatten(resp: SolveResponse, prefix: str) -> dict:
     return {
         f"{prefix}_seconds": resp.seconds,
+        f"{prefix}_solve_seconds": resp.solve_seconds,
+        f"{prefix}_compile_seconds": resp.compile_seconds,
         f"{prefix}_iterations": resp.iterations,
         f"{prefix}_residual": resp.residual,
         f"{prefix}_objective": resp.objective,

@@ -1,0 +1,290 @@
+"""repro.obs: zero overhead while off, honest telemetry while on.
+
+The two contracts this suite pins:
+
+  * **off is free** — with telemetry disabled (the default), spans are
+    the shared no-op singleton, metric mutations do nothing, and the
+    solver's transfer discipline is unchanged: a tol solve still
+    performs exactly one device->host fetch (PR 8's transfer-guard
+    test, now run against the *library-level* counter in
+    ``obs.device_fetch``),
+  * **on is exact** — counters/histograms/events record what actually
+    happened: one transfer counted per tol solve, plan-cache compile
+    counts, one schema-valid JSONL event per serving response, a
+    cold response's compile/execute split, and finite ledger gauges
+    even for empty ledgers.
+"""
+import json
+
+import jax
+import pytest
+
+from repro import obs
+from repro.api import Solver, SolverConfig
+from repro.federated.ledger import CommLedger
+from repro.obs import events as obs_events
+from repro.obs import export as obs_export
+from repro.scenarios import get_scenario
+from repro.serving import ServingQueue, SolveService
+from repro.serving.cache import PlanCache, PlanKey
+from repro.serving.ledger import ServiceLedger
+
+from test_device_stop import TOL_CONF, _count_device_gets
+
+
+@pytest.fixture
+def fresh_obs():
+    """Telemetry off, registry and event log empty; restored after."""
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+@pytest.fixture
+def obs_on(fresh_obs):
+    obs.enable()
+    yield
+    obs.disable()
+
+
+def _scenario_problem():
+    return get_scenario("sbm_regression").build(seed=0, smoke=True,
+                                                lam=1e-2).problem
+
+
+def _serve_cfg():
+    return SolverConfig(num_iters=2000, rho=1.9, metric_every=25,
+                        tol=1e-3, record_residual=True)
+
+
+# ---------------------------------------------------------------------------
+# telemetry primitives
+# ---------------------------------------------------------------------------
+
+def test_disabled_is_noop(fresh_obs):
+    c = obs.counter("t_total")
+    g = obs.gauge("t_gauge")
+    h = obs.histogram("t_seconds")
+    c.inc()
+    g.set(5.0)
+    h.observe(0.1)
+    assert c.value == 0.0 and g.value == 0.0 and h.count == 0
+    # spans are the shared null singleton — no timer, no allocation
+    assert obs.span("anything") is obs.NULL_SPAN
+    with obs.span("anything"):
+        pass
+    assert obs.REGISTRY.find("repro_span_seconds") == []
+
+
+def test_metrics_record_when_enabled(obs_on):
+    c = obs.counter("t_total", help="h")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    obs.gauge("t_gauge").set(-1.0)
+    assert obs.gauge("t_gauge").value == -1.0
+    h = obs.histogram("t_seconds")
+    for v in (0.001, 0.002, 0.004, 0.3):
+        h.observe(v)
+    assert h.count == 4
+    assert 0.001 <= h.percentile(0.5) <= 0.004
+    assert h.percentile(0.99) <= 30.0
+    # labeled metrics are distinct series under one name
+    obs.counter("t_lab", tenant="a").inc()
+    obs.counter("t_lab", tenant="b").inc(2)
+    assert {m.value for m in obs.REGISTRY.find("t_lab")} == {1.0, 2.0}
+
+
+def test_span_records_duration(obs_on):
+    with obs.span("phase_x"):
+        pass
+    (h,) = obs.REGISTRY.find("repro_span_seconds")
+    assert h.count == 1 and dict(h.labels)["span"] == "phase_x"
+
+
+def test_registry_rejects_kind_conflicts(obs_on):
+    obs.counter("t_conflict")
+    with pytest.raises(TypeError):
+        obs.gauge("t_conflict")
+
+
+# ---------------------------------------------------------------------------
+# transfer counter: the PR 8 invariant, off and on
+# ---------------------------------------------------------------------------
+
+def test_tol_solve_one_transfer_obs_off(fresh_obs, monkeypatch):
+    """Acceptance: telemetry disabled changes nothing — a tol solve is
+    still exactly one device->host fetch, and the counter stays 0."""
+    problem = _scenario_problem()
+    Solver(TOL_CONF).run(problem)          # compile outside the guard
+    calls = _count_device_gets(monkeypatch)
+    with jax.transfer_guard_device_to_host("disallow"):
+        Solver(TOL_CONF).run(problem)
+    assert len(calls) == 1
+    assert obs.REGISTRY.find("repro_transfers_device_to_host_total") == []
+
+
+def test_tol_solve_counts_one_transfer_obs_on(obs_on, monkeypatch):
+    """Acceptance: with telemetry on, the library-level counter sees the
+    same single fetch the monkeypatch sees — no extra transfers appear
+    because observability was enabled."""
+    problem = _scenario_problem()
+    Solver(TOL_CONF).run(problem)
+    before = obs.counter("repro_transfers_device_to_host_total").value
+    calls = _count_device_gets(monkeypatch)
+    with jax.transfer_guard_device_to_host("disallow"):
+        Solver(TOL_CONF).run(problem)
+    after = obs.counter("repro_transfers_device_to_host_total").value
+    assert len(calls) == 1
+    assert after - before == 1.0
+    (solves,) = obs.REGISTRY.find("repro_solves_total")
+    assert solves.value >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# plan-cache counters
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_compile_counter(obs_on):
+    cache = PlanCache()
+    assert cache.mark_compiled(("a",)) is True
+    assert cache.mark_compiled(("a",)) is False
+    assert cache.mark_compiled(("b",)) is True
+    assert obs.counter("repro_plan_compiles_total").value == 2.0
+
+
+def test_plan_cache_lookup_counters(obs_on):
+    from repro.serving.cache import Plan
+
+    cache = PlanCache()
+    key = PlanKey(structure_hash="s", loss="l", regularizer="r",
+                  backend="dense", shape_sig=(1, 1, 1, 1, 1))
+    cache.get_or_build(key, lambda: Plan(key=key))
+    cache.get_or_build(key, lambda: Plan(key=key))
+    hits = {dict(m.labels)["outcome"]: m.value
+            for m in obs.REGISTRY.find("repro_plan_cache_lookups_total")}
+    assert hits == {"miss": 1.0, "hit": 1.0}
+    assert obs.gauge("repro_plan_cache_entries").value == 1.0
+
+
+# ---------------------------------------------------------------------------
+# serving events + timing split
+# ---------------------------------------------------------------------------
+
+def test_serving_stream_emits_valid_events(obs_on, tmp_path):
+    events_path = str(tmp_path / "events.jsonl")
+    obs.events.attach(events_path)
+    service = SolveService(_serve_cfg())
+    problem = _scenario_problem()
+    sid = service.create_session("tenant_t", problem)
+    queue = ServingQueue(service, max_batch=4, max_wait_requests=8)
+    queue.submit(sid)
+    queue.drain()
+    queue.submit(sid)
+    queue.drain()
+    service.solve_path(sid, [1e-1, 1e-2])
+    obs.events.LOG.close()
+
+    n = obs_events.validate_jsonl(events_path)
+    assert n == 4                          # 2 solves + 2 path points
+    with open(events_path) as f:
+        evs = [json.loads(line) for line in f]
+    kinds = [e["event"] for e in evs]
+    assert kinds == ["solve", "solve", "path", "path"]
+    assert evs[0]["compiled"] and not evs[1]["compiled"]
+    assert not evs[0]["warm"] and evs[1]["warm"]
+    assert all(e["tenant"] == "tenant_t" for e in evs)
+    roll = obs_events.rolling_latency()
+    assert roll["count"] == 4.0
+    assert 0.0 < roll["p99"] and roll["p99"] < float("inf")
+
+
+def test_response_timing_split(obs_on):
+    service = SolveService(_serve_cfg())
+    problem = _scenario_problem()
+    sid = service.create_session("tenant_t", problem)
+    cold = service.solve(sid)
+    warm = service.solve(sid)
+    # cold run paid (and attributed) the XLA trace; the warm one didn't
+    assert cold.compiled and cold.compile_seconds > 0.0
+    assert cold.seconds >= cold.solve_seconds > 0.0
+    assert abs(cold.seconds - cold.solve_seconds
+               - cold.compile_seconds) < 1e-9
+    assert not warm.compiled and warm.compile_seconds == 0.0
+    assert warm.solve_seconds == warm.seconds
+
+
+def test_queue_wait_reaches_response(obs_on):
+    service = SolveService(_serve_cfg())
+    problem = _scenario_problem()
+    sids = [service.create_session("tenant_t", problem)
+            for _ in range(2)]
+    queue = ServingQueue(service, max_batch=8, max_wait_requests=100,
+                         max_inflight_per_tenant=8)
+    t0 = queue.submit(sids[0])
+    t1 = queue.submit(sids[1])
+    queue.drain()
+    # the first ticket waited through the second submission
+    assert t0.response.queue_wait == 1
+    assert t1.response.queue_wait == 0
+    submits = {dict(m.labels)["outcome"]: m.value
+               for m in obs.REGISTRY.find("repro_queue_submits_total")}
+    assert submits["admitted"] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# ledger gauges: finite on empty
+# ---------------------------------------------------------------------------
+
+def test_empty_ledgers_export_finite_gauges(obs_on):
+    ServiceLedger(tenant="empty").export_obs()
+    CommLedger.empty().export_obs()
+    text = obs_export.export_json()        # allow_nan=False: raises on NaN
+    snap = json.loads(text)
+    by_name = {m["name"]: m for m in snap["metrics"]
+               if m["kind"] == "gauge"}
+    assert by_name["repro_tenant_warm_iteration_ratio"]["value"] == 1.0
+    assert by_name["repro_tenant_cache_hit_rate"]["value"] == 0.0
+    assert by_name["repro_federated_bytes_per_round"]["value"] == 0.0
+    assert by_name["repro_federated_cumulative_bytes"]["value"] == 0.0
+    # the Prometheus rendering of the same registry also validates
+    obs_export.validate_prometheus(obs_export.prometheus_text())
+
+
+def test_cumulative_bytes_empty_is_empty_not_nan():
+    cum = CommLedger.empty().cumulative_bytes()
+    assert cum.size == 0
+
+
+# ---------------------------------------------------------------------------
+# export validators reject bad payloads
+# ---------------------------------------------------------------------------
+
+def test_prometheus_validator_rejects_nan():
+    bad = "# TYPE x gauge\nx nan\n"
+    with pytest.raises(ValueError, match="non-finite"):
+        obs_export.validate_prometheus(bad)
+
+
+def test_prometheus_validator_rejects_sample_less_type():
+    with pytest.raises(ValueError, match="no samples"):
+        obs_export.validate_prometheus("# TYPE x counter\n")
+
+
+def test_validate_event_rejects_missing_and_nonfinite():
+    good = {"seq": 0, "event": "solve", "tenant": "t", "session": "s",
+            "queue_wait": 0, "batch_width": 1, "warm": False,
+            "cache_hit": True, "compiled": False, "iterations": 10,
+            "residual": 1e-4, "meets_sla": True, "seconds": 0.1,
+            "solve_seconds": 0.1, "compile_seconds": 0.0, "lam": 0.01,
+            "tol": 1e-3}
+    obs_events.validate_event(good)
+    with pytest.raises(ValueError, match="missing"):
+        obs_events.validate_event({k: v for k, v in good.items()
+                                   if k != "residual"})
+    with pytest.raises(ValueError, match="not finite"):
+        obs_events.validate_event({**good, "seconds": float("nan")})
+    with pytest.raises(ValueError, match="kind"):
+        obs_events.validate_event({**good, "event": "bogus"})
