@@ -43,6 +43,15 @@ Three device-resident-solve columns ride along (PR 8):
                                 ``L * budget`` (measured once at a
                                 fixed size; < 1 is the win).
 
+A ``sharded_fused`` scale-out section rides along (PR 10): the fused
+kernel inside shard_map shards over a two-level hierarchical partition,
+measured on multiple virtual CPU devices in a subprocess
+(``--xla_force_host_platform_device_count``) at sizes up to 1M nodes /
+10M edges — far beyond the in-process ladder.  Each row reports
+per-shard and aggregate edge-iters/s against two same-process
+references: the single-device fused path and the single-shard (S=1)
+hierarchical solve, both at the matched per-shard size.
+
 The full run lands in ``BENCH_scaling.json`` at the repo root (plus
 ``results/benchmarks/scaling.json``) so subsequent PRs have a perf
 trajectory to regress against; smoke runs write
@@ -66,6 +75,19 @@ SIZES = (250, 1000, 4000, 16000, 32000)
 SMOKE_SIZES = (250, 1000)
 ITERS = 200
 SMOKE_ITERS = 40
+# hierarchical scale-out column: sizes are too big for the in-process
+# ladder (and need a multi-device CPU), so they run in a subprocess
+SHARDED_SIZES = (250_000, 1_000_000)
+SMOKE_SHARDED_SIZES = (8_000,)
+SHARDED_SHARDS = 8
+SMOKE_SHARDED_SHARDS = 4
+SHARDED_ITERS = 5
+SMOKE_SHARDED_ITERS = 20
+# clustered topology for the scale-out rows: ~2000-node clusters with a
+# sparse inter-cluster backbone (the paper's federated regime); the
+# cross-edge budget is ~0.7% of nodes so the 1-hop halo (and its
+# replicated 2nd ring) stays a small fraction of each shard
+SHARDED_CLUSTER_NODES = 2000
 # the masked-vs-dense lambda-path measurement runs once, at a fixed size
 PATH_SIZE = 4000
 SMOKE_PATH_SIZE = 250
@@ -111,8 +133,184 @@ METHODOLOGY = (
     "dense solve with REPRO_OBS telemetry enabled and disabled "
     "(benchmarks.common.interleaved_best_of) and reports the on/off "
     "ratio — a machine-relative gate (<= 1.02) on the telemetry stack's "
-    "when-off cost; absolute seconds are never compared across machines."
+    "when-off cost; absolute seconds are never compared across machines. "
+    "sharded_fused rows run the hierarchical-partition backend on "
+    "multiple virtual CPU devices in a subprocess; topology is an SBM "
+    "with ~2000-node clusters and a sparse inter-cluster backbone "
+    "(cross edges ~ 0.7% of nodes), the regime where a cluster-aware "
+    "cut keeps the halo small. On a host whose virtual devices "
+    "time-share the cores, aggregate edge-iters/s equals the per-shard "
+    "rate a real S-device mesh would sustain, so "
+    "weak_scaling_efficiency = aggregate / single-device-fused at the "
+    "matched per-shard size is the device-parallel-equivalent per-shard "
+    "ratio (full-run gate >= 0.7 at the largest row); smoke runs gate "
+    "per_shard_vs_single_shard >= 0.85 instead — per-shard throughput "
+    "within 15% of the single-shard hierarchical baseline measured in "
+    "the same run."
 )
+
+
+def _make_clustered(v: int, seed: int, cross_edges: float):
+    """SBM with ~2000-node clusters and a sparse inter-cluster backbone
+    (expected ``cross_edges`` edges across clusters) — the scale-out
+    topology.  Giant-cluster SBMs are expanders: no balanced partition
+    can keep their edges shard-internal, so the hierarchical rows use
+    the many-cluster regime the paper targets."""
+    import jax.numpy as jnp
+
+    from repro.core import losses as L
+    from repro.core.graph import sbm_graph_sparse
+
+    rng = np.random.default_rng(seed)
+    nc = max(v // SHARDED_CLUSTER_NODES, 1)
+    cs = [v // nc] * nc
+    cs[-1] += v - sum(cs)
+    # degree ~20.5 so the 1M-node row clears 10M edges after sampling
+    g, assign = sbm_graph_sparse(
+        rng, tuple(cs), p_in=min(20.5 / (v / nc), 1.0),
+        p_out=min(2.0 * cross_edges / (v * v), 1.0))
+    w_true = np.where(assign[:, None] % 2 == 0, [2.0, 2.0],
+                      [-2.0, 2.0]).astype(np.float32)
+    x = rng.standard_normal((v, 5, 2)).astype(np.float32)
+    y = np.einsum("vmn,vn->vm", x, w_true)
+    labeled = np.zeros(v, np.float32)
+    labeled[rng.choice(v, size=max(v // 10, 10), replace=False)] = 1.0
+    data = L.NodeData(x=jnp.asarray(x), y=jnp.asarray(y),
+                      sample_mask=jnp.ones((v, 5), jnp.float32),
+                      labeled_mask=jnp.asarray(labeled))
+    return g, data
+
+
+def _sharded_worker(size: int, shards: int, iters: int, seed: int) -> dict:
+    """Measure the hierarchical ``sharded_fused`` path on ``shards``
+    virtual CPU devices.  Runs in a subprocess: XLA_FLAGS must be set
+    before jax is imported, and the parent keeps exactly one device.
+
+    Reports per-shard and aggregate edge-iters/s plus two references
+    measured in the same process: the single-device fused path at the
+    matched per-shard size, and the single-shard (S=1) hierarchical
+    solve of the same per-shard-sized problem.  On a host where the
+    virtual devices time-share the cores, the *aggregate* hierarchical
+    throughput equals the per-shard rate an S-device mesh would sustain,
+    so ``weak_scaling_efficiency`` = aggregate / single-device-matched
+    is the device-parallel-equivalent per-shard ratio."""
+    import time as _time
+
+    from repro.api import Problem, Solver, SolverConfig
+    from repro.core.distributed import (shard_problem_fused,
+                                        solve_nlasso_hier)
+    from repro.core.mesh import make_host_mesh
+
+    cross = 0.007 * size
+    t0 = _time.perf_counter()
+    g, data = _make_clustered(size, seed, cross)
+    build_s = _time.perf_counter() - t0
+
+    t0 = _time.perf_counter()
+    sp = shard_problem_fused(g, data, shards, seed=seed)
+    plan_s = _time.perf_counter() - t0
+    h = sp.hier
+    mesh = make_host_mesh(shards, 1)
+
+    def time_hier():
+        best = float("inf")
+        for _ in range(2):
+            t0 = _time.perf_counter()
+            w, _, _, comm = solve_nlasso_hier(sp, mesh, 1e-3, iters)
+            np.asarray(w)
+            best = min(best, _time.perf_counter() - t0)
+        return iters / best, comm
+
+    _, comm = time_hier()                      # compile + warm
+    its, comm = time_hier()
+    aggregate = g.num_edges * its
+
+    # single-device fused reference at the matched per-shard size
+    gr, dr = _make_clustered(size // shards, seed + 1, cross / shards)
+    prob = Problem.create(gr, dr, lam=1e-3)
+    solver = Solver(SolverConfig(num_iters=iters, metric_every=iters,
+                                 backend="pallas", fused=True))
+
+    def time_ref():
+        best = float("inf")
+        for _ in range(2):
+            t0 = _time.perf_counter()
+            solver.run(prob).w.block_until_ready()
+            best = min(best, _time.perf_counter() - t0)
+        return iters / best
+
+    time_ref()                                 # compile + warm
+    ref_aggregate = gr.num_edges * time_ref()
+
+    # single-shard hierarchical baseline at the same per-shard size (the
+    # CI smoke gate is machine-relative against this)
+    sp1 = shard_problem_fused(gr, dr, 1, seed=seed)
+    mesh1 = make_host_mesh(1, 1)
+
+    def time_hier1():
+        best = float("inf")
+        for _ in range(2):
+            t0 = _time.perf_counter()
+            w, _, _, _ = solve_nlasso_hier(sp1, mesh1, 1e-3, iters)
+            np.asarray(w)
+            best = min(best, _time.perf_counter() - t0)
+        return iters / best
+
+    time_hier1()                               # compile + warm
+    hier1_aggregate = gr.num_edges * time_hier1()
+
+    return {
+        "size": int(size),
+        "edges": int(g.num_edges),
+        "shards": int(shards),
+        "iters": int(iters),
+        "comm": comm,
+        "cut_fraction": float(h.cut_fraction),
+        "halo_nodes": int(h.halo_nodes),
+        "replicated_edges": int(h.replicated_edges),
+        "build_s": build_s,
+        "plan_s": plan_s,
+        "iters_per_s": its,
+        "edge_iters_per_s": aggregate,
+        "per_shard_edge_iters_per_s": aggregate / shards,
+        "single_device_matched_edge_iters_per_s": ref_aggregate,
+        "single_shard_matched_edge_iters_per_s": hier1_aggregate,
+        "weak_scaling_efficiency": aggregate / ref_aggregate,
+        "per_shard_vs_single_shard": aggregate / hier1_aggregate,
+    }
+
+
+def _run_sharded_rows(sizes, shards: int, iters: int, seed: int,
+                      verbose: bool) -> dict:
+    """Spawn one subprocess per scale-out size (fresh XLA_FLAGS each)."""
+    import subprocess
+    import sys
+
+    rows = {}
+    for v in sizes:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count={shards}")
+        env["PYTHONPATH"] = (REPO_ROOT + os.pathsep +
+                             os.path.join(REPO_ROOT, "src") + os.pathsep +
+                             env.get("PYTHONPATH", ""))
+        cmd = [sys.executable, "-m", "benchmarks.scaling",
+               "--sharded-worker", "--size", str(v), "--shards", str(shards),
+               "--iters", str(iters), "--seed", str(seed)]
+        res = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                             timeout=3600)
+        if res.returncode != 0:
+            raise RuntimeError(f"sharded worker |V|={v} failed:\n"
+                               + res.stderr[-4000:])
+        row = json.loads(res.stdout.strip().splitlines()[-1])
+        rows[str(v)] = row
+        if verbose:
+            print(f"|V|={v:>8d} |E|={row['edges']:>9d} S={shards} "
+                  f"comm={row['comm']} cut={row['cut_fraction']:.4f} "
+                  f"{row['iters_per_s']:7.3f}it/s "
+                  f"per-shard {row['per_shard_edge_iters_per_s']:.3e} "
+                  f"weak-scaling {row['weak_scaling_efficiency']:.3f}")
+    return rows
 
 
 def _make(v: int, seed: int):
@@ -307,11 +505,38 @@ def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
               f"{obs_overhead['ratio']:.4f} "
               f"({'PASS' if obs_overhead['ok'] else 'FAIL'})")
 
+    # hierarchical scale-out rows (subprocess: multi-device CPU)
+    sh_sizes = SMOKE_SHARDED_SIZES if smoke else SHARDED_SIZES
+    sh_shards = SMOKE_SHARDED_SHARDS if smoke else SHARDED_SHARDS
+    sh_iters = SMOKE_SHARDED_ITERS if smoke else SHARDED_ITERS
+    sharded_rows = _run_sharded_rows(sh_sizes, sh_shards, sh_iters, seed,
+                                     verbose)
+    largest_sh = sharded_rows[str(sh_sizes[-1])]
+    sharded = {
+        "rows": sharded_rows,
+        "shards": sh_shards,
+        # full-run gate: device-parallel-equivalent per-shard throughput
+        # of the largest row >= 0.7x the single-device fused path at the
+        # matched per-shard size; smoke gate (CI): per-shard throughput
+        # within 15% of the single-shard hierarchical baseline measured
+        # in the same run (machine-relative)
+        "ok": bool(largest_sh["per_shard_vs_single_shard"] >= 0.85
+                   if smoke else
+                   largest_sh["weak_scaling_efficiency"] >= 0.7),
+    }
+    if verbose:
+        print(f"sharded_fused gate: "
+              f"{'PASS' if sharded['ok'] else 'FAIL'} "
+              f"(weak-scaling {largest_sh['weak_scaling_efficiency']:.3f}, "
+              f"vs single-shard "
+              f"{largest_sh['per_shard_vs_single_shard']:.3f})")
+
     # near-linear gate: fused edge-throughput at the largest size within
     # 10x of its peak across sizes
     tps = [r["edge_iters_per_s"]["pallas_fused"] for r in rows.values()]
     payload = {
         "rows": rows,
+        "sharded_fused": sharded,
         "path_masked_vs_dense": path,
         "obs_overhead": obs_overhead,
         "iters": iters,
@@ -319,7 +544,7 @@ def run(seed: int = 0, verbose: bool = True, smoke: bool | None = None) -> dict:
         "smoke": bool(smoke),
         "backend": jax.default_backend(),
         "methodology": METHODOLOGY,
-        "ok": bool(tps[-1] > max(tps) / 10),
+        "ok": bool(tps[-1] > max(tps) / 10 and sharded["ok"]),
     }
     save_result("scaling", payload)
     out_path = BENCH_SMOKE_PATH if smoke else BENCH_PATH
@@ -336,5 +561,17 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="capped sizes/iterations (CI smoke mode)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sharded-worker", action="store_true",
+                    help="internal: measure one sharded_fused row and "
+                         "print it as JSON (run with XLA_FLAGS "
+                         "--xla_force_host_platform_device_count set)")
+    ap.add_argument("--size", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=SHARDED_SHARDS)
+    ap.add_argument("--iters", type=int, default=SHARDED_ITERS)
     args = ap.parse_args()
-    run(seed=args.seed, smoke=args.smoke or None)
+    if args.sharded_worker:
+        print(json.dumps(_sharded_worker(args.size, args.shards,
+                                         args.iters, args.seed),
+                         default=float))
+    else:
+        run(seed=args.seed, smoke=args.smoke or None)

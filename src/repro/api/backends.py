@@ -45,6 +45,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api.losses import Loss, SquaredLoss
 from repro.api.problem import Problem, SolveResult, SolverConfig
@@ -509,13 +510,21 @@ def solve_dense(problem: Problem, config: SolverConfig, *, w0=None, u0=None,
 _LAYOUT_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
-def _graph_layout(graph):
+def _graph_layout(graph, window_hint=None):
+    """Plan (or fetch) the graph's edge-blocked layout.
+
+    ``window_hint = (num_features, param_floats, itemsize, cap)`` feeds
+    the block-size auto-tuner in ``plan_edge_blocks`` (pick the block
+    ladder rung minimizing total window traffic under the VMEM cap).
+    The cache keeps whichever layout was planned first for a graph —
+    per-object, so one problem's hint never leaks to another graph.
+    """
     if graph.layout is not None:
         return graph.layout
     from repro.core.graph import plan_edge_blocks
     layout = _LAYOUT_CACHE.get(graph)
     if layout is None:
-        layout = plan_edge_blocks(graph)
+        layout = plan_edge_blocks(graph, window_hint=window_hint)
         _LAYOUT_CACHE[graph] = layout
     return layout
 
@@ -565,7 +574,6 @@ def _fused_window_fits(problem: Problem,
     so bf16 roughly doubles the fusable window instead of falling back
     to the unfused path early.
     """
-    lt = _graph_layout(problem.graph)
     try:
         param_floats = problem.loss.prox_param_floats(
             problem.data.x.shape[1], problem.num_features)
@@ -574,9 +582,12 @@ def _fused_window_fits(problem: Problem,
         # to the unfused path rather than crash the dispatch gate
         return False
     itemsize = 4 if config is None else jnp.dtype(config.dtype).itemsize
+    cap = _fused_window_cap()
+    lt = _graph_layout(problem.graph, window_hint=(
+        problem.num_features, param_floats, itemsize, cap))
     return lt.window_bytes(
         problem.num_features, param_floats=param_floats,
-        itemsize=itemsize) <= _fused_window_cap()
+        itemsize=itemsize) <= cap
 
 
 def _should_fuse(problem: Problem, config: SolverConfig) -> bool:
@@ -960,26 +971,28 @@ def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
     _storage_dtype(config, fused=False)
     # local imports: core.distributed is a peer of the api package and
     # delegates its own front-end back here (lazy on both sides).
-    from repro.core.distributed import shard_problem, solve_nlasso_sharded
+    from repro.core.distributed import (halo_exchange_bytes_per_iter,
+                                        resolve_comm, shard_problem,
+                                        solve_nlasso_sharded)
     from repro.core.partition import (permute_edge_array_device,
                                       permute_node_array_device,
                                       unpermute_edge_array_device,
                                       unpermute_node_array_device)
     from repro.core.mesh import make_host_mesh
 
-    if not isinstance(problem.loss, SquaredLoss):
+    if not problem.regularizer.fusable:
         raise NotImplementedError(
-            "sharded backend currently supports the squared loss "
-            "(paper §4.1); other losses run on the dense/pallas backends")
-    if not isinstance(problem.regularizer, TotalVariation):
-        raise NotImplementedError(
-            "sharded backend currently supports the TV regularizer")
+            "sharded backend needs an edge-elementwise (fusable) "
+            "regularizer resolvent")
 
     mesh = config.mesh if config.mesh is not None else make_host_mesh(1, 1)
     num_shards = (config.num_shards if config.num_shards is not None
                   else mesh.shape[config.mesh_axis])
     sp = shard_problem(problem.graph, problem.data, num_shards,
-                       partitioner=config.partitioner)
+                       partitioner=config.partitioner, loss=problem.loss)
+    comm = resolve_comm(
+        config.comm,
+        sp.plan.cut_edges / max(problem.graph.num_edges, 1))
     # device-side layout permutes (jnp gathers): warm-started continuation
     # sweeps keep the carry on device instead of bouncing through numpy
     if w0 is not None:
@@ -989,8 +1002,9 @@ def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
     lam = float(problem.lam)
     w_pad, u_pad, iterations = solve_nlasso_sharded(
         sp, mesh, lam, config.num_iters, axis=config.mesh_axis,
-        rho=config.rho, comm=config.comm, w0=w0, u0=u0, return_u=True,
-        tol=config.tol, tol_every=config.metric_every)
+        rho=config.rho, comm=comm, w0=w0, u0=u0, return_u=True,
+        tol=config.tol, tol_every=config.metric_every,
+        reg=problem.regularizer)
     w = unpermute_node_array_device(sp.plan, w_pad, problem.graph.num_nodes)
     u = unpermute_edge_array_device(sp.plan, u_pad, problem.graph.num_edges)
     obj = problem.objective(w)[None]
@@ -1001,5 +1015,94 @@ def solve_sharded(problem: Problem, config: SolverConfig, *, w0=None,
                                1.0 - problem.data.labeled_mask)[None]
     diag = _with_iterations(_diagnostics(problem, w, u, config), config,
                             iterations)
+    diag = _with_halo_traffic(
+        diag, halo_exchange_bytes_per_iter(sp, comm, problem.num_features),
+        iterations, comm, "sharded")
+    return SolveResult(w=w, u=u, objective=obj, mse=mse, lam=problem.lam,
+                       diagnostics=diag)
+
+
+def _with_halo_traffic(diag, bytes_per_iter: int, iterations: int,
+                       comm: str, backend: str):
+    """Surface inter-shard exchange volume per solve (and mirror it onto
+    the obs registry, CommLedger.export_obs-style)."""
+    from repro import obs
+
+    total = int(bytes_per_iter) * int(iterations)
+    diag = dict(diag or {})
+    diag["halo_exchange_bytes_per_iter"] = float(bytes_per_iter)
+    diag["halo_exchange_bytes"] = float(total)
+    if obs.enabled():
+        obs.counter(
+            "halo_exchange_bytes_total",
+            help="inter-shard dual/primal halo exchange payload bytes",
+            comm=comm, backend=backend).inc(total)
+        obs.counter(
+            "halo_exchange_iterations_total",
+            help="iterations contributing halo exchanges",
+            comm=comm, backend=backend).inc(int(iterations))
+    return diag
+
+
+@register_backend("sharded_fused")
+def solve_sharded_fused(problem: Problem, config: SolverConfig, *, w0=None,
+                        u0=None, w_true=None) -> SolveResult:
+    """Two-level scale-out: hierarchical partition (cluster cuts between
+    shards, RCM + edge blocks within), each shard_map shard stepping the
+    fused edge-blocked kernel with a per-iteration dual halo refresh
+    between shards.  ``comm="auto"`` (the default) picks the boundary
+    exchange when the inter-shard cut fraction is < 25%.  Objective/MSE
+    are evaluated once at the final iterate, like ``sharded``.
+    """
+    _storage_dtype(config, fused=False)
+    from repro.core.distributed import (halo_exchange_bytes_per_iter,
+                                        resolve_comm, shard_problem_fused,
+                                        solve_nlasso_hier)
+    from repro.core.mesh import make_host_mesh
+
+    if not problem.regularizer.fusable:
+        raise NotImplementedError(
+            "sharded_fused needs an edge-elementwise (fusable) "
+            "regularizer resolvent")
+    if ops._use_kernel_default() and not problem.loss.kernel_safe:
+        raise NotImplementedError(
+            f"loss {type(problem.loss).__name__} cannot lower inside the "
+            "Pallas kernel; run sharded_fused off-TPU or use sharded")
+    if config.clip_fn is not None or config.affine_fn is not None:
+        raise NotImplementedError(
+            "custom kernel hooks target the unfused engine")
+
+    mesh = config.mesh if config.mesh is not None else make_host_mesh(1, 1)
+    num_shards = (config.num_shards if config.num_shards is not None
+                  else mesh.shape[config.mesh_axis])
+    try:
+        param_floats = problem.loss.prox_param_floats(
+            problem.data.x.shape[1], problem.num_features)
+    except NotImplementedError:
+        param_floats = 0
+    hint = (problem.num_features, param_floats, 4, _fused_window_cap())
+    sp = shard_problem_fused(problem.graph, problem.data, num_shards,
+                             partitioner=config.partitioner,
+                             loss=problem.loss, window_hint=hint)
+    lam = float(problem.lam)
+    w_np, u_np, iterations, comm = solve_nlasso_hier(
+        sp, mesh, lam, config.num_iters, axis=config.mesh_axis,
+        rho=config.rho, comm=resolve_comm(config.comm, sp.hier.cut_fraction),
+        w0=None if w0 is None else np.asarray(w0),
+        u0=None if u0 is None else np.asarray(u0),
+        tol=config.tol, tol_every=config.metric_every,
+        reg=problem.regularizer)
+    w, u = jnp.asarray(w_np), jnp.asarray(u_np)
+    obj = problem.objective(w)[None]
+    if w_true is None:
+        mse = None
+    else:
+        mse = graph_signal_mse(w, w_true,
+                               1.0 - problem.data.labeled_mask)[None]
+    diag = _with_iterations(_diagnostics(problem, w, u, config), config,
+                            iterations)
+    diag = _with_halo_traffic(
+        diag, halo_exchange_bytes_per_iter(sp, comm, problem.num_features),
+        iterations, comm, "sharded_fused")
     return SolveResult(w=w, u=u, objective=obj, mse=mse, lam=problem.lam,
                        diagnostics=diag)

@@ -132,6 +132,9 @@ class SolverConfig:
                    hooks are set.
       mesh / mesh_axis / num_shards / partitioner / comm: sharded-backend
                    layout knobs (mesh defaults to a (1, 1) host mesh).
+                   ``comm`` is "auto" (boundary exchange when the
+                   inter-shard cut fraction is < 25%, dense otherwise),
+                   "dense", or "boundary".
       federated:   federated-backend runtime knobs: a
                    ``repro.federated.FederatedConfig`` whose participation
                    / local-update / compression / checkpoint policies are
@@ -178,7 +181,7 @@ class SolverConfig:
     mesh_axis: str = "data"
     num_shards: int | None = None
     partitioner: str = "cluster"
-    comm: str = "dense"
+    comm: str = "auto"
     federated: Any = None
     # custom kernel hooks
     clip_fn: Any = dataclasses.field(default=None, compare=False,

@@ -278,17 +278,24 @@ def build_graph(edges: np.ndarray, weights: np.ndarray,
     np.add.at(deg, hi, 1)
     max_deg = max(int(deg.max()) if num_nodes else 0, 1)
 
+    # vectorized incidence scatter: interleave (src, dst) endpoints so each
+    # node's slots keep edge order (src side +1 before dst side -1 for the
+    # same edge), stable-sort by node, and the slot column is the rank
+    # within the node's group — same fill order as a per-edge loop, O(E log E)
     inc_edges = np.zeros((num_nodes, max_deg), dtype=np.int32)
     inc_signs = np.zeros((num_nodes, max_deg), dtype=np.float32)
-    fill = np.zeros(num_nodes, dtype=np.int64)
-    for e in range(E):
-        i, j = lo[e], hi[e]
-        inc_edges[i, fill[i]] = e
-        inc_signs[i, fill[i]] = 1.0     # src side: D_{e,i} = +I
-        fill[i] += 1
-        inc_edges[j, fill[j]] = e
-        inc_signs[j, fill[j]] = -1.0    # dst side: D_{e,j} = -I
-        fill[j] += 1
+    if E:
+        endpoints = np.empty(2 * E, dtype=np.int64)
+        endpoints[0::2], endpoints[1::2] = lo, hi
+        eid = np.repeat(np.arange(E, dtype=np.int64), 2)
+        esign = np.tile(np.asarray([1.0, -1.0], np.float32), E)
+        order2 = np.argsort(endpoints, kind="stable")
+        nodes_sorted = endpoints[order2]
+        group_start = np.concatenate([[0], np.cumsum(
+            np.bincount(endpoints, minlength=num_nodes))])[:-1]
+        slot = np.arange(2 * E) - group_start[nodes_sorted]
+        inc_edges[nodes_sorted, slot] = eid[order2]
+        inc_signs[nodes_sorted, slot] = esign[order2]
 
     return EmpiricalGraph(
         src=jnp.asarray(lo, jnp.int32),
@@ -304,27 +311,29 @@ def _round_up(x: int, mult: int) -> int:
     return -(-max(x, 1) // mult) * mult
 
 
-def plan_edge_blocks(graph: EmpiricalGraph,
-                     block_nodes: int | None = None) -> EdgeBlockLayout:
-    """Host-side edge-blocked layout pass (see :class:`EdgeBlockLayout`).
+def _plan_edge_blocks_fixed(graph: EmpiricalGraph, block_nodes: int,
+                            min_extents: dict | None = None
+                            ) -> EdgeBlockLayout:
+    """Plan the edge-blocked layout for an explicit block size.
 
-    RCM node reordering + per-block contiguous edge ranges with halo
-    padding; the result is static aux the fused primal-dual kernel keys
-    its BlockSpec index maps on.
+    ``min_extents`` forces lower bounds on the padded extents
+    (``num_blocks`` / ``block_edges`` / ``kn`` / ``klo`` / ``khi`` /
+    ``max_degree``): the hierarchical partitioner plans every shard's
+    local subgraph twice and re-plans with the across-shard maxima so all
+    shards share one static layout signature under ``shard_map``.
+    Forced padding only widens windows and adds zero-weight slots — the
+    planned incidence/ownership content is unchanged.
     """
     from repro.core.partition import rcm_order_cached   # local: avoid cycle
 
+    me = min_extents or {}
     V, E = graph.num_nodes, graph.num_edges
     src = np.asarray(graph.src, np.int64)
     dst = np.asarray(graph.dst, np.int64)
     wts = np.asarray(graph.weights, np.float32)
 
-    block_nodes_auto = block_nodes is None
-    if block_nodes is None:
-        # whole graph in one block while it comfortably fits a VMEM window
-        block_nodes = _round_up(V, 8) if V <= 512 else 256
     BV = int(block_nodes)
-    nb = -(-max(V, 1) // BV)
+    nb = max(-(-max(V, 1) // BV), int(me.get("num_blocks", 1)))
     V_pad = nb * BV
 
     # 1. RCM relabel (bandwidth-minimizing => small halo windows); orders
@@ -352,7 +361,8 @@ def plan_edge_blocks(graph: EmpiricalGraph,
     #    so each block's owned edges are already contiguous — pad to EB
     owner = lo // BV if E else np.zeros(0, np.int64)
     counts = np.bincount(owner, minlength=nb)
-    EB = _round_up(int(counts.max()) if E else 1, 8)
+    EB = max(_round_up(int(counts.max()) if E else 1, 8),
+             int(me.get("block_edges", 1)))
     E_pad = nb * EB
     starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
     pos = (owner * EB + (np.arange(E) - starts[owner])) if E else \
@@ -371,7 +381,7 @@ def plan_edge_blocks(graph: EmpiricalGraph,
     #    Vectorized scatter: interleave (src, dst) endpoints so each
     #    node's slots keep edge order, stable-sort by node, and the slot
     #    column is the rank within the node's group.
-    max_deg = max(graph.max_degree, 1)
+    max_deg = max(graph.max_degree, int(me.get("max_degree", 1)), 1)
     inc_e = np.zeros((V_pad, max_deg), dtype=np.int64)
     inc_s = np.zeros((V_pad, max_deg), dtype=np.float32)
     if E:
@@ -395,8 +405,9 @@ def plan_edge_blocks(graph: EmpiricalGraph,
     node_emin = np.where(has_inc, np.where(inc_s != 0, inc_e,
                                            np.iinfo(np.int64).max).min(1), 0)
     node_emax = np.where(has_inc, np.where(inc_s != 0, inc_e, -1).max(1), 0)
-    kn = 1
-    klo = khi = 0
+    kn = int(me.get("kn", 1))
+    klo = int(me.get("klo", 0))
+    khi = int(me.get("khi", 0))
     for b in range(nb):
         own = slice(b * EB, b * EB + int(counts[b]))
         needed = np.arange(b * BV, min((b + 1) * BV, V_pad))
@@ -410,16 +421,6 @@ def plan_edge_blocks(graph: EmpiricalGraph,
             klo = max(klo, -(-(b * EB - emin) // EB))
             khi = max(khi, -(-(emax + 1 - (b + 1) * EB) // EB))
     klo, khi = max(klo, 0), max(khi, 0)
-
-    # layout-quality guard (auto block size only): when the graph defeats
-    # RCM banding (e.g. random cross-cluster edges), halo windows approach
-    # the whole graph and the per-block redundancy nb * window / total
-    # explodes.  A single whole-graph block is then strictly better: no
-    # redundant halo work, and it unlocks the multi-iteration VMEM fusion.
-    if (block_nodes_auto and nb > 1
-            and (nb * kn * BV > 3 * V_pad
-                 or nb * (klo + 1 + khi) * EB > 3 * E_pad)):
-        return plan_edge_blocks(graph, block_nodes=_round_up(V, 8))
 
     inc_e = inc_e + klo * EB               # owned position -> storage id
 
@@ -437,6 +438,69 @@ def plan_edge_blocks(graph: EmpiricalGraph,
         edge_pos=jnp.asarray(edge_pos, jnp.int32),
         edge_flip=jnp.asarray(edge_flip),
     )
+
+
+# candidate banded block sizes for the auto-tuner; whole-graph single
+# block is always considered as the fallback candidate
+_BLOCK_LADDER = (256, 512, 1024, 2048)
+
+
+def plan_edge_blocks(graph: EmpiricalGraph,
+                     block_nodes: int | None = None, *,
+                     window_hint: tuple | None = None,
+                     min_extents: dict | None = None) -> EdgeBlockLayout:
+    """Host-side edge-blocked layout pass (see :class:`EdgeBlockLayout`).
+
+    RCM node reordering + per-block contiguous edge ranges with halo
+    padding; the result is static aux the fused primal-dual kernel keys
+    its BlockSpec index maps on.
+
+    With ``block_nodes=None`` the block size is auto-tuned from
+    ``EdgeBlockLayout.window_bytes``: candidate banded layouts (256 /
+    512 / 1024 / 2048 nodes per block) are planned and scored by total
+    streamed window bytes per iteration (``num_blocks * window_bytes``),
+    the quantity the fused kernel is bound by once halo redundancy
+    dominates.  ``window_hint = (num_features, param_floats, itemsize,
+    max_window_bytes)`` makes the score dtype/loss-aware and rejects
+    candidates whose single-window footprint exceeds the VMEM cap; when
+    absent, a nominal (1, 0, 4, None) hint scores by row counts.  When
+    even the best banded candidate's halo extents exceed 3 blocks (RCM
+    banding defeated), a single whole-graph block is used instead — no
+    redundant halo work, and it unlocks the multi-iteration VMEM fusion.
+
+    ``min_extents`` (explicit ``block_nodes`` only) forces padded-extent
+    lower bounds — see :func:`_plan_edge_blocks_fixed`.
+    """
+    V = graph.num_nodes
+    if block_nodes is not None:
+        return _plan_edge_blocks_fixed(graph, int(block_nodes), min_extents)
+    whole = _round_up(V, 8)
+    if V <= 512:
+        return _plan_edge_blocks_fixed(graph, whole, min_extents)
+
+    nf, pf, isz, cap = window_hint if window_hint is not None \
+        else (1, 0, 4, None)
+    best = best_cost = None
+    for bv in _BLOCK_LADDER:
+        if bv >= whole:
+            break
+        lt = _plan_edge_blocks_fixed(graph, bv, min_extents)
+        wb = lt.window_bytes(nf, param_floats=pf, itemsize=isz)
+        if cap is not None and wb > cap:
+            continue
+        cost = lt.num_blocks * wb
+        if best is None or cost < best_cost:
+            best, best_cost = lt, cost
+    # quality guard: nb*kn*BV > 3*V_pad  <=>  kn > 3 (and likewise for the
+    # edge window) — the historical redundancy bound, now applied to the
+    # best candidate instead of a hardcoded 256-node block
+    if (best is None or best.kn > 3
+            or (best.klo + 1 + best.khi) > 3):
+        single = _plan_edge_blocks_fixed(graph, whole, min_extents)
+        swb = single.window_bytes(nf, param_floats=pf, itemsize=isz)
+        if best is None or cap is None or swb <= cap:
+            return single
+    return best
 
 
 def sbm_graph(rng: np.random.Generator, cluster_sizes, p_in: float,
@@ -457,6 +521,46 @@ def sbm_graph(rng: np.random.Generator, cluster_sizes, p_in: float,
     edges = np.stack([iu[keep], ju[keep]], axis=1)
     weights = np.full(edges.shape[0], weight, dtype=np.float32)
     g = build_graph(edges, weights, num_nodes)
+    return g, assign
+
+
+def sbm_graph_sparse(rng: np.random.Generator, cluster_sizes, p_in: float,
+                     p_out: float, weight: float = 1.0
+                     ) -> tuple[EmpiricalGraph, np.ndarray]:
+    """O(E) stochastic block model sampler for million-node graphs.
+
+    :func:`sbm_graph` materializes all V(V-1)/2 candidate pairs — fine up
+    to ~50k nodes, hopeless at 10^6.  This variant samples, per cluster
+    pair, the Binomial(#pairs, p) edge *count* and then that many
+    endpoint pairs uniformly at random.  Self-pairs are dropped and
+    duplicate pairs collapse in ``build_graph``'s dedupe, a relative
+    undercount of O(p * avg_degree / cluster_size) — negligible at the
+    sparse densities this sampler exists for.  Same return convention as
+    :func:`sbm_graph`.
+    """
+    sizes = [int(s) for s in cluster_sizes]
+    num_nodes = int(sum(sizes))
+    assign = np.concatenate([np.full(s, c) for c, s in enumerate(sizes)])
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    chunks = []
+    for a in range(len(sizes)):
+        for b in range(a, len(sizes)):
+            p = float(min(p_in if a == b else p_out, 1.0))
+            pairs = (sizes[a] * (sizes[a] - 1)) // 2 if a == b \
+                else sizes[a] * sizes[b]
+            if p <= 0.0 or pairs == 0:
+                continue
+            k = int(rng.binomial(pairs, p))
+            if not k:
+                continue
+            i = rng.integers(offs[a], offs[a + 1], size=k)
+            j = rng.integers(offs[b], offs[b + 1], size=k)
+            keep = i != j
+            chunks.append(np.stack([i[keep], j[keep]], axis=1))
+    edges = (np.concatenate(chunks, axis=0) if chunks
+             else np.zeros((0, 2), np.int64))
+    g = build_graph(edges, np.full(len(edges), weight, np.float32),
+                    num_nodes)
     return g, assign
 
 

@@ -7,9 +7,9 @@
     into typed primitives over a :class:`GraphExecutor`, the eq.-11
     :func:`certificate`, and the fixed-point :func:`pd_residual` that
     drives ``SolverConfig.tol`` early stopping,
-  * :mod:`repro.engine.executors` — the four executors (dense
-    gather-sum, edge-blocked VMEM window, shard_map halo exchange,
-    federated mailboxes),
+  * :mod:`repro.engine.executors` — the executors (dense gather-sum,
+    edge-blocked VMEM window, shard_map halo exchange, the hierarchical
+    fused-kernel-inside-shard composition, federated mailboxes),
   * :mod:`repro.engine.loop` — scan chunking, metric cadence, the
     host-side chunk driver (early stopping + checkpoint schedules),
     iteration caps, and continuation defaults.
@@ -18,16 +18,19 @@ The ``api`` / ``core`` / ``kernels`` / ``federated`` packages are thin
 drivers over this layer.
 """
 from repro.engine.executors import (DenseExecutor, HaloExecutor,
-                                    MailboxExecutor, WindowExecutor)
+                                    HierarchicalExecutor, MailboxExecutor,
+                                    WindowExecutor)
 from repro.engine.loop import (capped, chunk_bounds, concat_traces,
                                default_warm_lam, device_loop, iter_cap,
                                run_chunked, scan_solve)
 from repro.engine.step import (GraphExecutor, certificate, ensure_column,
-                               pd_residual, pd_step)
+                               optimality_gap, pd_residual, pd_step)
 
 __all__ = [
-    "DenseExecutor", "GraphExecutor", "HaloExecutor", "MailboxExecutor",
+    "DenseExecutor", "GraphExecutor", "HaloExecutor",
+    "HierarchicalExecutor", "MailboxExecutor",
     "WindowExecutor", "capped", "certificate", "chunk_bounds",
     "concat_traces", "default_warm_lam", "device_loop", "ensure_column",
-    "iter_cap", "pd_residual", "pd_step", "run_chunked", "scan_solve",
+    "iter_cap", "optimality_gap", "pd_residual", "pd_step", "run_chunked",
+    "scan_solve",
 ]

@@ -160,6 +160,107 @@ class HaloExecutor:
         return u
 
 
+@dataclasses.dataclass(frozen=True)
+class HierarchicalExecutor:
+    """Two-level executor: a fused edge-blocked kernel *inside* each
+    shard_map shard, with a halo dual-refresh between shards.
+
+    Unlike the other executors, D / D^T do not run here — the per-shard
+    :func:`repro.kernels.ops.pd_step` launch runs them through a
+    :class:`WindowExecutor` on the shard's local edge-blocked layout
+    (``core.partition.HierarchyPlan``).  What crosses shards each
+    iteration is a single ``all_gather`` of *owned dual* rows
+    (``refresh_duals``): each shard's local subgraph is the 1-hop halo
+    closure of its owned nodes, so refreshing the duals of replicated
+    (non-owned) edges from their owners is the only communication the
+    fused step needs to stay exact on owned state — halo-node primal
+    updates are recomputed redundantly instead of exchanged, and the
+    locally-computed duals of replicated edges are overwritten at the
+    next refresh, so second-ring staleness never reaches owned rows.
+
+    ``comm`` selects the exchange payload (DESIGN.md §3.3): ``boundary``
+    gathers a compacted per-owner send list (NS rows/shard, NS = max
+    replicated-edge demand), ``dense`` gathers the whole owned dual slab
+    (NE rows/shard).  ``recv_src`` is pre-resolved for the chosen mode.
+    Built inside the shard_map body; all index tables are the shard's
+    slice of the stacked ``HierarchyPlan`` arrays.
+    """
+
+    axis: str
+    comm: str
+    num_blocks: int
+    block_nodes: int
+    block_edges: int
+    klo: int
+    # per-shard tables (shard_map-local slices)
+    node_owned: jnp.ndarray     # (NV, 1) residual mask over layout nodes
+    edge_owned: jnp.ndarray     # (NE, 1) 1.0 where this shard owns the edge
+    orient: jnp.ndarray         # (NE, 1) u_layout = orient * u_global
+    send_idx: jnp.ndarray       # (NS,) owned slots to publish (boundary)
+    send_flip: jnp.ndarray      # (NS, 1) orientation at those slots
+    recv_src: jnp.ndarray       # (NE,) row in the gathered buffer
+    recv_flip: jnp.ndarray      # (NE, 1) receiver-side orientation
+
+    @property
+    def weights(self) -> jnp.ndarray:  # pragma: no cover - protocol stub
+        raise NotImplementedError(
+            "HierarchicalExecutor delegates the step to the fused kernel")
+
+    def owned_duals(self, u_store: jnp.ndarray) -> jnp.ndarray:
+        eb, nb = self.block_edges, self.num_blocks
+        return jax.lax.dynamic_slice(
+            u_store, (self.klo * eb, 0), (nb * eb, u_store.shape[1]))
+
+    def refresh_duals(self, u_store: jnp.ndarray) -> jnp.ndarray:
+        """Overwrite replicated dual slots with their owners' values.
+
+        Publishes owned rows in *global* orientation, all-gathers across
+        the mesh axis, and re-orients received rows into the local
+        layout.  Owned slots and inert padding slots are left untouched
+        (``recv_flip`` is 0 there, but the ``where`` keeps them exactly).
+        """
+        with _scope(_prof.PHASE_HALO_GATHER):
+            u_own = self.owned_duals(u_store)
+            if self.comm == "boundary":
+                buf = u_own[self.send_idx] * self.send_flip
+            else:
+                buf = u_own * self.orient
+            allbuf = jax.lax.all_gather(buf, self.axis, tiled=True)
+            u_ref = jnp.where(self.edge_owned > 0, u_own,
+                              allbuf[self.recv_src] * self.recv_flip)
+            return jax.lax.dynamic_update_slice(
+                u_store, u_ref, (self.klo * self.block_edges, 0))
+
+    def write_back(self, w_store, u_store, w_new, u_new):
+        """Store the fused step's owned-region outputs (halo padding rows
+        of ``w_store`` are inert zeros and never rewritten)."""
+        w_store = jax.lax.dynamic_update_slice(w_store, w_new, (0, 0))
+        u_store = jax.lax.dynamic_update_slice(
+            u_store, u_new, (self.klo * self.block_edges, 0))
+        return w_store, u_store
+
+    def residual(self, w_store, u_refreshed, w_new, u_new, tau, sigma):
+        """Shard-local eq.-11 residual masked to *owned* rows.
+
+        Owned rows see exactly the global update (halo closure), so the
+        host max of these per-shard values equals the global residual;
+        halo/ring rows are excluded because their local primal state is
+        not the global one.
+        """
+        f32 = jnp.float32
+        nv = self.num_blocks * self.block_nodes
+        w_old = jax.lax.dynamic_slice(
+            w_store, (0, 0), (nv, w_store.shape[1]))
+        rp = jnp.max(self.node_owned
+                     * jnp.abs(w_new.astype(f32) - w_old.astype(f32))
+                     / tau[:nv].astype(f32))
+        u_old = self.owned_duals(u_refreshed)
+        rd = jnp.max(self.edge_owned
+                     * jnp.abs(u_new.astype(f32) - u_old.astype(f32))
+                     / sigma.astype(f32))
+        return jnp.maximum(rp, rd)
+
+
 class MailboxExecutor:
     """Federated message-passing executor (one communication round).
 

@@ -43,7 +43,11 @@ class PlanKey:
     ``loss`` / ``regularizer`` are the template reprs (dataclass reprs
     are stable and capture parameters like a lasso alpha); ``shape_sig``
     is (V, E, m_max, n, max_degree) — the tuple that determines every
-    traced array shape of the solve.
+    traced array shape of the solve.  ``shard_sig`` is the sharding
+    facet for the distributed backends — (num_shards, mesh_axis,
+    partitioner, comm) — empty for single-program backends, so two
+    sessions solving the same structure under different meshes or
+    exchange modes never share a plan or an executable.
     """
 
     structure_hash: str
@@ -51,11 +55,20 @@ class PlanKey:
     regularizer: str
     backend: str
     shape_sig: tuple[int, int, int, int, int]
+    shard_sig: tuple = ()
 
     @classmethod
     def for_problem(cls, problem: Problem,
                     config: SolverConfig) -> "PlanKey":
         g, d = problem.graph, problem.data
+        shard_sig: tuple = ()
+        if config.backend in ("sharded", "sharded_fused"):
+            mesh = config.mesh
+            num_shards = (config.num_shards if config.num_shards is not None
+                          else (mesh.shape[config.mesh_axis]
+                                if mesh is not None else 1))
+            shard_sig = (int(num_shards), str(config.mesh_axis),
+                         str(config.partitioner), str(config.comm))
         return cls(
             structure_hash=g.structure_hash(),
             loss=repr(problem.loss),
@@ -63,12 +76,14 @@ class PlanKey:
             backend=config.backend,
             shape_sig=(g.num_nodes, g.num_edges, int(d.x.shape[1]),
                        int(d.x.shape[2]), g.max_degree),
+            shard_sig=shard_sig,
         )
 
     @property
     def exec_sig(self) -> tuple:
         """The XLA-executable facet of the key (no structure hash)."""
-        return (self.loss, self.regularizer, self.backend, self.shape_sig)
+        return (self.loss, self.regularizer, self.backend, self.shape_sig,
+                self.shard_sig)
 
 
 @dataclasses.dataclass
@@ -250,6 +265,7 @@ class PlanCache:
                     "regularizer": plan.key.regularizer,
                     "backend": plan.key.backend,
                     "shape_sig": list(plan.key.shape_sig),
+                    "shard_sig": list(plan.key.shard_sig),
                 },
                 "layout": None,
             }
@@ -323,7 +339,10 @@ class PlanCache:
             key = PlanKey(structure_hash=k["structure_hash"],
                           loss=k["loss"], regularizer=k["regularizer"],
                           backend=k["backend"],
-                          shape_sig=tuple(int(s) for s in k["shape_sig"]))
+                          shape_sig=tuple(int(s) for s in k["shape_sig"]),
+                          # pre-shard_sig checkpoints load as single-
+                          # program plans (the field's default)
+                          shard_sig=tuple(k.get("shard_sig", [])))
             layout = None
             if entry["layout"] is not None:
                 arrays = OrderedDict(

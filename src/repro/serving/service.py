@@ -406,7 +406,8 @@ class SolveService:
                     if result.residual is not None else float("nan"))
         certificate = {k: float(v)
                        for k, v in result.diagnostics.items()
-                       if k != "iterations" and np.ndim(v) == 0}
+                       if k != "iterations" and not k.startswith("halo_")
+                       and np.ndim(v) == 0}
         resp = SolveResponse(
             session_id=sess.session_id,
             w=result.w,

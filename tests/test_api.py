@@ -128,10 +128,28 @@ def test_dense_and_pallas_agree_for_every_loss(sbm, loss, kw):
     assert diff <= 1e-5, diff
 
 
-def test_sharded_backend_rejects_unsupported_losses(sbm):
+def test_sharded_backend_loss_support(sbm):
+    """Both sharded backends run every *registered* loss (the hierarchy
+    PR generalized `shard_problem` to permute arbitrary prox_setup param
+    pytrees); an opaque caller-supplied prox still rejects loudly — its
+    parameters cannot be permuted."""
+    from repro.api.losses import CallableLoss, SquaredLoss
+    from repro.core.mesh import make_host_mesh
+
     p = Problem.create(sbm.graph, sbm.data, 1e-3, loss="logistic")
-    with pytest.raises(NotImplementedError):
-        Solver(SolverConfig(num_iters=10, backend="sharded")).run(p)
+    for backend in ("sharded", "sharded_fused"):
+        cfg = SolverConfig(num_iters=10, backend=backend,
+                           mesh=make_host_mesh(1, 1))
+        res = Solver(cfg).run(p)
+        assert np.all(np.isfinite(np.asarray(res.w)))
+
+    opaque = dataclasses.replace(
+        p, loss=CallableLoss(prox_fn=lambda v: v, base=SquaredLoss()))
+    for backend in ("sharded", "sharded_fused"):
+        cfg = SolverConfig(num_iters=10, backend=backend,
+                           mesh=make_host_mesh(1, 1))
+        with pytest.raises(NotImplementedError):
+            Solver(cfg).run(opaque)
 
 
 # ---------------------------------------------------------------------------

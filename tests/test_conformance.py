@@ -14,6 +14,9 @@ identical SolverConfig and asserts:
     full objective trace,
   * sharded matches dense on the final weights (<= 1e-4) and the final
     objective (its trace has length 1 by design),
+  * sharded_fused (hierarchical partition: the fused edge-blocked kernel
+    inside each shard_map shard, dual halo refresh between shards)
+    matches dense the same way,
   * federated_sync (the message-passing runtime in synchronous
     full-participation mode: one exact local prox per round, no
     compression) matches dense on the final weights (<= 1e-6) and on
@@ -49,7 +52,7 @@ def dense_reference(name: str):
 @pytest.mark.parametrize("name", sorted(SCENARIOS))
 @pytest.mark.parametrize("backend",
                          ["dense", "pallas", "pallas_fused", "sharded",
-                          "federated_sync"])
+                          "sharded_fused", "federated_sync"])
 def test_backend_conforms(name, backend):
     inst, ref = dense_reference(name)
     if backend == "pallas_fused":
@@ -63,7 +66,7 @@ def test_backend_conforms(name, backend):
         cfg = CONF.replace(backend="federated")
     else:
         cfg = CONF.replace(backend=backend)
-    if backend == "sharded":
+    if backend in ("sharded", "sharded_fused"):
         cfg = cfg.replace(mesh=make_host_mesh(1, 1))
     try:
         res = Solver(cfg).run(inst.problem)
@@ -82,8 +85,8 @@ def test_backend_conforms(name, backend):
 
     ref_obj = np.asarray(ref.objective)
     obj = np.asarray(res.objective)
-    if backend == "sharded":
-        # sharded evaluates metrics once at the final iterate
+    if backend in ("sharded", "sharded_fused"):
+        # the sharded backends evaluate metrics once at the final iterate
         assert obj.shape == (1,)
         np.testing.assert_allclose(obj[-1], ref_obj[-1], rtol=1e-4)
     elif backend == "federated_sync":

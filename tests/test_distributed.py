@@ -91,6 +91,83 @@ def test_shard_problem_preserves_edge_weights(ds):
         np.sort(np.asarray(ds.graph.weights)))
 
 
+# ---------------------------------------------------------------------------
+# Two-level (hierarchical) layout invariants
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hier4(ds):
+    from repro.core.partition import plan_hierarchy
+    assign = cluster_partition(ds.graph, 4)
+    return plan_hierarchy(ds.graph, assign, 4)
+
+
+def test_hierarchy_ownership_is_a_partition(ds, hier4):
+    """Every node and every edge is owned by exactly one shard."""
+    h = hier4
+    owned_nodes = h.node_map[h.node_owned > 0]
+    assert sorted(owned_nodes.tolist()) == list(range(ds.graph.num_nodes))
+    owned_edges = h.edge_map[h.edge_owned > 0]
+    assert sorted(owned_edges.tolist()) == list(range(ds.graph.num_edges))
+
+
+def test_hierarchy_reorder_unpermute_identity(ds, hier4):
+    """inject -> extract is the identity on node and (oriented) edge
+    signals, for any shard count's stacked store layout."""
+    h = hier4
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((ds.graph.num_nodes, 3)).astype(np.float32)
+    w_store = np.zeros((h.w_inj.shape[0], 3), np.float32)
+    valid = h.w_inj >= 0
+    w_store[valid] = w[h.w_inj[valid]]
+    np.testing.assert_array_equal(w_store[h.w_sel], w)
+
+    u = rng.standard_normal((ds.graph.num_edges, 3)).astype(np.float32)
+    u_store = np.zeros((h.u_inj.shape[0], 3), np.float32)
+    validu = h.u_inj >= 0
+    u_store[validu] = u[h.u_inj[validu]] * h.u_inj_flip[validu, None]
+    np.testing.assert_array_equal(u_store[h.u_sel] * h.u_flip[:, None], u)
+
+
+def test_hierarchy_halo_closure_covers_owned_incidence(ds, hier4):
+    """Each shard's local subgraph reproduces D^T u exactly on its owned
+    nodes from local storage alone (the 1-hop halo closure invariant the
+    per-iteration dual refresh relies on)."""
+    h = hier4
+    g = ds.graph
+    rng = np.random.default_rng(1)
+    u = rng.standard_normal((g.num_edges, 2)).astype(np.float32)
+    dtu = np.zeros((g.num_nodes, 2), np.float32)
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    np.add.at(dtu, src, u)
+    np.add.at(dtu, dst, -u)
+    NV, ESR = h.nodes_pad, h.u_store_rows
+    u_store = np.zeros((h.u_inj.shape[0], 2), np.float32)
+    valid = h.u_inj >= 0
+    u_store[valid] = u[h.u_inj[valid]] * h.u_inj_flip[valid, None]
+    for s in range(h.num_shards):
+        inc_e = h.inc_edges[s * NV:(s + 1) * NV]
+        inc_s = h.inc_signs[s * NV:(s + 1) * NV]
+        ust = u_store[s * ESR:(s + 1) * ESR]
+        contrib = (ust[inc_e] * inc_s[:, :, None]).sum(axis=1)
+        own = h.node_owned[s * NV:(s + 1) * NV] > 0
+        gids = h.node_map[s * NV:(s + 1) * NV][own]
+        np.testing.assert_allclose(contrib[own], dtu[gids], atol=1e-5)
+
+
+def test_hierarchy_single_shard_solve_matches_dense(ds):
+    """reorder -> fused solve -> unpermute is the dense iteration."""
+    from repro.api import Problem, Solver, SolverConfig
+
+    prob = Problem.create(ds.graph, ds.data, 1e-3)
+    r_dense = Solver(SolverConfig(backend="dense", num_iters=150)).run(prob)
+    r_hier = Solver(SolverConfig(backend="sharded_fused",
+                                 num_iters=150)).run(prob)
+    np.testing.assert_allclose(np.asarray(r_hier.w), np.asarray(r_dense.w),
+                               atol=2e-4)
+    assert "halo_exchange_bytes" in r_hier.diagnostics
+
+
 MULTIDEV_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -126,3 +203,51 @@ def test_sharded_solver_8_virtual_devices(ds):
     errs = json.loads(res.stdout.strip().splitlines()[-1])
     assert errs["dense"] < 2e-4, errs
     assert errs["boundary"] < 2e-4, errs
+
+
+HIER_MULTIDEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core.distributed import (shard_problem_fused,
+                                        solve_nlasso_hier)
+    from repro.core.mesh import make_host_mesh
+    from repro.core.nlasso import nlasso
+    from repro.data.synthetic import make_sbm_regression
+
+    ds = make_sbm_regression(seed=3, cluster_sizes=(24, 24), p_in=0.5,
+                             p_out=5e-3, num_labeled=12)
+    ref = np.asarray(nlasso(ds.graph, ds.data, lam=1e-3, num_iters=150).w)
+    out = {"rerun_bitwise": True, "vs_dense": 0.0, "comms": []}
+    for num_shards in (2, 4, 8):
+        mesh = make_host_mesh(num_shards, 1)
+        sp = shard_problem_fused(ds.graph, ds.data, num_shards, seed=0)
+        w, u, it, comm = solve_nlasso_hier(sp, mesh, 1e-3, 150)
+        w2, _, _, _ = solve_nlasso_hier(sp, mesh, 1e-3, 150)
+        out["rerun_bitwise"] &= bool(np.array_equal(np.asarray(w),
+                                                    np.asarray(w2)))
+        out["vs_dense"] = max(out["vs_dense"],
+                              float(np.max(np.abs(np.asarray(w) - ref))))
+        out["comms"].append(comm)
+    print(json.dumps(out))
+""")
+
+
+def test_hierarchical_determinism_across_shard_counts(ds):
+    """The hierarchical fused solve is bitwise-reproducible at every
+    shard count on CPU, and shard-count-independent to f32 rounding
+    (different per-shard layouts reorder single additions)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    res = subprocess.run([sys.executable, "-c", HIER_MULTIDEV_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    assert out["rerun_bitwise"], out
+    assert out["vs_dense"] < 1e-4, out
+    # the small-graph fixture has a low cut fraction: comm="auto" must
+    # have picked boundary exchange at low shard counts
+    assert out["comms"][0] == "boundary", out

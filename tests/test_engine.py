@@ -325,3 +325,46 @@ def test_capped_raises_when_cap_below_metric_every(monkeypatch):
     monkeypatch.setenv("REPRO_SOLVER_MAX_ITERS", "24")
     with pytest.raises(ValueError, match="metric_every"):
         capped(500, 25)
+
+
+# ---------------------------------------------------------------------------
+# Eq.-11 optimality gap certificate (engine.step.optimality_gap)
+# ---------------------------------------------------------------------------
+
+def test_optimality_gap_upper_bounds_suboptimality():
+    """The eq.-11 gap P(w) - g(u) is a *certified* upper bound: it must
+    dominate the observed suboptimality P(w_k) - P(w_long) at every
+    checkpoint, never go (numerically) negative, and shrink as the
+    iterates converge."""
+    from repro.api import Problem
+    from repro.engine import optimality_gap
+
+    ds = make_sbm_regression(seed=2, cluster_sizes=(20, 20), p_in=0.5,
+                             p_out=5e-3, num_labeled=10)
+    prob = Problem.create(ds.graph, ds.data, 1e-3)
+
+    cfg = SolverConfig(num_iters=4000, rho=1.9)
+    long = Solver(cfg).run(prob)
+    p_star = float(prob.objective(long.w))
+
+    gaps = []
+    for iters in (50, 200, 1000):
+        res = Solver(cfg.replace(num_iters=iters)).run(prob)
+        gap = float(optimality_gap(prob, res.w, res.u))
+        subopt = float(prob.objective(res.w)) - p_star
+        assert gap >= subopt - 1e-6, (iters, gap, subopt)
+        assert gap >= -1e-6, (iters, gap)
+        gaps.append(gap)
+    assert gaps[-1] < gaps[0], gaps
+
+
+def test_certificate_reports_optimality_gap_column():
+    """Squared+TV diagnostics carry the second certificate column."""
+    from repro.engine.step import certificate
+
+    inst = get_scenario("sbm_regression").build(seed=0, smoke=True)
+    prob = inst.problem
+    res = Solver(SolverConfig(num_iters=200)).run(prob)
+    diag = certificate(prob, res.w, res.u)
+    assert "optimality_gap" in diag
+    assert np.isfinite(float(diag["optimality_gap"]))
